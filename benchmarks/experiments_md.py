@@ -1,0 +1,132 @@
+"""Render EXPERIMENTS.md sections from dry-run / perf artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.experiments_md > EXPERIMENTS.generated.md
+(The checked-in EXPERIMENTS.md embeds this output plus hand-written
+analysis; regenerate after re-running the sweep.)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.roofline import ART_DIR, load_artifacts
+from repro.analysis import roofline as rf
+
+PERF_DIR = os.path.join(ART_DIR, "perf")
+
+
+def dryrun_section() -> str:
+    arts = load_artifacts()
+    ok = [a for a in arts if "memory" in a]
+    skipped = [a for a in arts if a.get("skipped")]
+    failed = [a for a in arts if "error" in a]
+    lines = [
+        "### §Dry-run summary",
+        "",
+        f"- cells compiled: **{len(ok)}** | skipped (documented): "
+        f"**{len(skipped)}** | failed: **{len(failed)}**",
+        "",
+        "TPU-est = args + temp/2 (CPU fp32-widening correction for bf16 "
+        "programs; see §Dry-run caveats).",
+        "",
+        "| cell | chips | args GB/chip | temp GB/chip | TPU-est GB | "
+        "HBM (16GB) | compile s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ok:
+        m = a["memory"]
+        est = (m["argument_bytes"] + m["temp_bytes"] / 2) / 1e9
+        fit = "fits" if est <= 16 else f"**OVER**"
+        lines.append(
+            f"| {a['arch']}·{a['shape']}·{a['mesh']}"
+            f"{'·fed' if a.get('fed') else ''} | {a.get('chips','')} "
+            f"| {m['argument_bytes']/1e9:.2f} | {m['temp_bytes']/1e9:.2f} "
+            f"| {est:.1f} | {fit} | {a.get('compile_seconds','')} |")
+    for a in skipped:
+        lines.append(f"| {a['arch']}·{a['shape']}·{a['mesh']} | — | — | — | "
+                     f"skipped | — | {a['reason'][:60]} |")
+    for a in failed:
+        lines.append(f"| {a['arch']}·{a['shape']}·{a['mesh']} | — | — | — | "
+                     f"**FAILED** | — | {a['error'][:60]} |")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    arts = [a for a in load_artifacts() if "roofline" in a]
+    lines = [
+        "### §Roofline (single-pod 256 × v5e unless ·multi)",
+        "",
+        "Terms per the task formula: compute = HLO_FLOPs/(chip·197TF); "
+        "memory = HLO_bytes/(chip·819GB/s); collective = operand "
+        "bytes/(chip·50GB/s·link). Per-device numbers from the "
+        "SPMD-partitioned executable (verified per-device semantics).",
+        "",
+        "| cell | compute ms | memory ms | collective ms | x-pod ms | "
+        "dominant | MODEL/HLO FLOPs | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in arts:
+        r = a["roofline"]
+        lever = _lever(a)
+        lines.append(
+            f"| {a['arch']}·{a['shape']}·{a['mesh']}"
+            f"{'·fed' if a.get('fed') else ''} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {r['cross_pod_s']*1e3:.2f} "
+            f"| {r['dominant']} | {a.get('useful_flops_ratio',0):.2f} "
+            f"| {r['roofline_fraction']:.2f} | {lever} |")
+    return "\n".join(lines)
+
+
+def _lever(a: Dict) -> str:
+    dom = a["roofline"]["dominant"]
+    kind = a["shape"]
+    if dom == "compute":
+        return "fused FedPara matmul kernel (skip W materialization)"
+    if dom == "memory":
+        if "decode" in kind or "long" in kind:
+            return "int8 weights / KV; batch up decode"
+        return "larger fusion windows; bf16 collective-aware remat"
+    if dom == "cross_pod":
+        return "raise K; bf16/int8 factor sync"
+    return "reduce-scatter conversion; comm-compute overlap"
+
+
+def perf_section() -> str:
+    files = sorted(glob.glob(os.path.join(PERF_DIR, "*.json")))
+    lines = [
+        "### §Perf iteration log",
+        "",
+        "| experiment | hypothesis (abridged) | compute ms | memory ms | "
+        "collective ms | cross-pod MB/step | verdict |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    baselines: Dict[str, Dict] = {}
+    for path in files:
+        a = json.load(open(path))
+        name = a.get("perf_name", os.path.basename(path)[:-5])
+        if "error" in a:
+            lines.append(f"| {name} | {a.get('hypothesis','')[:60]} | — | — | — "
+                         f"| — | FAILED: {a['error'][:40]} |")
+            continue
+        r = a["roofline"]
+        k = a.get("fed_local_steps") or 1
+        xpod_mb = a.get("cross_pod_bytes_per_device", 0) / max(k, 1) / 1e6
+        group = name.split("_")[0][0]
+        if group not in baselines:
+            baselines[group] = a
+        lines.append(
+            f"| {name} | {a.get('hypothesis','')[:60]} "
+            f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+            f"| {r['collective_s']*1e3:.1f} | {xpod_mb:.1f} | see below |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(dryrun_section())
+    print()
+    print(roofline_section())
+    print()
+    print(perf_section())

@@ -1,0 +1,79 @@
+"""Roofline report: read dry-run artifacts and emit the per-cell table
+(EXPERIMENTS.md §Roofline) + CSV rows for benchmarks.run."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import roofline as rf
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load_artifacts(art_dir: str = ART_DIR) -> List[Dict]:
+    arts = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def fmt_row(a: Dict) -> Optional[str]:
+    name = f"{a['arch']}|{a['shape']}|{a['mesh']}"
+    if a.get("skipped"):
+        return f"| {name} | — | — | — | — | skipped: {a['reason'][:48]} |"
+    if "error" in a:
+        return f"| {name} | — | — | — | — | ERROR {a['error'][:60]} |"
+    if "roofline" not in a:
+        return None
+    r = a["roofline"]
+    mem = a["memory"]
+    fits = (mem["argument_bytes"] + mem["temp_bytes"]) <= rf.HBM_PER_CHIP
+    return ("| {n} | {c:.1f} | {m:.1f} | {co:.1f} | {dom} | "
+            "{frac:.2f} | {mfu:.2f} | {fit} |").format(
+        n=name, c=r["compute_s"] * 1e3, m=r["memory_s"] * 1e3,
+        co=r["collective_s"] * 1e3, dom=r["dominant"],
+        frac=r["roofline_fraction"], mfu=a.get("useful_flops_ratio", 0.0),
+        fit="fits" if fits else "OVER")
+
+
+def report(art_dir: str = ART_DIR) -> str:
+    arts = load_artifacts(art_dir)
+    lines = [
+        "| cell | compute ms | memory ms | collective ms | bottleneck | "
+        "roofline frac | useful FLOPs | HBM |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in arts:
+        row = fmt_row(a)
+        if row:
+            lines.append(row)
+    return "\n".join(lines)
+
+
+def csv_rows() -> List[Tuple[str, float, str]]:
+    rows = []
+    for a in load_artifacts():
+        name = f"roofline.{a['arch']}.{a['shape']}.{a['mesh']}"
+        if a.get("skipped"):
+            rows.append((name, 0.0, "skipped"))
+            continue
+        if "error" in a:
+            rows.append((name, 0.0, f"ERROR"))
+            continue
+        if "roofline" not in a:
+            continue
+        r = a["roofline"]
+        us = a.get("compile_seconds", 0.0) * 1e6
+        rows.append((name, us,
+                     f"dom={r['dominant']};compute_ms={r['compute_s']*1e3:.1f};"
+                     f"mem_ms={r['memory_s']*1e3:.1f};"
+                     f"coll_ms={r['collective_s']*1e3:.1f};"
+                     f"frac={r['roofline_fraction']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,36 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import roofline, tables
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in tables.ALL_TABLES:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if not args.skip_roofline:
+        for name, us, derived in roofline.csv_rows():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmark groups failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Datacenter FedPara: cross-pod federated local-SGD for an LLM.
+
+The paper's FL protocol mapped onto a (pod, data, model) mesh: each pod
+runs K local AdamW steps on its own data shard, then only the FedPara
+FACTORS are averaged across pods (the single cross-pod collective).
+Embeddings stay pod-local (pFedPara-style split at pod granularity).
+
+This example runs for real on CPU with 8 forced host devices
+(2 pods x 4-way data parallel) on a reduced qwen3-style model, and
+reports the measured cross-pod payload vs. a dense-sync baseline.
+
+Run:  PYTHONPATH=src python examples/fed_pods_llm.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs import get_arch
+from repro.core.parameterization import num_params, tree_bytes
+from repro.data import make_token_lm_dataset
+from repro.distributed.fedpod import make_fed_round, stack_for_pods, sync_mask
+from repro.launch.train import cpu_small
+from repro.nn.transformer import ModelOptions, build_model
+from repro.optim import adamw
+
+
+def main():
+    n_pods, K, B, S, steps = 2, 4, 8, 64, 8
+    base = get_arch("qwen3-8b")
+    results = {}
+    for kind in ("fedpara", "original"):
+        cfg = cpu_small(base).with_(param=base.param.__class__(kind=kind, gamma=0.1,
+                                                               min_dim_for_factorization=8))
+        model = build_model(cfg, ModelOptions(attn_chunk=32, ssm_chunk=32,
+                                              logit_chunk=64))
+        params = model.init_params(jax.random.PRNGKey(0))
+        mask = sync_mask(params, "factors")
+        synced_bytes = sum(
+            int(x.size) * 4 for m, x in zip(jax.tree.leaves(mask),
+                                            jax.tree.leaves(params)) if m)
+        opt = adamw(1e-3)
+
+        mesh = Mesh(np.array(jax.devices()[:8]).reshape(n_pods, 4, 1),
+                    ("pod", "data", "model"))
+        stacked = stack_for_pods(params, n_pods)
+        opt_state = jax.tree.map(lambda a: jnp.stack([a] * n_pods),
+                                 opt.init(params))
+        round_fn = jax.jit(make_fed_round(model.loss, opt, local_steps=K,
+                                          sync="factors"))
+        data = make_token_lm_dataset(256, S + 1, cfg.vocab_size, seed=0)
+        losses = []
+        with mesh:
+            t0 = time.time()
+            for step in range(steps):
+                lo = (step * n_pods * K * B) % (256 - n_pods * K * B)
+                batch = data[lo: lo + n_pods * K * B].reshape(n_pods, K, B, S + 1)
+                stacked, opt_state, loss = round_fn(
+                    stacked, opt_state, {"tokens": jnp.asarray(batch)})
+                losses.append(float(loss))
+            dt = time.time() - t0
+        results[kind] = dict(loss0=losses[0], lossN=losses[-1],
+                             synced_mb=synced_bytes / 1e6,
+                             total_params=num_params(params), secs=dt)
+        print(f"[{kind:9s}] params={num_params(params):,} "
+              f"cross-pod payload/round={synced_bytes/1e6:.2f} MB "
+              f"loss {losses[0]:.3f} -> {losses[-1]:.3f} ({dt:.1f}s)")
+
+    r = results
+    print(f"\nFedPara cross-pod traffic reduction: "
+          f"x{r['original']['synced_mb']/r['fedpara']['synced_mb']:.1f} "
+          f"(every {K} local steps, both runs converging)")
+
+
+if __name__ == "__main__":
+    main()

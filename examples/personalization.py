@@ -1,0 +1,32 @@
+"""pFedPara personalization (paper §2.3 / Fig. 5), three scenarios.
+
+W = W1 ⊙ (W2 + 1): the global half (x1, y1) is shared through the
+server; the local half (x2, y2) never leaves the client. Compares
+against local-only training (FedPAQ-style), FedAvg, and FedPer on
+(1) ample non-IID data, (2) scarce data, (3) highly-skewed two-class
+clients.
+
+Run:  PYTHONPATH=src python examples/personalization.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import run_mlp_personalization
+
+SCENARIOS = [
+    (1, 1.0, "S1: 100% local data, Dirichlet non-IID"),
+    (2, 0.2, "S2: 20% local data (scarcity)"),
+    (3, 1.0, "S3: two-class highly-skewed clients"),
+]
+
+if __name__ == "__main__":
+    for sc, frac, desc in SCENARIOS:
+        print(f"\n== {desc} ==")
+        for mode in ("fedpaq_local", "fedavg", "fedper", "pfedpara"):
+            res = run_mlp_personalization(mode, scenario=sc, frac=frac, rounds=4)
+            print(f"  {mode:13s} acc={res['acc_mean']:.3f}±{res['acc_std']:.3f} "
+                  f"comm={res['comm_gb']*1e3:7.2f} MB")
+    print("\npFedPara transfers ~half of each factorized layer per round "
+          "(paper: 3.4x fewer parameters than the original model).")

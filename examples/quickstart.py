@@ -1,0 +1,49 @@
+"""Quickstart: FedPara federated learning in ~60 lines.
+
+Trains a small CNN (VGG-style, FedPara Prop-3 convs) across 10 simulated
+clients with FedAvg on a synthetic CIFAR-like dataset, then prints the
+accuracy/communication trade-off against the dense original — the
+paper's core result in miniature.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs.base import ParamCfg
+from repro.core.parameterization import num_params
+from repro.data import iid_partition, make_image_dataset, train_test_split
+from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+from repro.nn.vision import VGG_SMALL_PLAN, VGGConfig, init_vgg, vgg_accuracy, vgg_loss
+
+
+def run(kind: str, gamma: float, rounds: int = 4):
+    ds = make_image_dataset(2000, 10, size=16, channels=3, noise=0.5, seed=0)
+    tr, te = train_test_split(ds)
+    cfg = VGGConfig(plan=VGG_SMALL_PLAN, fc_dims=(64,), image_size=16,
+                    gn_groups=8, param=ParamCfg(kind=kind, gamma=gamma))
+    params = init_vgg(jax.random.PRNGKey(0), cfg)
+    srv = FLServer(
+        loss_fn=lambda p, b: vgg_loss(p, cfg, b),
+        global_params=params,
+        data=tr,
+        partitions=iid_partition(len(tr["y"]), clients := 10),
+        strategy=make_strategy("fedavg"),
+        client_cfg=ClientConfig(lr=0.05, batch=32, epochs=1),
+        server_cfg=ServerConfig(clients=clients, participation=0.4,
+                                rounds=rounds),
+        eval_fn=lambda p: float(vgg_accuracy(p, cfg, {"x": te["x"][:300],
+                                                      "y": te["y"][:300]})),
+    )
+    hist = srv.run(log_every=1)
+    return hist[-1]["eval"], srv.comm_log.total_gb, num_params(params)
+
+
+if __name__ == "__main__":
+    print("== FedPara (gamma=0.3) ==")
+    acc_fp, gb_fp, n_fp = run("fedpara", 0.3)
+    print("== original (dense) ==")
+    acc_or, gb_or, n_or = run("original", 0.0)
+    print(f"\nFedPara:  acc={acc_fp:.3f}  comm={gb_fp*1e3:.1f} MB  params={n_fp:,}")
+    print(f"Original: acc={acc_or:.3f}  comm={gb_or*1e3:.1f} MB  params={n_or:,}")
+    print(f"--> {gb_or/gb_fp:.1f}x less communication at comparable accuracy "
+          f"(paper reports 2.8-10.1x on CIFAR/CINIC)")

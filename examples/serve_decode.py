@@ -1,0 +1,16 @@
+"""Serving example: pre-compose FedPara weights, prefill, decode.
+
+Thin wrapper over repro.launch.serve with a reduced qwen3-style model —
+demonstrates the paper's inference-time story (W is pre-composed ONCE,
+so FedPara adds zero per-token cost at serving).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen3-8b", "--preset", "cpu-small",
+                "--batch", "2", "--prompt-len", "16", "--gen-len", "16"]
+    serve.main()

@@ -1,0 +1,2 @@
+"""FedPara (ICLR'22) as a production multi-pod JAX framework."""
+__version__ = "0.1.0"

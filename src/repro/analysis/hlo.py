@@ -1,0 +1,172 @@
+"""Post-SPMD HLO analysis: collective-byte accounting per op type and
+per mesh domain (intra-pod ICI vs cross-pod DCN).
+
+cost_analysis() has no collective term, so we parse the partitioned
+module (the post-SPMD-partitioner pass dump, which still carries bf16
+types — the CPU backend's float normalization would upcast dot-adjacent
+collectives to f32) and account every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute:
+
+  bytes       sum of *operand* sizes (task-spec accounting). Operands
+              are resolved through the instruction-definition table
+              (pass dumps print operands by name, not by shape).
+  ring_bytes  realistic per-device ring traffic:
+              all-reduce 2·b·(g-1)/g, all-gather b·(g-1),
+              reduce-scatter/all-to-all b·(g-1)/g, permute b.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RX = re.compile(r"(\w+?)\[([\d,]*)\]")
+_DEF_RX = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\w+\[[\d,]*\]\S*)")
+_COLL_RX = re.compile(
+    r"=\s*(?:\([^)]*\)|\w+\[[\d,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(([^)]*)\)"
+)
+_GROUPS_RX = re.compile(
+    r"replica_groups=(\{\{[^}]*(?:\},\{[^}]*)*\}\}|"
+    r"\[[\d,]+\]<=\[[\d,]+\](?:T\([\d,]+\))?)"
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RX.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_replica_groups(s: str) -> Optional[List[List[int]]]:
+    if s.startswith("{{"):
+        groups = []
+        for grp in re.findall(r"\{([\d, ]*)\}", s[1:-1]):
+            ids = [int(x) for x in grp.replace(" ", "").split(",") if x]
+            if ids:
+                groups.append(ids)
+        return groups
+    m = re.match(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?", s)
+    if not m:
+        return None
+    out_shape = [int(x) for x in m.group(1).split(",")]
+    in_shape = [int(x) for x in m.group(2).split(",")]
+    total = int(np.prod(in_shape))
+    arr = np.arange(total).reshape(in_shape)
+    if m.group(3):
+        perm = [int(x) for x in m.group(3).split(",")]
+        arr = arr.transpose(perm)
+    arr = arr.reshape(out_shape)
+    return [list(map(int, row)) for row in arr.reshape(out_shape[0], -1)]
+
+
+def classify_domain(groups: Optional[List[List[int]]], pod_size: int) -> str:
+    """'cross_pod' if any group spans devices in different pods."""
+    if not groups or not pod_size:
+        return "intra_pod"
+    for g in groups:
+        pods = {d // pod_size for d in g}
+        if len(pods) > 1:
+            return "cross_pod"
+    return "intra_pod"
+
+
+def _ring_factor(op: str, gsize: int) -> float:
+    if gsize <= 1:
+        return 0.0
+    frac = (gsize - 1) / gsize
+    if op == "all-reduce":
+        return 2.0 * frac
+    if op == "all-gather":
+        return float(gsize - 1)
+    if op in ("reduce-scatter", "all-to-all"):
+        return frac
+    return 1.0  # collective-permute
+
+
+def collective_stats(hlo_text: str, pod_size: int = 0) -> Dict[str, Dict]:
+    """Sum collective *operand* bytes by (op type, domain); see module doc."""
+    defs: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RX.match(line)
+        if m:
+            defs[m.group(1)] = m.group(2)
+
+    stats: Dict[str, Dict] = defaultdict(lambda: {"bytes": 0, "ring_bytes": 0.0,
+                                                  "count": 0})
+    for line in hlo_text.splitlines():
+        m = _COLL_RX.search(line)
+        if not m:
+            continue
+        op, is_start, operands_str = m.group(1), m.group(2), m.group(3)
+        if "-done(" in line:
+            continue
+        nbytes = 0
+        for opnd in operands_str.split(","):
+            opnd = opnd.strip()
+            if not opnd:
+                continue
+            if "[" in opnd:                       # typed operand inline
+                nbytes += shape_bytes(opnd)
+            else:                                 # resolve by name
+                name = opnd.lstrip("%")
+                if name in defs:
+                    nbytes += shape_bytes(defs[name])
+        gm = _GROUPS_RX.search(line)
+        groups = parse_replica_groups(gm.group(1)) if gm else None
+        gsize = len(groups[0]) if groups and groups[0] else 1
+        # source-target_pairs form (collective-permute without groups)
+        if groups is None and op == "collective-permute":
+            gsize = 2
+        domain = classify_domain(groups, pod_size)
+        key = f"{op}:{domain}"
+        stats[key]["bytes"] += nbytes
+        stats[key]["ring_bytes"] += nbytes * _ring_factor(op, gsize)
+        stats[key]["count"] += 1
+
+    agg = {"total": {"bytes": 0, "ring_bytes": 0.0, "count": 0},
+           "cross_pod": {"bytes": 0, "ring_bytes": 0.0, "count": 0},
+           "intra_pod": {"bytes": 0, "ring_bytes": 0.0, "count": 0}}
+    for key, v in list(stats.items()):
+        dom = key.split(":")[1]
+        for f in ("bytes", "ring_bytes", "count"):
+            agg["total"][f] += v[f]
+            agg[dom][f] += v[f]
+    stats.update(agg)
+    return dict(stats)
+
+
+def extrapolate(u1: Dict, u2: Dict, periods: int) -> Dict:
+    """total = u1 + (periods-1) * (u2 - u1), per stat key/field."""
+    keys = set(u1) | set(u2)
+    out: Dict[str, Dict] = {}
+    zero = {"bytes": 0, "ring_bytes": 0.0, "count": 0}
+    for k in keys:
+        a = u1.get(k, zero)
+        b = u2.get(k, zero)
+        out[k] = {
+            f: max(0.0, a[f] + (periods - 1) * (b[f] - a[f]))
+            for f in ("bytes", "ring_bytes", "count")
+        }
+    return out

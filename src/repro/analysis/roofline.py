@@ -1,0 +1,72 @@
+"""Roofline terms for TPU v5e from dry-run artifacts.
+
+  compute_term    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory_term     = HLO_bytes_per_device / HBM_BW
+  collective_term = collective_bytes_per_device / LINK_BW
+
+cost_analysis() on the compiled (SPMD-partitioned) executable reports
+*per-device* flops/bytes (verified empirically), so no chip division is
+needed; MODEL_FLOPS (6·N·D, or 6·N_active·D for MoE) is global and is
+divided by chip count for the usefulness ratio.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+DCN_BW = 6.25e9           # bytes/s per chip cross-pod (assumed 50 Gb/s DCN)
+HBM_PER_CHIP = 16e9       # v5e HBM capacity
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    cross_pod_s: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s, "cross_pod": self.cross_pod_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s,
+                   self.cross_pod_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step the dominant (useful-work) term occupies
+        if terms overlapped perfectly: compute / bound."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+
+def terms_from_artifact(art: Dict) -> RooflineTerms:
+    flops = art["flops_per_device"]
+    bytes_hbm = art["bytes_per_device"]
+    coll = art["collective_bytes_per_device"]
+    cross = art.get("cross_pod_bytes_per_device", 0.0)
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_hbm / HBM_BW,
+        collective_s=coll / LINK_BW,
+        cross_pod_s=cross / DCN_BW,
+    )
+
+
+def model_flops_train(n_params_active: int, tokens: int) -> float:
+    """6·N·D (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_forward(n_params_active: int, tokens: int) -> float:
+    return 2.0 * n_params_active * tokens
+
+
+def mfu(model_flops_global: float, step_seconds: float, chips: int) -> float:
+    return model_flops_global / (step_seconds * chips * PEAK_FLOPS)

@@ -1,0 +1,143 @@
+"""Fault-tolerant checkpointing.
+
+Format: a directory per step — ``step_<N>/arrays.npz`` (flattened
+pytree leaves, host-gathered) + ``manifest.msgpack`` (treedef paths,
+shapes, dtypes, step, stream position, extra metadata). Writes go to a
+temp dir and are atomically renamed, so a crash mid-save never corrupts
+the latest checkpoint. Saves can run on a background thread (async);
+``keep`` bounds disk use.
+
+Restore is mesh-agnostic: arrays are loaded on host and re-sharded by
+``jax.device_put`` against whatever shardings the *new* mesh prescribes
+— the elasticity path (restart on a different pod count re-shards
+transparently).
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if self.async_save:
+            self.wait()
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host_tree, extra), daemon=True
+            )
+            self._pending.start()
+        else:
+            self._write(step, host_tree, extra)
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _write(self, step: int, host_tree: Any, extra: Optional[Dict]):
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        items = _flatten_with_paths(host_tree)
+        # store raw bytes (npz can't serialize bf16/fp8 ml_dtypes)
+        arrays = {f"a{i}": np.frombuffer(np.ascontiguousarray(leaf).tobytes(),
+                                         np.uint8)
+                  for i, (_, leaf) in enumerate(items)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "paths": [k for k, _ in items],
+            "dtypes": [str(leaf.dtype) for _, leaf in items],
+            "shapes": [list(leaf.shape) for _, leaf in items],
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "manifest.msgpack")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int], target_tree: Any,
+                shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``target_tree``; optionally
+        device_put against per-leaf shardings (elastic re-shard)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        import ml_dtypes  # noqa: F401  (registers bf16 etc. with numpy)
+
+        data = np.load(os.path.join(d, "arrays.npz"))
+        by_path = {}
+        for i, p in enumerate(manifest["paths"]):
+            raw = data[f"a{i}"]
+            dt = np.dtype(manifest["dtypes"][i])
+            by_path[p] = raw.view(dt).reshape(manifest["shapes"][i])
+
+        tgt_items = _flatten_with_paths(target_tree)
+        leaves = []
+        for key, tgt in tgt_items:
+            if key not in by_path:
+                raise KeyError(f"checkpoint missing leaf '{key}'")
+            arr = by_path[key]
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {tgt.shape}")
+            if arr.dtype != tgt.dtype:
+                arr = arr.astype(tgt.dtype)
+            leaves.append(arr)
+        treedef = jax.tree_util.tree_structure(target_tree)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree, manifest["extra"]

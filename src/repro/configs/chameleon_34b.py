@@ -1,0 +1,21 @@
+"""chameleon-34b [arXiv:2405.09818; unverified].
+
+48L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=65536; early-fusion
+VQ image tokens live in the same vocab (modality frontend is a stub —
+input_specs() provides token ids / patch embeddings).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    head_dim=128,
+    qk_norm=True,            # chameleon uses qk-norm for stability
+    subquadratic=False,
+))

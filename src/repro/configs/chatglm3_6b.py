@@ -1,0 +1,20 @@
+"""chatglm3-6b [arXiv:2406.12793; hf].
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024, 2d-RoPE
+(rotary applied to half of each head dim), GQA kv=2.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="chatglm3-6b",
+    family="dense",
+    n_layers=28,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    head_dim=128,
+    rope_style="half",
+    subquadratic=False,
+))

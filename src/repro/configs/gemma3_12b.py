@@ -1,0 +1,24 @@
+"""gemma3-12b [hf:google/gemma-3-1b-pt; unverified].
+
+48L d_model=3840 16H (GQA kv=8) d_ff=15360 vocab=262144; 5 local
+(sliding-window 1024) layers per 1 global layer; 128k context family.
+head_dim=256 (gemma3 uses decoupled head dim).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=15360,
+    vocab_size=262144,
+    head_dim=256,
+    local_global_period=6,   # layer % 6 == 5 is global
+    local_window=1024,
+    qk_norm=True,
+    rope_base=1000000.0,
+    subquadratic=True,       # 5/6 of layers have bounded windows
+))

@@ -1,0 +1,23 @@
+"""mixtral-8x22b [arXiv:2401.04088; hf].
+
+56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768, MoE 8 experts
+top-2, sliding-window attention.
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    head_dim=128,
+    n_experts=8,
+    experts_per_token=2,
+    sliding_window=4096,
+    rope_base=1000000.0,
+    subquadratic=True,   # SWA: bounded KV window
+))

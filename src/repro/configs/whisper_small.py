@@ -1,0 +1,27 @@
+"""whisper-small [arXiv:2212.04356; unverified].
+
+Enc-dec backbone: 12L encoder + 12L decoder, d_model=768 12H (kv=12)
+d_ff=3072 vocab=51865. The conv audio frontend is a STUB: input_specs()
+provides precomputed frame embeddings (B, 1500, 768). Decoder shapes
+follow the assigned LM suite (decode_32k uses a 32k self-KV cache plus
+the 1500-frame cross-attention cache); long_500k skipped (full-attention
+decoder).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    head_dim=64,
+    encoder_layers=12,
+    encoder_seq=1500,
+    is_encdec=True,
+    act="gelu",
+    subquadratic=False,
+))

@@ -1,0 +1,21 @@
+"""xlstm-125m [arXiv:2405.04517; unverified].
+
+12 blocks d_model=768, 4 heads, vocab=50304, d_ff=0 (xLSTM blocks carry
+their own up/down projections). Pattern 'smmm' (sLSTM at positions
+0,4,8 — the paper's 7:1-style sparse sLSTM placement scaled to 12L).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=192,
+    block_pattern="smmm",
+    subquadratic=True,       # recurrent: O(1) state in sequence length
+))

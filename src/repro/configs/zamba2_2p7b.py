@@ -1,0 +1,25 @@
+"""zamba2-2.7b [arXiv:2411.15242; hf].
+
+54 Mamba2 blocks d_model=2560 ssm_state=64, with a SHARED
+attention(32H, kv=32)+MLP(d_ff=10240) block applied every 6th position
+(the zamba shared-block trick: one parameter set, multiple call sites).
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    head_dim=80,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_conv=4,
+    ssm_head_dim=64,
+    attn_every=6,
+    subquadratic=True,       # SSM state is O(1) in sequence length
+))

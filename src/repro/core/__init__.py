@@ -1,0 +1,40 @@
+"""FedPara core: low-rank Hadamard product parameterizations (ICLR'22)."""
+from repro.core import rank_policy, regularization, tensor_fedpara
+from repro.core.parameterization import (
+    PFEDPARA_GLOBAL_KEYS,
+    PFEDPARA_LOCAL_KEYS,
+    compose_fedpara,
+    compose_lowrank,
+    compose_pfedpara,
+    init_fedpara,
+    init_linear,
+    init_lowrank,
+    init_original,
+    init_pfedpara,
+    materialize,
+    num_params,
+    tree_bytes,
+)
+from repro.core.tensor_fedpara import compose_conv_fedpara, init_conv, materialize_conv
+
+__all__ = [
+    "rank_policy",
+    "regularization",
+    "tensor_fedpara",
+    "PFEDPARA_GLOBAL_KEYS",
+    "PFEDPARA_LOCAL_KEYS",
+    "compose_fedpara",
+    "compose_lowrank",
+    "compose_pfedpara",
+    "init_fedpara",
+    "init_linear",
+    "init_lowrank",
+    "init_original",
+    "init_pfedpara",
+    "materialize",
+    "num_params",
+    "tree_bytes",
+    "compose_conv_fedpara",
+    "init_conv",
+    "materialize_conv",
+]

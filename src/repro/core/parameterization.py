@@ -1,0 +1,198 @@
+"""Weight parameterizations: FedPara, conventional low-rank, original, pFedPara.
+
+Functional API (no flax): each parameterization is a pair of pure
+functions ``init(key, ...) -> params`` and ``materialize(params) -> W``.
+Layer code calls :func:`materialize` (or the fused Pallas kernel) to get
+the dense weight and then runs the ordinary einsum.
+
+Param trees contain ONLY arrays (jit-safe); the parameterization *kind*
+lives in static layer specs (see `repro.nn.layers.LinearSpec`), not in
+the tree. Key-name conventions:
+
+  original : {"w"}
+  lowrank  : {"x", "y"}                      W = X Yᵀ
+  fedpara  : {"x1", "y1", "x2", "y2"}        W = (X1Y1ᵀ) ⊙ (X2Y2ᵀ)
+  pfedpara : {"x1", "y1", "x2", "y2"}        W = (X1Y1ᵀ) ⊙ (X2Y2ᵀ + 1)
+
+All factors are stored fp32 (master copy); :func:`materialize` casts the
+composed weight to ``dtype`` (bf16 by default on the compute path).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rank_policy
+
+ParamTree = Dict[str, Any]
+
+KINDS = ("original", "lowrank", "fedpara", "fedpara_tanh", "pfedpara")
+
+
+# --------------------------------------------------------------------------
+# Initialization scaling.
+#
+# The paper uses He init. For the composed matrix W = (X1 Y1ᵀ)⊙(X2 Y2ᵀ) we
+# pick the factor std so the *composed* weight matches He variance:
+#   var(W1_ij) = r · σ_x² σ_y²,  var(W_ij) = var(W1)·var(W2) = (rσ⁴)²
+#   ⇒ σ = target_var^(1/8) / r^(1/4) with target_var = gain/fan_in.
+# --------------------------------------------------------------------------
+
+def fedpara_factor_std(fan_in: int, r: int, target_gain: float = 2.0) -> float:
+    return float((target_gain / fan_in) ** 0.125 / (r ** 0.25))
+
+
+def lowrank_factor_std(fan_in: int, r: int, target_gain: float = 2.0) -> float:
+    # var(W_ij) = r σ⁴ = target ⇒ σ = (target/(fan_in·r))^(1/4) · gain^(1/4)
+    return float((target_gain / (fan_in * r)) ** 0.25)
+
+
+# ------------------------------------------------------------------ original
+
+def init_original(key: jax.Array, m: int, n: int, dtype=jnp.float32) -> ParamTree:
+    w = jax.random.normal(key, (m, n), dtype) * jnp.asarray((2.0 / m) ** 0.5, dtype)
+    return {"w": w}
+
+
+# ------------------------------------------------------------------ low-rank
+
+def init_lowrank(key: jax.Array, m: int, n: int, r: int, dtype=jnp.float32) -> ParamTree:
+    kx, ky = jax.random.split(key)
+    std = lowrank_factor_std(m, r)
+    x = jax.random.normal(kx, (m, r), dtype) * std
+    y = jax.random.normal(ky, (n, r), dtype) * std
+    return {"x": x, "y": y}
+
+
+def _cast(a, dtype):
+    return a.astype(dtype) if dtype is not None else a
+
+
+def compose_lowrank(params: ParamTree, dtype=None) -> jax.Array:
+    # Cast factors BEFORE the compose dot: a post-compose cast would be
+    # folded into the dot by XLA, upcasting it (and any GSPMD psum of
+    # its products) to fp32. '...' handles scan-stacked leading dims.
+    return jnp.einsum("...mr,...nr->...mn",
+                      _cast(params["x"], dtype), _cast(params["y"], dtype))
+
+
+# ------------------------------------------------------------------- fedpara
+
+def init_fedpara(key: jax.Array, m: int, n: int, r: int, dtype=jnp.float32) -> ParamTree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = fedpara_factor_std(m, r)
+    return {
+        "x1": jax.random.normal(k1, (m, r), dtype) * std,
+        "y1": jax.random.normal(k2, (n, r), dtype) * std,
+        "x2": jax.random.normal(k3, (m, r), dtype) * std,
+        "y2": jax.random.normal(k4, (n, r), dtype) * std,
+    }
+
+
+def compose_fedpara(params: ParamTree, dtype=None, use_tanh: bool = False) -> jax.Array:
+    """W = (X1 Y1ᵀ) ⊙ (X2 Y2ᵀ)   (optionally tanh(W1)⊙tanh(W2), supp. B)."""
+    w1 = jnp.einsum("...mr,...nr->...mn",
+                    _cast(params["x1"], dtype), _cast(params["y1"], dtype))
+    w2 = jnp.einsum("...mr,...nr->...mn",
+                    _cast(params["x2"], dtype), _cast(params["y2"], dtype))
+    if use_tanh:
+        w1, w2 = jnp.tanh(w1), jnp.tanh(w2)
+    return w1 * w2
+
+
+# ------------------------------------------------------------------ pfedpara
+
+def init_pfedpara(key: jax.Array, m: int, n: int, r: int, dtype=jnp.float32) -> ParamTree:
+    """pFedPara: W = W1 ⊙ (W2 + 1); W1 global (transferred), W2 local.
+
+    W2 factors start near zero so W ≈ W1 at initialization (the "+1"
+    acts as a switch, paper §2.3); W1 carries low-rank He scaling.
+    """
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std1 = lowrank_factor_std(m, r)
+    std2 = 0.1 * std1
+    return {
+        "x1": jax.random.normal(k1, (m, r), dtype) * std1,  # global
+        "y1": jax.random.normal(k2, (n, r), dtype) * std1,  # global
+        "x2": jax.random.normal(k3, (m, r), dtype) * std2,  # local
+        "y2": jax.random.normal(k4, (n, r), dtype) * std2,  # local
+    }
+
+
+def compose_pfedpara(params: ParamTree, dtype=None) -> jax.Array:
+    """W = W1 ⊙ (W2 + 1) = W_per + W_glo  (paper §2.3)."""
+    w1 = jnp.einsum("...mr,...nr->...mn",
+                    _cast(params["x1"], dtype), _cast(params["y1"], dtype))
+    w2 = jnp.einsum("...mr,...nr->...mn",
+                    _cast(params["x2"], dtype), _cast(params["y2"], dtype))
+    one = jnp.asarray(1.0, w2.dtype)
+    return w1 * (w2 + one)
+
+
+PFEDPARA_GLOBAL_KEYS = ("x1", "y1")   # transferred to the server
+PFEDPARA_LOCAL_KEYS = ("x2", "y2")    # kept on-device
+
+
+# ------------------------------------------------------- generic entry points
+
+def resolve_rank(m: int, n: int, kind: str, gamma: float, rank: Optional[int]) -> int:
+    if rank is not None:
+        return rank
+    return rank_policy.matrix_rank_for_gamma(m, n, gamma)
+
+
+def init_linear(
+    key: jax.Array,
+    m: int,
+    n: int,
+    *,
+    kind: str = "fedpara",
+    gamma: float = 0.1,
+    rank: Optional[int] = None,
+    dtype=jnp.float32,
+) -> ParamTree:
+    """Initialize one parameterized (m -> n) weight.
+
+    ``rank=None`` resolves the inner rank from ``gamma`` via the paper's
+    policy. The low-rank baseline receives ``2r`` (parameter parity with
+    FedPara at inner rank ``r``, cf. Fig. 1).
+    """
+    if kind == "original":
+        return init_original(key, m, n, dtype)
+    r = resolve_rank(m, n, kind, gamma, rank)
+    if kind == "lowrank":
+        return init_lowrank(key, m, n, 2 * r, dtype)
+    if kind in ("fedpara", "fedpara_tanh"):
+        return init_fedpara(key, m, n, r, dtype)
+    if kind == "pfedpara":
+        return init_pfedpara(key, m, n, r, dtype)
+    raise ValueError(f"unknown parameterization kind: {kind}")
+
+
+def materialize(params: ParamTree, kind: str, dtype=None) -> jax.Array:
+    """Compose the dense weight for the given parameterization kind."""
+    if kind == "original":
+        w = params["w"]
+        return w.astype(dtype) if dtype is not None else w
+    if kind == "lowrank":
+        return compose_lowrank(params, dtype)
+    if kind == "fedpara":
+        return compose_fedpara(params, dtype, use_tanh=False)
+    if kind == "fedpara_tanh":
+        return compose_fedpara(params, dtype, use_tanh=True)
+    if kind == "pfedpara":
+        return compose_pfedpara(params, dtype)
+    raise ValueError(f"unknown parameterization kind: {kind}")
+
+
+def num_params(tree: Any) -> int:
+    """Total scalar count over a pytree."""
+    return int(sum(x.size for x in jax.tree.leaves(tree) if hasattr(x, "size")))
+
+
+def tree_bytes(tree: Any) -> int:
+    return int(
+        sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree) if hasattr(x, "size"))
+    )

@@ -1,0 +1,62 @@
+"""Jacobian correction regularization (paper supplementary B, Eq. 6-9).
+
+Induces the one-step factor update to track the ideal dense-weight SGD
+step:   R = L + λ/2 · ‖W' − (W − η J_W)‖_F
+where W' is the weight composed from the factor values after one SGD step
+computed with the chain-rule Jacobians of Eq. 6.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def jacobian_correction_penalty(
+    params: Dict[str, jax.Array],
+    j_w: jax.Array,
+    eta: float,
+) -> jax.Array:
+    """Penalty for one FedPara weight given J_W = dL/dW.
+
+    Implements Eq. 6 (chain-rule Jacobians), Eq. 7 (one-step SGD on the
+    factors) and the Frobenius mismatch of Eq. 9.
+    """
+    x1, y1, x2, y2 = params["x1"], params["y1"], params["x2"], params["y2"]
+    w1 = x1 @ y1.T
+    w2 = x2 @ y2.T
+    w = w1 * w2
+    # Eq. 6
+    j_w1 = j_w * w2
+    j_w2 = j_w * w1
+    j_x1 = j_w1 @ y1          # (m,n)@(n,r) -> (m,r)
+    j_y1 = j_w1.T @ x1        # (n,m)@(m,r) -> (n,r)
+    j_x2 = j_w2 @ y2
+    j_y2 = j_w2.T @ x2
+    # Eq. 7
+    x1p, y1p = x1 - eta * j_x1, y1 - eta * j_y1
+    x2p, y2p = x2 - eta * j_x2, y2 - eta * j_y2
+    w_prime = (x1p @ y1p.T) * (x2p @ y2p.T)
+    target = w - eta * j_w
+    return jnp.linalg.norm(w_prime - target)
+
+
+def fedpara_loss_with_jacobian_correction(
+    loss_of_weight,
+    params: Dict[str, jax.Array],
+    lam: float,
+    eta: float,
+) -> jax.Array:
+    """Total objective  R = L(W(factors)) + λ/2·penalty  (Eq. 9).
+
+    ``loss_of_weight``: callable W -> scalar loss. The penalty needs
+    J_W = dL/dW, obtained by differentiating through the composed W.
+    """
+    def compose(p):
+        return (p["x1"] @ p["y1"].T) * (p["x2"] @ p["y2"].T)
+
+    w = compose(params)
+    loss, j_w = jax.value_and_grad(loss_of_weight)(w)
+    penalty = jacobian_correction_penalty(params, jax.lax.stop_gradient(j_w), eta)
+    return loss + 0.5 * lam * penalty

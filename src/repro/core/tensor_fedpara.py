@@ -1,0 +1,131 @@
+"""Tensor (Proposition 3) FedPara parameterization for convolution kernels.
+
+W = (T1 ×₁ X1 ×₂ Y1) ⊙ (T2 ×₁ X2 ×₂ Y2)  ∈ R^{O×I×K1×K2}
+
+with Tᵢ ∈ R^{R×R×K1×K2}, Xᵢ ∈ R^{O×R}, Yᵢ ∈ R^{I×R}. Parameter count
+2R(O + I + R·K1·K2); unfolding ranks rank(W⁽¹⁾) = rank(W⁽²⁾) ≤ R².
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rank_policy
+from repro.core.parameterization import ParamTree
+
+
+def init_conv_fedpara(
+    key: jax.Array,
+    out_ch: int,
+    in_ch: int,
+    k1: int,
+    k2: int,
+    *,
+    gamma: float = 0.1,
+    rank: Optional[int] = None,
+    dtype=jnp.float32,
+) -> ParamTree:
+    r = rank if rank is not None else rank_policy.conv_rank_for_gamma(out_ch, in_ch, k1, k2, gamma)
+    keys = jax.random.split(key, 6)
+    fan_in = in_ch * k1 * k2
+    # Composed-variance matching (see parameterization.py): each branch
+    # W1[o,i,h,w] = Σ_ab X[o,a] Y[i,b] T[a,b,h,w]  has r² three-way product
+    # terms ⇒ var(W1) = r²σ⁶, var(W) = (r²σ⁶)² ⇒ σ = tgt^(1/12)/r^(1/3).
+    std = float((2.0 / fan_in) ** (1.0 / 12.0) / (r ** (1.0 / 3.0)))
+    shape_t = (r, r, k1, k2)
+    return {
+        "t1": jax.random.normal(keys[0], shape_t, dtype) * std,
+        "x1": jax.random.normal(keys[1], (out_ch, r), dtype) * std,
+        "y1": jax.random.normal(keys[2], (in_ch, r), dtype) * std,
+        "t2": jax.random.normal(keys[3], shape_t, dtype) * std,
+        "x2": jax.random.normal(keys[4], (out_ch, r), dtype) * std,
+        "y2": jax.random.normal(keys[5], (in_ch, r), dtype) * std,
+    }
+
+
+def compose_conv_fedpara(params: ParamTree, dtype=None, use_tanh: bool = False) -> jax.Array:
+    """Compose the OIHW kernel via two mode products + Hadamard (Prop. 3)."""
+    w1 = jnp.einsum("oa,ib,abhw->oihw", params["x1"], params["y1"], params["t1"])
+    w2 = jnp.einsum("oa,ib,abhw->oihw", params["x2"], params["y2"], params["t2"])
+    if use_tanh:
+        w1, w2 = jnp.tanh(w1), jnp.tanh(w2)
+    w = w1 * w2
+    return w.astype(dtype) if dtype is not None else w
+
+
+def init_conv_lowrank(
+    key: jax.Array,
+    out_ch: int,
+    in_ch: int,
+    k1: int,
+    k2: int,
+    *,
+    rank: int,
+    dtype=jnp.float32,
+) -> ParamTree:
+    """Tucker-2 style low-rank conv baseline (TKD, Phan et al. 2020):
+
+    W = K ×₁ X ×₂ Y with K ∈ R^{r×r×K1×K2}; params r²K1K2 + r(O+I).
+    """
+    keys = jax.random.split(key, 3)
+    fan_in = in_ch * k1 * k2
+    std = float((2.0 / fan_in) ** (1.0 / 3.0) / (rank ** (1.0 / 3.0)))
+    return {
+        "t": jax.random.normal(keys[0], (rank, rank, k1, k2), dtype) * std,
+        "x": jax.random.normal(keys[1], (out_ch, rank), dtype) * std,
+        "y": jax.random.normal(keys[2], (in_ch, rank), dtype) * std,
+    }
+
+
+def compose_conv_lowrank(params: ParamTree, dtype=None) -> jax.Array:
+    w = jnp.einsum("oa,ib,abhw->oihw", params["x"], params["y"], params["t"])
+    return w.astype(dtype) if dtype is not None else w
+
+
+def init_conv_original(
+    key: jax.Array, out_ch: int, in_ch: int, k1: int, k2: int, dtype=jnp.float32
+) -> ParamTree:
+    fan_in = in_ch * k1 * k2
+    w = jax.random.normal(key, (out_ch, in_ch, k1, k2), dtype)
+    return {"w": w * jnp.asarray((2.0 / fan_in) ** 0.5, dtype)}
+
+
+def materialize_conv(params: ParamTree, kind: str, dtype=None) -> jax.Array:
+    if kind == "original":
+        w = params["w"]
+        return w.astype(dtype) if dtype is not None else w
+    if kind == "lowrank":
+        return compose_conv_lowrank(params, dtype)
+    if kind == "fedpara":
+        return compose_conv_fedpara(params, dtype, use_tanh=False)
+    if kind == "fedpara_tanh":
+        return compose_conv_fedpara(params, dtype, use_tanh=True)
+    raise ValueError(f"unknown conv parameterization kind: {kind}")
+
+
+def init_conv(
+    key: jax.Array,
+    out_ch: int,
+    in_ch: int,
+    k1: int,
+    k2: int,
+    *,
+    kind: str = "fedpara",
+    gamma: float = 0.1,
+    rank: Optional[int] = None,
+    dtype=jnp.float32,
+) -> ParamTree:
+    if kind == "original":
+        return init_conv_original(key, out_ch, in_ch, k1, k2, dtype)
+    if kind == "lowrank":
+        r = rank if rank is not None else 2 * rank_policy.conv_rank_for_gamma(
+            out_ch, in_ch, k1, k2, gamma
+        )
+        return init_conv_lowrank(key, out_ch, in_ch, k1, k2, rank=r, dtype=dtype)
+    if kind in ("fedpara", "fedpara_tanh"):
+        return init_conv_fedpara(
+            key, out_ch, in_ch, k1, k2, gamma=gamma, rank=rank, dtype=dtype
+        )
+    raise ValueError(f"unknown conv parameterization kind: {kind}")

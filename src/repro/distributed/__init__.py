@@ -1,0 +1,14 @@
+from repro.distributed import collectives, fedpod, sharding
+from repro.distributed.sharding import (
+    AxisRules,
+    constrain,
+    param_spec,
+    tree_param_specs,
+    tree_shardings,
+    use_rules,
+)
+
+__all__ = [
+    "collectives", "fedpod", "sharding", "AxisRules", "constrain",
+    "param_spec", "tree_param_specs", "tree_shardings", "use_rules",
+]

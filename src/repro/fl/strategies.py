@@ -1,0 +1,139 @@
+"""FL strategies: FedAvg, FedProx, SCAFFOLD, FedDyn, FedAdam.
+
+Each strategy contributes (a) an optional client-side loss modifier /
+gradient correction and (b) a server aggregation rule. The paper shows
+FedPara composes with all of them (Table 3) because it only changes the
+layer parameterization.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_mean(trees: List[Any], weights: Optional[List[float]] = None) -> Any:
+    if weights is None:
+        weights = [1.0 / len(trees)] * len(trees)
+    total = sum(weights)
+    weights = [w / total for w in weights]
+    return jax.tree.map(lambda *xs: sum(w * x for w, x in zip(weights, xs)), *trees)
+
+
+def tree_sub(a: Any, b: Any) -> Any:
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_add(a: Any, b: Any, scale: float = 1.0) -> Any:
+    return jax.tree.map(lambda x, y: x + scale * y, a, b)
+
+
+def tree_zeros(a: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_sqnorm(a: Any) -> jax.Array:
+    return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(a))
+
+
+def tree_dot(a: Any, b: Any) -> jax.Array:
+    return sum(jnp.sum(x * y) for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@dataclass
+class Strategy:
+    name: str = "fedavg"
+    # client loss modifier: fn(params, global_params, client_state) -> penalty
+    client_penalty: Optional[Callable] = None
+    # gradient correction: fn(grads, client_state) -> grads
+    grad_correction: Optional[Callable] = None
+    # server state init / aggregation
+    server_init: Optional[Callable] = None
+    aggregate: Optional[Callable] = None
+
+
+def fedavg() -> Strategy:
+    def agg(server_state, global_params, client_params, weights):
+        return tree_mean(client_params, weights), server_state
+
+    return Strategy(name="fedavg", aggregate=agg)
+
+
+def fedprox(mu: float = 0.1) -> Strategy:
+    def penalty(params, global_params, _state):
+        return 0.5 * mu * tree_sqnorm(tree_sub(params, global_params))
+
+    def agg(server_state, global_params, client_params, weights):
+        return tree_mean(client_params, weights), server_state
+
+    return Strategy(name="fedprox", client_penalty=penalty, aggregate=agg)
+
+
+def scaffold(lr_local: float = 0.1, local_steps_hint: int = 1) -> Strategy:
+    """Option II control variates. client_state: {'c_i': tree, 'c': tree}
+    (c broadcast from the server at download). Correction: g - c_i + c;
+    the c_i update (Option II) happens client-side after local steps."""
+
+    def correction(grads, client_state):
+        return jax.tree.map(lambda g, ci, c: g - ci + c,
+                            grads, client_state["c_i"], client_state["c"])
+
+    def agg(server_state, global_params, client_params, weights):
+        return tree_mean(client_params, weights), server_state
+
+    return Strategy(name="scaffold", grad_correction=correction, aggregate=agg)
+
+
+def feddyn(alpha: float = 0.1) -> Strategy:
+    """Client: L(w) - <lambda_i, w> + alpha/2 ||w - w_g||^2 with
+    lambda_i updated post-round; server keeps running h."""
+
+    def penalty(params, global_params, client_state):
+        lam = client_state["lambda_i"]
+        return (-tree_dot(lam, params)
+                + 0.5 * alpha * tree_sqnorm(tree_sub(params, global_params)))
+
+    def server_init(params):
+        return {"h": tree_zeros(params)}
+
+    def agg(server_state, global_params, client_params, weights):
+        mean_w = tree_mean(client_params, weights)
+        delta = tree_sub(mean_w, global_params)
+        h = tree_add(server_state["h"], delta, scale=-alpha)
+        new_global = tree_add(mean_w, h, scale=-1.0 / alpha)
+        return new_global, {"h": h}
+
+    return Strategy(name="feddyn", client_penalty=penalty,
+                    server_init=server_init, aggregate=agg)
+
+
+def fedadam(eta_g: float = 0.01, b1: float = 0.9, b2: float = 0.99,
+            tau: float = 1e-3) -> Strategy:
+    def server_init(params):
+        return {"m": tree_zeros(params), "v": tree_zeros(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def agg(server_state, global_params, client_params, weights):
+        delta = tree_sub(tree_mean(client_params, weights), global_params)
+        m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d,
+                         server_state["m"], delta)
+        v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * d * d,
+                         server_state["v"], delta)
+        new_global = jax.tree.map(
+            lambda w, m_, v_: w + eta_g * m_ / (jnp.sqrt(v_) + tau),
+            global_params, m, v)
+        return new_global, {"m": m, "v": v, "t": server_state["t"] + 1}
+
+    return Strategy(name="fedadam", server_init=server_init, aggregate=agg)
+
+
+def make_strategy(name: str, **kw) -> Strategy:
+    return {
+        "fedavg": fedavg,
+        "fedprox": fedprox,
+        "scaffold": scaffold,
+        "feddyn": feddyn,
+        "fedadam": fedadam,
+    }[name](**kw)

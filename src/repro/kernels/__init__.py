@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the FedPara hot spots.
+
+fedpara_matmul: fused compose+matmul — the dense W never hits HBM.
+fedpara_compose / pfedpara_compose: tiled serving-time pre-composition.
+ref.py holds the pure-jnp oracles; tests sweep shapes/dtypes against
+them in interpret mode (CPU).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import fedpara_compose, fedpara_matmul, pfedpara_compose
+
+__all__ = ["ops", "ref", "fedpara_compose", "fedpara_matmul",
+           "pfedpara_compose"]

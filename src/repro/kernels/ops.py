@@ -1,0 +1,41 @@
+"""Public jit'd wrappers for the FedPara Pallas kernels.
+
+``interpret`` defaults to True when no TPU is present so the same code
+path runs (slowly but correctly) on CPU; on TPU backends the compiled
+Mosaic kernels are used.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.fedpara_compose import fedpara_compose as _compose
+from repro.kernels.fedpara_matmul import fedpara_matmul as _matmul
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fedpara_matmul(x, x1, y1, x2, y2, *, use_tanh=False, interpret=None, **kw):
+    """y = x @ ((X1Y1ᵀ)⊙(X2Y2ᵀ)) — fused, W never materialized in HBM."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _matmul(x, x1, y1, x2, y2, use_tanh=use_tanh, interpret=interpret, **kw)
+
+
+def fedpara_compose(x1, y1, x2, y2, *, use_tanh=False, interpret=None, **kw):
+    """W = (X1Y1ᵀ)⊙(X2Y2ᵀ) — tiled compose (serving pre-composition)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _compose(x1, y1, x2, y2, use_tanh=use_tanh, interpret=interpret, **kw)
+
+
+def pfedpara_compose(x1, y1, x2, y2, *, interpret=None, **kw):
+    """W = (X1Y1ᵀ) ⊙ (X2Y2ᵀ + 1) — pFedPara compose."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _compose(x1, y1, x2, y2, plus_one=True, interpret=interpret, **kw)
+
+
+# Re-export oracles for convenience.
+fedpara_matmul_ref = ref.fedpara_matmul_ref
+fedpara_compose_ref = ref.fedpara_compose_ref
+pfedpara_compose_ref = ref.pfedpara_compose_ref

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedpara_compose_ref(
+    x1: jax.Array,
+    y1: jax.Array,
+    x2: jax.Array,
+    y2: jax.Array,
+    *,
+    use_tanh: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """W = (X1 Y1ᵀ) ⊙ (X2 Y2ᵀ), computed densely in fp32."""
+    w1 = x1.astype(jnp.float32) @ y1.astype(jnp.float32).T
+    w2 = x2.astype(jnp.float32) @ y2.astype(jnp.float32).T
+    if use_tanh:
+        w1, w2 = jnp.tanh(w1), jnp.tanh(w2)
+    w = w1 * w2
+    return w.astype(out_dtype or x1.dtype)
+
+
+def fedpara_matmul_ref(
+    x: jax.Array,
+    x1: jax.Array,
+    y1: jax.Array,
+    x2: jax.Array,
+    y2: jax.Array,
+    *,
+    use_tanh: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """y = x @ W with W = (X1Y1ᵀ)⊙(X2Y2ᵀ); x: (B, m) -> y: (B, n)."""
+    w = fedpara_compose_ref(x1, y1, x2, y2, use_tanh=use_tanh, out_dtype=jnp.float32)
+    y = x.astype(jnp.float32) @ w
+    return y.astype(out_dtype or x.dtype)
+
+
+def pfedpara_compose_ref(
+    x1: jax.Array, y1: jax.Array, x2: jax.Array, y2: jax.Array, *, out_dtype=None
+) -> jax.Array:
+    """W = W1 ⊙ (W2 + 1) — pFedPara personalization compose."""
+    w1 = x1.astype(jnp.float32) @ y1.astype(jnp.float32).T
+    w2 = x2.astype(jnp.float32) @ y2.astype(jnp.float32).T
+    w = w1 * (w2 + 1.0)
+    return w.astype(out_dtype or x1.dtype)

@@ -1,0 +1,4 @@
+from repro.launch import elastic, mesh, specs
+from repro.launch.mesh import make_mesh, make_production_mesh
+
+__all__ = ["elastic", "mesh", "specs", "make_mesh", "make_production_mesh"]

@@ -1,0 +1,452 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Collective-byte accounting reads the post-SPMD-partitioner HLO dump:
+# the CPU backend's float normalization upcasts bf16 dots (and thus the
+# GSPMD collectives fused around them) to f32, inflating byte counts 2x
+# vs. the TPU lowering. The pass-level dump runs before that.
+_DUMP_DIR = f"/tmp/repro_xla_dump_{os.getpid()}"
+os.environ["XLA_FLAGS"] += (
+    f" --xla_dump_to={_DUMP_DIR} --xla_dump_hlo_pass_re=spmd-partitioning"
+)
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+cell lowers, compiles, fits, and report its roofline inputs.
+
+For each cell:
+  1. FULL model (lax.scan over layers) -> .lower().compile() on the
+     production mesh; memory_analysis() proves the per-device footprint
+     fits a 16 GB v5e chip; the collective schedule comes from the same
+     artifact.
+  2. COST variants: 1-period and 2-period python-unrolled models ->
+     exact per-period FLOPs / HLO bytes / collective bytes (XLA's
+     cost_analysis counts a while-loop body once, verified), linearly
+     extrapolated to the full depth:  total = u1 + (P-1)(u2-u1).
+
+Artifacts land in benchmarks/artifacts/<cell>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline via benchmarks/roofline.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/artifacts
+"""
+import argparse
+import dataclasses
+import glob
+import json
+import shutil
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import roofline as rf
+from repro.configs import ASSIGNED, SHAPES, get_arch
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.distributed.fedpod import make_dp_step, make_fed_round
+from repro.distributed.sharding import use_rules
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.nn.transformer import ModelOptions
+from repro.optim import adamw
+
+
+def arch_period(cfg: ArchConfig) -> int:
+    if cfg.attn_every:
+        return cfg.attn_every
+    if cfg.local_global_period:
+        return cfg.local_global_period
+    if cfg.block_pattern:
+        return len(cfg.block_pattern)
+    return 1
+
+
+def with_periods(cfg: ArchConfig, k: int) -> ArchConfig:
+    per = arch_period(cfg)
+    kw = {"n_layers": per * k}
+    if cfg.encoder_layers:
+        kw["encoder_layers"] = k
+    return cfg.with_(**kw)
+
+
+def count_params(shapes: Any) -> int:
+    return int(sum(s.size for s in jax.tree.leaves(shapes)))
+
+
+def active_dense_params(cfg: ArchConfig, model, params_shapes) -> float:
+    """Dense-equivalent active params for MODEL_FLOPS (6·N_active·D)."""
+    composed = jax.eval_shape(model.precompose, params_shapes)
+    flat = jax.tree_util.tree_flatten_with_path(composed)[0]
+    total, expert, embed = 0, 0, 0
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        total += leaf.size
+        if "experts" in key:
+            expert += leaf.size
+        if "embed/" in key or key.endswith("embed/w"):
+            if "unembed" not in key:
+                embed += leaf.size
+    active = total - embed
+    if cfg.n_experts and expert:
+        active -= expert * (1.0 - cfg.experts_per_token / cfg.n_experts)
+    return float(active)
+
+
+def _shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _clear_dump():
+    if os.path.isdir(_DUMP_DIR):
+        shutil.rmtree(_DUMP_DIR, ignore_errors=True)
+
+
+def _post_spmd_text() -> Optional[str]:
+    """Newest post-SPMD-partitioner pass dump (bf16-faithful collectives)."""
+    files = sorted(glob.glob(os.path.join(
+        _DUMP_DIR, "*after_spmd-partitioning*.txt")))
+    if not files:
+        return None
+    return open(files[-1]).read()
+
+
+def _analyze(compiled, pod_size: int) -> Dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    spmd_txt = _post_spmd_text()
+    colls = hlo_mod.collective_stats(spmd_txt if spmd_txt is not None
+                                     else compiled.as_text(), pod_size)
+    return {
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+        },
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "collectives": colls,
+    }
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh, *,
+               fed: bool, opts: ModelOptions, fed_local_steps: int = 4,
+               donate: bool = True, variant: Optional[Dict] = None):
+    """Build + lower + compile one cell; returns (compiled, cell)."""
+    variant = variant or {}
+    cell = specs_mod.build_cell(cfg, shape, mesh, opts, fed=fed,
+                                fed_local_steps=fed_local_steps,
+                                n_pods=mesh.shape.get("pod", 1) if fed else 2,
+                                seq_parallel=variant.get("seq_parallel", True),
+                                int8=variant.get("int8", False))
+    model, rules = cell["model"], cell["rules"]
+    pspec = _shardings(mesh, cell["param_specs"])
+    bspec = _shardings(mesh, cell["batch_specs"])
+    scalar = NamedSharding(mesh, P())
+
+    # ZeRO-3 split between STORAGE (2D fsdp2/tp2) and COMPUTE (1D) factor
+    # shardings: params enter the step 2D-sharded and are re-constrained
+    # to the 1D compute layout (a cheap factor all-gather whose transpose
+    # reduce-scatters the gradients back). Without this, GSPMD pushes the
+    # 2D storage layout into the compose dots and replicates work
+    # (measured 4x per-device FLOPs on llama3-405B).
+    from repro.distributed.sharding import AxisRules as _AR, tree_param_specs as _tps
+    rules_c = _AR(mesh, {**rules.rules,
+                         "fsdp2": rules.rules.get("fsdp", "data"),
+                         "tp2": rules.rules.get("tp", "model")})
+
+    def _to_compute(params):
+        if shape.kind == "decode":
+            return params
+        base = cell.get("base_params_shapes")
+        if base is not None:  # fed: stacked leading pod dim
+            cspecs = jax.tree.map(
+                lambda sp: P("pod", *sp), _tps(base, rules_c),
+                is_leaf=lambda x: isinstance(x, P))
+        else:
+            cspecs = _tps(params, rules_c)
+        return jax.tree.map(
+            lambda x, sp: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, sp)), params, cspecs)
+
+    with use_rules(rules):
+        if shape.kind == "train":
+            opt = adamw(3e-4)
+            from repro.distributed.sharding import tree_param_specs
+            if fed:
+                # per-pod optimizer state: every leaf (incl. the scalar
+                # step) gets a leading n_pods dim sharded over 'pod'
+                n_pods = mesh.shape["pod"]
+                base_opt = jax.eval_shape(opt.init, cell["base_params_shapes"])
+                base_ospec = tree_param_specs(base_opt, rules)
+                opt_shapes = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((n_pods, *s.shape), s.dtype),
+                    base_opt)
+                ospec_tree = jax.tree.map(
+                    lambda sp: P("pod", *sp), base_ospec,
+                    is_leaf=lambda x: isinstance(x, P))
+            else:
+                opt_shapes = jax.eval_shape(opt.init, cell["params_shapes"])
+                ospec_tree = tree_param_specs(opt_shapes, rules)
+            ospec = _shardings(mesh, ospec_tree)
+            accum = variant.get("accum", 1)
+            if fed:
+                inner = make_fed_round(
+                    model.loss, opt, local_steps=fed_local_steps,
+                    sync=variant.get("sync", "factors"),
+                    sync_dtype=(jnp.bfloat16
+                                if variant.get("sync_dtype") == "bf16" else None),
+                    accum=accum)
+            else:
+                inner = make_dp_step(model.loss, opt, accum=accum)
+
+            def step(params, opt_state, batch):
+                return inner(_to_compute(params), opt_state, batch)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(pspec, ospec, bspec),
+                out_shardings=(pspec, ospec, scalar),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(cell["params_shapes"], opt_shapes,
+                                   cell["batch_shapes"])
+        elif shape.kind == "prefill":
+            cspec = _shardings(mesh, cell["cache_specs"])
+            logits_spec = NamedSharding(
+                mesh, rules.spec(("batch", "vocab"),
+                                 (shape.global_batch, cfg.vocab_size)))
+
+            if cfg.is_encdec:
+                def step(params, batch, cache):
+                    return model.prefill(_to_compute(params), batch, cache)
+            else:
+                def step(params, batch, cache):
+                    return model.prefill(_to_compute(params), batch["tokens"],
+                                         cache)
+
+            jitted = jax.jit(step, in_shardings=(pspec, bspec, cspec),
+                             out_shardings=(cspec, logits_spec),
+                             donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(cell["params_shapes"], cell["batch_shapes"],
+                                   cell["cache_shapes"])
+        else:  # decode
+            cspec = _shardings(mesh, cell["cache_specs"])
+            logits_spec = NamedSharding(
+                mesh, rules.spec(("batch", "vocab"),
+                                 (shape.global_batch, cfg.vocab_size)))
+
+            def step(params, cache, token, pos):
+                return model.decode_step(params, cache, token, pos)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(pspec, cspec, bspec["token"], bspec["pos"]),
+                out_shardings=(logits_spec, cspec),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(cell["params_shapes"], cell["cache_shapes"],
+                                   cell["batch_shapes"]["token"],
+                                   cell["batch_shapes"]["pos"])
+        compiled = lowered.compile()
+    return compiled, cell
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             fed: Optional[bool] = None, quick: bool = False,
+             skip_cost: bool = False, fed_local_steps: int = 4,
+             variant: Optional[Dict] = None) -> Dict:
+    variant = dict(variant or {})
+    cfg = get_arch(arch)
+    # default gradient accumulation for the widest models: per-chip
+    # batch*seq at 256 chips otherwise exceeds HBM (napkin: llama3-405B
+    # gathered activation (16,4096,16384)bf16 = 2.1GB x ~6 live)
+    if shape_name == "train_4k" and "accum" not in variant:
+        # measured in §Perf D-series: MoE dispatch buffers scale with the
+        # per-micro batch; mixtral fits HBM at accum=16
+        variant["accum"] = {"llama3-405b": 8, "chameleon-34b": 4,
+                            "mixtral-8x22b": 16,
+                            "llama4-scout-17b-a16e": 8}.get(arch, 1)
+    kw = {}
+    if variant.get("capacity_factor"):
+        kw["moe_capacity_factor"] = variant["capacity_factor"]
+    if variant.get("param_kind") or variant.get("gamma") is not None:
+        kw["param"] = cfg.param.__class__(
+            kind=variant.get("param_kind", cfg.param.kind),
+            gamma=(cfg.param.gamma if variant.get("gamma") is None
+                   else variant["gamma"]))
+    if kw:
+        cfg = cfg.with_(**kw)
+    shape = SHAPES[shape_name]
+    multi = mesh_kind == "multi"
+    art: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "fed": bool(fed) if fed is not None else (multi and shape.kind == "train"),
+    }
+
+    # applicability gates
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        art.update(skipped=True,
+                   reason="pure full-attention arch: long_500k requires "
+                          "sub-quadratic attention (DESIGN.md §6)")
+        return art
+    if shape.kind == "decode" and getattr(cfg, "encoder_only", False):
+        art.update(skipped=True, reason="encoder-only arch: no decode step")
+        return art
+
+    if quick:
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model")) if multi \
+            else make_mesh((2, 2), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi)
+    pod_size = (mesh.devices.size // mesh.shape["pod"]) if "pod" in mesh.shape else 0
+    use_fed = art["fed"] and multi and shape.kind == "train"
+    art["fed"] = use_fed
+
+    opts = ModelOptions(scan_layers=True,
+                        attn_chunk=variant.get("attn_chunk", 512),
+                        logit_chunk=variant.get("logit_chunk", 1024),
+                        int8_kv=variant.get("int8_kv", False))
+    if variant:
+        art["variant"] = {k: v for k, v in variant.items()}
+    t0 = time.time()
+    _clear_dump()
+    compiled, cell = lower_cell(cfg, shape, mesh, fed=use_fed, opts=opts,
+                                fed_local_steps=fed_local_steps,
+                                variant=variant)
+    art["compile_seconds"] = round(time.time() - t0, 2)
+    full = _analyze(compiled, pod_size)
+    art["memory"] = full["memory"]
+    art["collectives_scan_model"] = {
+        k: v for k, v in full["collectives"].items()
+        if k in ("total", "cross_pod", "intra_pod")}
+
+    # ---- model-level accounting
+    model = cell["model"]
+    base_params_shapes = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    art["trainable_params"] = count_params(base_params_shapes)
+    art["fed_local_steps"] = fed_local_steps if use_fed else None
+    n_active = active_dense_params(cfg, model, base_params_shapes)
+    art["dense_equiv_active_params"] = n_active
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    art["tokens_per_step"] = tokens
+    if shape.kind == "train":
+        art["model_flops_global"] = rf.model_flops_train(int(n_active), tokens)
+    else:
+        art["model_flops_global"] = rf.model_flops_forward(int(n_active), tokens)
+
+    # ---- cost extrapolation (exact per-period counting)
+    if not skip_cost:
+        per = arch_period(cfg)
+        periods_total = cfg.n_layers // per
+        opts_u = dataclasses.replace(opts, scan_layers=False)
+        t1 = time.time()
+        cost_u = []
+        variant_u = {k: v for k, v in variant.items() if k != "accum"}
+        for k in (1, 2):
+            _clear_dump()
+            ck = with_periods(cfg, k)
+            comp_k, _ = lower_cell(ck, shape, mesh, fed=use_fed, opts=opts_u,
+                                   fed_local_steps=1, donate=False,
+                                   variant=variant_u)
+            cost_u.append(_analyze(comp_k, pod_size))
+        art["cost_variant_seconds"] = round(time.time() - t1, 2)
+        u1, u2 = cost_u
+        art["flops_per_device"] = max(
+            0.0, u1["flops"] + (periods_total - 1) * (u2["flops"] - u1["flops"]))
+        art["bytes_per_device"] = max(
+            0.0, u1["bytes_accessed"]
+            + (periods_total - 1) * (u2["bytes_accessed"] - u1["bytes_accessed"]))
+        colls = hlo_mod.extrapolate(u1["collectives"], u2["collectives"],
+                                    periods_total)
+        art["collectives"] = colls
+        art["collective_bytes_per_device"] = colls.get("total", {}).get("bytes", 0.0)
+        art["cross_pod_bytes_per_device"] = colls.get("cross_pod", {}).get("bytes", 0.0)
+        if use_fed:  # amortize the per-round numbers over K local steps
+            K = fed_local_steps
+            art["flops_per_device"] /= 1.0  # u-variants lowered with K=1
+            art["per_step_cross_pod_bytes"] = art["cross_pod_bytes_per_device"] / K
+        terms = rf.terms_from_artifact(art)
+        art["roofline"] = {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "cross_pod_s": terms.cross_pod_s,
+            "dominant": terms.dominant,
+            "roofline_fraction": terms.roofline_fraction,
+        }
+        chips = int(mesh.devices.size)
+        art["chips"] = chips
+        art["useful_flops_ratio"] = (
+            art["model_flops_global"] / (art["flops_per_device"] * chips)
+            if art["flops_per_device"] else 0.0)
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fed", action="store_true", default=None)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells whose artifact already exists")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                name = f"{arch}_{shape}_{mesh_kind}"
+                path = os.path.join(args.out, name + ".json")
+                if not args.force and os.path.exists(path):
+                    try:
+                        prev = json.load(open(path))
+                        if "error" not in prev:
+                            print(f"=== {name} (cached)", flush=True)
+                            continue
+                    except Exception:
+                        pass
+                print(f"=== {name}", flush=True)
+                try:
+                    art = run_cell(arch, shape, mesh_kind, fed=args.fed,
+                                   quick=args.quick, skip_cost=args.skip_cost,
+                                   fed_local_steps=args.local_steps)
+                except Exception as e:  # a failing cell is a bug — surface it
+                    failures += 1
+                    art = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"FAILED {name}: {art['error']}", flush=True)
+                with open(os.path.join(args.out, name + ".json"), "w") as f:
+                    json.dump(art, f, indent=1, default=float)
+                if "roofline" in art:
+                    r = art["roofline"]
+                    print(f"  mem/device: {art['memory']['argument_bytes']/1e9:.2f}GB args "
+                          f"+ {art['memory']['temp_bytes']/1e9:.2f}GB temp | "
+                          f"compute {r['compute_s']*1e3:.2f}ms mem {r['memory_s']*1e3:.2f}ms "
+                          f"coll {r['collective_s']*1e3:.2f}ms -> {r['dominant']}",
+                          flush=True)
+                elif art.get("skipped"):
+                    print(f"  skipped: {art['reason']}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

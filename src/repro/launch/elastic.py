@@ -1,0 +1,53 @@
+"""Elastic scaling: restart-time mesh adaptation.
+
+FedAvg's aggregation is insensitive to the number of participants per
+round, so pod count can change freely between restarts; within a pod,
+checkpoints are host-format (see repro.checkpoint) and re-shard onto
+whatever mesh exists at restore. This module provides the glue:
+
+  plan = plan_mesh(available_chips)        # largest valid (pods, dp, tp)
+  shardings = reshard_plan(params, mesh)   # NamedShardings for restore
+  params, extra = ckpt.restore(None, params_shapes, shardings)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ShapeCfg
+from repro.distributed.sharding import tree_shardings
+from repro.launch.specs import rules_for
+
+
+def plan_mesh(n_chips: int, *, tp: int = 16, min_dp: int = 1,
+              pods: Optional[int] = None) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Choose the largest (pods, data, model) layout for ``n_chips``.
+
+    Keeps TP fixed (model-parallel width is architecture-bound) and
+    absorbs chip-count changes into the data/pod axes — the dimensions
+    FedAvg tolerates elastically.
+    """
+    tp = min(tp, n_chips)
+    per_pod = n_chips if pods in (None, 1) else n_chips // pods
+    dp = max(min_dp, per_pod // tp)
+    if pods and pods > 1:
+        return (pods, dp, tp), ("pod", "data", "model")
+    return (dp, tp), ("data", "model")
+
+
+def make_elastic_mesh(n_chips: Optional[int] = None, **kw) -> Mesh:
+    devices = jax.devices()
+    n = n_chips or len(devices)
+    shape, axes = plan_mesh(n, **kw)
+    used = int(np.prod(shape))
+    return Mesh(np.array(devices[:used]).reshape(shape), axes)
+
+
+def reshard_plan(params_shapes: Any, mesh: Mesh, shape: ShapeCfg) -> Any:
+    """Shardings for restoring a host checkpoint onto ``mesh``."""
+    rules = rules_for(mesh, shape)
+    return tree_shardings(params_shapes, mesh, rules)

@@ -1,0 +1,185 @@
+"""ShapeDtypeStruct input specs + sharding trees for every
+(architecture x shape) cell — the shannon/kernels pattern: weak-type
+correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.distributed.sharding import AxisRules, tree_param_specs
+from repro.nn.transformer import ModelOptions, build_model
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def rules_for(mesh: Optional[Mesh], shape: ShapeCfg, *, fed: bool = False,
+              seq_parallel: bool = True) -> AxisRules:
+    """Logical->physical mapping per shape kind (see DESIGN.md §4)."""
+    overrides: Dict[str, Any] = {}
+    dp = ("pod", "data") if (mesh is not None and "pod" in mesh.axis_names and not fed) \
+        else "data"
+    overrides["batch"] = dp
+    overrides["fsdp"] = dp
+    if isinstance(dp, tuple):  # non-fed multi-pod: storage shards over pod too
+        overrides["fsdp2"] = ("pod", "data", "model")
+        overrides["tp2"] = ("model", "pod", "data")
+    if shape.kind in ("train", "prefill") and seq_parallel:
+        # Megatron-style sequence parallelism on the residual stream:
+        # saved layer inputs are (B/dp, S/model, d) — without this, 36+
+        # full (B,S,d) remat residuals alone exceed a v5e's 16 GB HBM.
+        overrides["seq"] = "model"
+        # flash-over-sharded-KV: K/V and the (C, S) score tiles stay
+        # sharded along the KV-seq dim; softmax/AV reduce via psums.
+        # A 32k-prefill score tile at llama3-405B width is 17GB unsharded.
+        overrides["kv_seq_attn"] = "model"
+    if shape.kind == "prefill":
+        overrides["kv_seq"] = "model"
+    if shape.kind == "decode":
+        if shape.global_batch == 1:  # long-context: shard the KV sequence
+            overrides["batch"] = None
+            overrides["kv_seq"] = (("pod", "data", "model")
+                                   if mesh is not None and "pod" in mesh.axis_names
+                                   else ("data", "model"))
+        else:
+            overrides["kv_seq"] = "model"
+    return AxisRules(mesh, overrides)
+
+
+# ----------------------------------------------------------- batch specs
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": sds((B, S + 1), jnp.int32)}
+        if cfg.is_encdec:
+            out["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.is_encdec:
+            out["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return out
+    # decode: one new token against a cache of S
+    return {"token": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+
+
+def batch_partition_specs(cfg: ArchConfig, shape: ShapeCfg, rules: AxisRules) -> Dict:
+    dp = rules.rules["batch"]
+    B = shape.global_batch
+    def bspec(*rest):
+        ax = dp if (dp and B % rules._axis_size(dp) == 0) else None
+        return P(ax, *rest)
+
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": bspec(None)}
+        if cfg.is_encdec:
+            out["frames"] = bspec(None, None)
+        return out
+    return {"token": bspec(None), "pos": P()}
+
+
+# ----------------------------------------------------------- cache specs
+
+def cache_partition_specs(cfg: ArchConfig, cache_shapes: Any, rules: AxisRules) -> Any:
+    """Per-leaf specs for the decode caches of every model family."""
+    batch_ax = rules.rules["batch"]
+    seq_ax = rules.rules["kv_seq"]
+
+    def visit(path_elems, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_elems)
+        shp = leaf.shape
+        def ok(ax, dim):
+            return ax is not None and dim % rules._axis_size(ax) == 0
+        name = path.rsplit("/", 1)[-1]
+        if name in ("k", "v", "k_q", "v_q", "k_s", "v_s") and len(shp) == 5:
+            return P(None,
+                     batch_ax if ok(batch_ax, shp[1]) else None,
+                     seq_ax if ok(seq_ax, shp[2]) else None,
+                     None, None)
+        if name == "ssm" and len(shp) == 6:           # (sites,per,B,H,P,N)
+            return P(None, None,
+                     batch_ax if ok(batch_ax, shp[2]) else None,
+                     "model" if ok("model", shp[3]) else None, None, None)
+        if name == "conv" and len(shp) == 4:          # (sites*? ,B,K-1,D)
+            return P(*([None] * (len(shp) - 1)), None)
+        if len(shp) >= 1 and batch_ax is not None and shp[0] % rules._axis_size(batch_ax) == 0 \
+                and name in ("C", "n", "m", "c", "h"):
+            return P(batch_ax, *([None] * (len(shp) - 1)))
+        if name == "conv" and len(shp) == 5:          # (sites,per,B,K-1,D)
+            return P(None, None,
+                     batch_ax if ok(batch_ax, shp[2]) else None, None, None)
+        return P(*([None] * len(shp)))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_shapes)
+
+
+# ------------------------------------------------------------- cell specs
+
+def build_cell(cfg: ArchConfig, shape: ShapeCfg, mesh: Optional[Mesh],
+               opts: ModelOptions, *, fed: bool = False,
+               fed_local_steps: int = 4, n_pods: int = 2,
+               seq_parallel: bool = True, int8: bool = False):
+    """Everything the dry-run needs for one (arch x shape x mesh) cell:
+    model, abstract inputs, and matching sharding trees."""
+    model = build_model(cfg, opts)
+    rules = rules_for(mesh, shape, fed=fed, seq_parallel=seq_parallel)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(model.init_params, key)
+    specs = tree_param_specs(params_shapes, rules)
+
+    out: Dict[str, Any] = {"model": model, "rules": rules,
+                           "params_shapes": params_shapes, "param_specs": specs}
+
+    if shape.kind == "train":
+        bs = batch_specs(cfg, shape)
+        bps = batch_partition_specs(cfg, shape, rules)
+        if fed:
+            K = fed_local_steps
+            def stack(s, extra):
+                return sds((n_pods, *extra, *s.shape[1:]), s.dtype)
+            per_pod = shape.global_batch // n_pods
+            fed_bs = {k: sds((n_pods, K, per_pod, *v.shape[1:]), v.dtype)
+                      for k, v in bs.items()}
+            fed_bps = {k: P("pod", None, *v) for k, v in bps.items()}
+            out["batch_shapes"] = fed_bs
+            out["batch_specs"] = fed_bps
+            out["base_params_shapes"] = params_shapes
+            out["base_param_specs"] = specs
+            out["params_shapes"] = jax.tree.map(
+                lambda s: sds((n_pods, *s.shape), s.dtype), params_shapes)
+            out["param_specs"] = jax.tree.map(
+                lambda s: P("pod", *s), specs, is_leaf=lambda x: isinstance(x, P))
+        else:
+            out["batch_shapes"] = bs
+            out["batch_specs"] = bps
+        return out
+
+    if shape.kind == "prefill":
+        out["batch_shapes"] = batch_specs(cfg, shape)
+        out["batch_specs"] = batch_partition_specs(cfg, shape, rules)
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        out["cache_shapes"] = cache_shapes
+        out["cache_specs"] = cache_partition_specs(cfg, cache_shapes, rules)
+        return out
+
+    # decode: pre-composed weights (the paper pre-composes W for serving)
+    composed_shapes = jax.eval_shape(
+        lambda p: model.precompose(p, int8=int8), params_shapes)
+    out["params_shapes"] = composed_shapes
+    out["param_specs"] = tree_param_specs(composed_shapes, rules)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    out["cache_shapes"] = cache_shapes
+    out["cache_specs"] = cache_partition_specs(cfg, cache_shapes, rules)
+    out["batch_shapes"] = batch_specs(cfg, shape)
+    out["batch_specs"] = batch_partition_specs(cfg, shape, rules)
+    return out

@@ -1,0 +1,16 @@
+"""Model zoo: assigned LM architectures + the paper's own models."""
+from repro.nn import attention, layers, moe, recurrent, ssm, transformer, vision, xlstm
+from repro.nn.transformer import (
+    DecoderLM,
+    EncDecLM,
+    HybridSSM,
+    ModelOptions,
+    XLSTMStack,
+    build_model,
+)
+
+__all__ = [
+    "attention", "layers", "moe", "recurrent", "ssm", "transformer",
+    "vision", "xlstm", "DecoderLM", "EncDecLM", "HybridSSM",
+    "ModelOptions", "XLSTMStack", "build_model",
+]

@@ -1,0 +1,207 @@
+"""Core layers: parameterized dense, norms, rotary embeddings, activations.
+
+Every weight matrix in the zoo goes through :func:`dense` /
+:func:`init_dense`, which dispatch on the configured parameterization
+(original / lowrank / fedpara / fedpara_tanh / pfedpara). Serving uses
+:func:`precompose_tree` to replace factor subtrees with dense ``{'w'}``
+weights (the paper pre-composes W for inference).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import parameterization as par
+from repro.configs.base import ArchConfig, ParamCfg
+
+
+# ----------------------------------------------------------------- dispatch
+
+def materialize_auto(sub: Dict[str, jax.Array], kind_hint: str, dtype=None) -> jax.Array:
+    """Compose the dense weight from whatever factor set is stored."""
+    if "w_q" in sub:  # int8 serving weights: dequantize per output channel
+        w = sub["w_q"].astype(dtype or jnp.bfloat16) * sub["scale"].astype(
+            dtype or jnp.bfloat16)
+        return w
+    if "w" in sub:
+        w = sub["w"]
+        return w.astype(dtype) if dtype is not None else w
+    if "t1" in sub:
+        from repro.core import tensor_fedpara
+
+        k = kind_hint if kind_hint in ("fedpara", "fedpara_tanh") else "fedpara"
+        return tensor_fedpara.materialize_conv(sub, k, dtype)
+    if "t" in sub:
+        from repro.core import tensor_fedpara
+
+        return tensor_fedpara.materialize_conv(sub, "lowrank", dtype)
+    if "x" in sub:
+        return par.compose_lowrank(sub, dtype)
+    if "x1" in sub:
+        k = kind_hint if kind_hint in ("fedpara", "fedpara_tanh", "pfedpara") else "fedpara"
+        return par.materialize(sub, k, dtype)
+    raise ValueError(f"unrecognized parameterized weight keys: {list(sub)}")
+
+
+def should_factorize(m: int, n: int, pcfg: ParamCfg) -> bool:
+    if pcfg.kind == "original":
+        return False
+    if min(m, n) < pcfg.min_dim_for_factorization:
+        return False
+    # below break-even, 2R(m+n) at r_min already exceeds mn
+    from repro.core import rank_policy
+
+    r = rank_policy.matrix_rank_for_gamma(m, n, pcfg.gamma)
+    return 2 * r * (m + n) < m * n
+
+
+def init_dense(key: jax.Array, m: int, n: int, pcfg: ParamCfg) -> Dict[str, jax.Array]:
+    if should_factorize(m, n, pcfg):
+        return par.init_linear(key, m, n, kind=pcfg.kind, gamma=pcfg.gamma)
+    return par.init_original(key, m, n)
+
+
+def dense(
+    sub: Dict[str, jax.Array],
+    x: jax.Array,
+    pcfg: ParamCfg,
+    dtype=jnp.bfloat16,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """y = x @ W for any parameterization. ``x``: (..., m) -> (..., n)."""
+    if use_pallas and "x1" in sub and pcfg.kind in ("fedpara", "fedpara_tanh"):
+        from repro.kernels import ops
+
+        lead = x.shape[:-1]
+        y = ops.fedpara_matmul(
+            x.reshape(-1, x.shape[-1]).astype(dtype),
+            sub["x1"], sub["y1"], sub["x2"], sub["y2"],
+            use_tanh=(pcfg.kind == "fedpara_tanh"),
+            out_dtype=dtype,
+        )
+        return y.reshape(*lead, y.shape[-1])
+    w = materialize_auto(sub, pcfg.kind, dtype)
+    if w.dtype != dtype:  # dense master weights: cast before the dot
+        w = w.astype(dtype)
+    return jnp.einsum("...m,mn->...n", x.astype(dtype), w)
+
+
+def precompose_tree(params: Any, pcfg: ParamCfg, dtype=jnp.bfloat16,
+                    int8: bool = False) -> Any:
+    """Replace every factorized weight subtree with {'w': dense} (serving).
+
+    ``int8=True`` additionally quantizes composed 2-D weights to int8 with
+    per-output-channel scales ({'w_q', 'scale'}) — halves serving HBM and
+    weight-load bytes vs bf16 (§Perf decode hillclimb)."""
+    def is_param_leafdict(d):
+        return isinstance(d, dict) and any(k in d for k in ("w", "x", "x1", "t", "t1"))
+
+    def quantize(w):
+        if w.ndim < 2 or w.dtype == jnp.int32:
+            return {"w": w}
+        # reduce only the contraction dim (-2): keeps scan-stacked leading
+        # dims (L, ...) intact and gives per-output-channel scales
+        scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2,
+                        keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        wq = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127
+                      ).astype(jnp.int8)
+        return {"w_q": wq, "scale": scale.astype(jnp.float32)}
+
+    def walk(node, name=""):
+        if is_param_leafdict(node):
+            w = materialize_auto(node, pcfg.kind, dtype)
+            if int8 and name not in ("embed", "unembed"):
+                return quantize(w)
+            return {"w": w}
+        if isinstance(node, dict):
+            return {k: walk(v, k) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
+# -------------------------------------------------------------------- norms
+
+def init_scale(n: int) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((n,), jnp.float32)}
+
+
+def rms_norm(x: jax.Array, sub: Dict[str, jax.Array], eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * sub["scale"]
+    return y.astype(x.dtype)
+
+
+def init_layer_norm(n: int) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((n,), jnp.float32), "bias": jnp.zeros((n,), jnp.float32)}
+
+
+def layer_norm(x: jax.Array, sub: Dict[str, jax.Array], eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * sub["scale"] + sub["bias"]
+    return y.astype(x.dtype)
+
+
+def group_norm(x: jax.Array, sub: Dict[str, jax.Array], groups: int = 32, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over NHWC feature maps (paper replaces VGG BN with GN)."""
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xf = x.astype(jnp.float32).reshape(n, h, w, g, c // g)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(n, h, w, c)
+    return (y * sub["scale"] + sub["bias"]).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+
+def rope_angles(positions: jax.Array, rotary_dim: int, base: float) -> jax.Array:
+    """(..., rotary_dim/2) angles for given integer positions."""
+    inv = 1.0 / (base ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim))
+    return positions.astype(jnp.float32)[..., None] * inv
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float, rotary_frac: float = 1.0) -> jax.Array:
+    """Rotary embedding on (..., S, H, hd). ``positions``: (..., S).
+
+    ``rotary_frac`` < 1 applies rotation to the leading fraction of the
+    head dim (chatglm-style 2d-RoPE uses 0.5).
+    """
+    hd = x.shape[-1]
+    rd = int(hd * rotary_frac)
+    rd -= rd % 2
+    ang = rope_angles(positions, rd, base)          # (..., S, rd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]                          # broadcast over heads
+    cos = cos[..., None, :]
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    out = jnp.concatenate([rot.astype(x.dtype), x[..., rd:]], axis=-1)
+    return out
+
+
+# -------------------------------------------------------------- activations
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "tanh": jnp.tanh,
+    }[name]
+
+
+def count_factorized(params: Any) -> Dict[str, int]:
+    """#params transferred (factors+dense) vs dense-equivalent count."""
+    stats = {"total": 0}
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "size"):
+            stats["total"] += int(leaf.size)
+    return stats

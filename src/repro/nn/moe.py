@@ -1,0 +1,134 @@
+"""Dropless-ish Mixture-of-Experts with capacity dispatch (GShard-style).
+
+Per batch element: route -> top-k -> scatter tokens into per-expert
+capacity buffers -> batched expert matmul -> combine. Keeping the batch
+dim outermost makes the scatter local to each data shard, so GSPMD
+shards dispatch/combine cleanly over 'data' while the expert FFN hidden
+dim is tensor-parallel over 'model'.
+
+Expert weights are FedPara-factorized *per expert* (leading E dim on
+every factor; compose is a batched einsum). Router stays dense fp32
+(below the 2R(m+n) < mn break-even and numerically sensitive).
+
+FLOPs = B*S*top_k*capacity_factor*(expert FFN) — honest MoE accounting,
+no dense-all-experts waste. Overflow beyond capacity is dropped
+(weighted combine of nothing = 0), standard for capacity-based TPU MoE.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ParamCfg
+from repro.core import parameterization as par
+from repro.core import rank_policy
+from repro.distributed.sharding import constrain
+from repro.nn.layers import act_fn
+
+
+def _init_expert_factors(key, E: int, m: int, n: int, pcfg: ParamCfg):
+    """Stacked factors (E, dim, r) for one expert weight family."""
+    if pcfg.kind == "original":
+        ws = jax.random.normal(key, (E, m, n), jnp.float32) * (2.0 / m) ** 0.5
+        return {"w": ws}
+    r = rank_policy.matrix_rank_for_gamma(m, n, pcfg.gamma)
+    if pcfg.kind == "lowrank":
+        r2 = 2 * r
+        std = par.lowrank_factor_std(m, r2)
+        kx, ky = jax.random.split(key)
+        return {
+            "x": jax.random.normal(kx, (E, m, r2), jnp.float32) * std,
+            "y": jax.random.normal(ky, (E, n, r2), jnp.float32) * std,
+        }
+    std = par.fedpara_factor_std(m, r)
+    ks = jax.random.split(key, 4)
+    return {
+        "x1": jax.random.normal(ks[0], (E, m, r), jnp.float32) * std,
+        "y1": jax.random.normal(ks[1], (E, n, r), jnp.float32) * std,
+        "x2": jax.random.normal(ks[2], (E, m, r), jnp.float32) * std,
+        "y2": jax.random.normal(ks[3], (E, n, r), jnp.float32) * std,
+    }
+
+
+def compose_expert(sub: Dict, kind: str, dtype) -> jax.Array:
+    """(E, m, n) dense expert stack from stacked factors (composed in
+    ``dtype``: post-compose casts get folded into the dot as fp32)."""
+    if "w" in sub:
+        return sub["w"].astype(dtype)
+    if "x" in sub:
+        return jnp.einsum("emr,enr->emn", sub["x"].astype(dtype),
+                          sub["y"].astype(dtype))
+    w1 = jnp.einsum("emr,enr->emn", sub["x1"].astype(dtype), sub["y1"].astype(dtype))
+    w2 = jnp.einsum("emr,enr->emn", sub["x2"].astype(dtype), sub["y2"].astype(dtype))
+    if kind == "fedpara_tanh":
+        w1, w2 = jnp.tanh(w1), jnp.tanh(w2)
+    if kind == "pfedpara":
+        return w1 * (w2 + jnp.asarray(1.0, w2.dtype))
+    return w1 * w2
+
+
+def init_moe(key: jax.Array, cfg: ArchConfig) -> Dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": {"w": jax.random.normal(ks[0], (d, E), jnp.float32) * (1.0 / d) ** 0.5},
+        "experts": {
+            "w_gate": _init_expert_factors(ks[1], E, d, f, cfg.param),
+            "w_up": _init_expert_factors(ks[2], E, d, f, cfg.param),
+            "w_down": _init_expert_factors(ks[3], E, f, d, cfg.param),
+        },
+    }
+
+
+def moe_ffn(p: Dict, x: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d). Capacity = ceil(S*k/E * cf)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    cap = int(max(1, round(S * k / E * cfg.moe_capacity_factor)))
+    act = act_fn(cfg.act)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"]["w"])
+    gates, idx = jax.lax.top_k(logits, k)                    # (B,S,k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # position of each (token, choice) within its expert queue, per batch el.
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)          # (B,S,k,E)
+    flat = onehot.reshape(B, S * k, E)
+    ranks = jnp.cumsum(flat, axis=1) - flat                   # (B,S*k,E)
+    rank_of = jnp.sum(ranks * flat, axis=-1)                  # (B,S*k)
+    expert_of = idx.reshape(B, S * k)
+    keep = rank_of < cap
+    slot = jnp.where(keep, expert_of * cap + rank_of, E * cap)  # overflow -> pad row
+
+    # dispatch: (B, E*cap + 1, d) buffers (last row = dropped tokens)
+    xk = jnp.repeat(x, k, axis=1) if k > 1 else x             # (B,S*k,d)
+    buf = jnp.zeros((B, E * cap + 1, d), dtype).at[
+        jnp.arange(B)[:, None], slot
+    ].set(xk.astype(dtype))
+    buf = buf[:, : E * cap].reshape(B, E, cap, d)
+    buf = constrain(buf, "batch", None, None, None)
+
+    wg = compose_expert(p["experts"]["w_gate"], cfg.param.kind, dtype)
+    wu = compose_expert(p["experts"]["w_up"], cfg.param.kind, dtype)
+    wd = compose_expert(p["experts"]["w_down"], cfg.param.kind, dtype)
+    h = act(jnp.einsum("becd,edf->becf", buf, wg)) * jnp.einsum("becd,edf->becf", buf, wu)
+    h = constrain(h, "batch", None, None, "ffn")
+    out_buf = jnp.einsum("becf,efd->becd", h, wd)             # (B,E,cap,d)
+
+    # combine: gather each (token, choice) slot back and weight by gate
+    out_flat = out_buf.reshape(B, E * cap, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((B, 1, d), dtype)], axis=1)
+    picked = out_flat[jnp.arange(B)[:, None], slot]           # (B,S*k,d)
+    picked = picked.reshape(B, S, k, d)
+    y = jnp.sum(picked * gates[..., None].astype(dtype), axis=2)
+    return y.astype(x.dtype)
+
+
+def aux_load_balance_loss(logits: jax.Array, idx: jax.Array, E: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss."""
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B,S,E)
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(idx[..., 0], E).mean(axis=(0, 1))
+    return E * jnp.sum(me * ce)

@@ -1,0 +1,122 @@
+"""Paper RNN models: 2-layer character LSTM (Shakespeare) and the
+two-FC-layer MLP (FEMNIST/MNIST personalization experiments).
+
+The LSTM gate matrices (input-to-hidden and hidden-to-hidden) are
+FedPara-factorized; the embedding and output head stay dense, per the
+paper's convention of leaving small/last layers unfactorized.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ParamCfg
+from repro.nn.layers import init_dense, materialize_auto
+
+
+@dataclass(frozen=True)
+class LSTMConfig:
+    vocab: int = 80
+    embed: int = 8
+    hidden: int = 256
+    layers: int = 2
+    param: ParamCfg = field(default_factory=lambda: ParamCfg(min_dim_for_factorization=8))
+
+
+def init_lstm(key: jax.Array, cfg: LSTMConfig) -> Dict:
+    ks = jax.random.split(key, 2 + 2 * cfg.layers)
+    params: Dict = {
+        "embed": {"w": jax.random.normal(ks[0], (cfg.vocab, cfg.embed), jnp.float32) * 0.1},
+        "cells": [],
+        "head": {"w": jax.random.normal(ks[1], (cfg.hidden, cfg.vocab), jnp.float32)
+                 * (1.0 / cfg.hidden) ** 0.5},
+    }
+    d_in = cfg.embed
+    for l in range(cfg.layers):
+        params["cells"].append({
+            "wi": init_dense(ks[2 + 2 * l], d_in, 4 * cfg.hidden, cfg.param),
+            "wh": init_dense(ks[3 + 2 * l], cfg.hidden, 4 * cfg.hidden, cfg.param),
+            "b": jnp.zeros((4 * cfg.hidden,), jnp.float32)
+                 .at[cfg.hidden: 2 * cfg.hidden].set(1.0),  # forget-gate bias
+        })
+        d_in = cfg.hidden
+    return params
+
+
+def _cell_step(p, kind, carry, x_t):
+    h, c = carry
+    wi = materialize_auto(p["wi"], kind)
+    wh = materialize_auto(p["wh"], kind)
+    z = x_t @ wi + h @ wh + p["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def lstm_apply(params: Dict, cfg: LSTMConfig, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) -> logits (B, S, vocab)."""
+    B, S = tokens.shape
+    x = params["embed"]["w"][tokens]
+    for p in params["cells"]:
+        h0 = (jnp.zeros((B, cfg.hidden)), jnp.zeros((B, cfg.hidden)))
+        kind = cfg.param.kind
+        _, hs = jax.lax.scan(lambda c, xt: _cell_step(p, kind, c, xt),
+                             h0, jnp.moveaxis(x, 1, 0))
+        x = jnp.moveaxis(hs, 0, 1)
+    return x @ params["head"]["w"]
+
+
+def lstm_loss(params: Dict, cfg: LSTMConfig, batch: Dict) -> jax.Array:
+    tokens = batch["tokens"]
+    logits = lstm_apply(params, cfg, tokens[:, :-1])
+    logp = jax.nn.log_softmax(logits)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def lstm_accuracy(params: Dict, cfg: LSTMConfig, batch: Dict) -> jax.Array:
+    tokens = batch["tokens"]
+    logits = lstm_apply(params, cfg, tokens[:, :-1])
+    return jnp.mean((jnp.argmax(logits, -1) == tokens[:, 1:]).astype(jnp.float32))
+
+
+# --------------------------------------------------------------------- MLP
+
+@dataclass(frozen=True)
+class MLPConfig:
+    in_dim: int = 784
+    hidden: int = 256
+    classes: int = 62
+    param: ParamCfg = field(default_factory=lambda: ParamCfg(gamma=0.5,
+                                                             min_dim_for_factorization=8))
+
+
+def init_mlp_model(key: jax.Array, cfg: MLPConfig) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "fc1": init_dense(ks[0], cfg.in_dim, cfg.hidden, cfg.param),
+        "fc2": init_dense(ks[1], cfg.hidden, cfg.classes, cfg.param),
+        "b1": jnp.zeros((cfg.hidden,), jnp.float32),
+        "b2": jnp.zeros((cfg.classes,), jnp.float32),
+    }
+
+
+def mlp_apply(params: Dict, cfg: MLPConfig, x: jax.Array) -> jax.Array:
+    h = jax.nn.relu(x @ materialize_auto(params["fc1"], cfg.param.kind) + params["b1"])
+    return h @ materialize_auto(params["fc2"], cfg.param.kind) + params["b2"]
+
+
+def mlp_loss(params: Dict, cfg: MLPConfig, batch: Dict) -> jax.Array:
+    logits = mlp_apply(params, cfg, batch["x"])
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def mlp_accuracy(params: Dict, cfg: MLPConfig, batch: Dict) -> jax.Array:
+    logits = mlp_apply(params, cfg, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

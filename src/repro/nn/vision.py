@@ -1,0 +1,106 @@
+"""VGG16 (and a reduced VGG-small) with FedPara conv parameterization.
+
+Matches the paper's setup: VGG16 with *group* normalization (Hsieh et
+al. 2020), FedPara (Prop. 3 tensor form) on every conv layer, the last
+three FC layers (512-512-#classes) kept dense, same gamma for all convs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ParamCfg
+from repro.core import tensor_fedpara
+from repro.nn.layers import group_norm, materialize_auto
+
+VGG16_PLAN: Tuple = (64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+                     512, 512, 512, "M", 512, 512, 512, "M")
+VGG_SMALL_PLAN: Tuple = (16, "M", 32, "M", 64, "M")
+
+
+@dataclass(frozen=True)
+class VGGConfig:
+    plan: Tuple = VGG16_PLAN
+    classes: int = 10
+    in_channels: int = 3
+    image_size: int = 32
+    fc_dims: Tuple[int, ...] = (512, 512)
+    param: ParamCfg = field(default_factory=ParamCfg)
+    gn_groups: int = 32
+
+
+def _conv_param(key, out_ch, in_ch, pcfg: ParamCfg):
+    # FedPara applies from the first conv on; tiny convs fall back dense
+    if pcfg.kind == "original" or min(out_ch, in_ch) < 16:
+        return tensor_fedpara.init_conv(key, out_ch, in_ch, 3, 3, kind="original")
+    return tensor_fedpara.init_conv(key, out_ch, in_ch, 3, 3, kind=pcfg.kind,
+                                    gamma=pcfg.gamma)
+
+
+def init_vgg(key: jax.Array, cfg: VGGConfig) -> Dict:
+    params: Dict = {"convs": [], "fcs": []}
+    in_ch = cfg.in_channels
+    keys = jax.random.split(key, len(cfg.plan) + len(cfg.fc_dims) + 1)
+    ki = 0
+    size = cfg.image_size
+    for item in cfg.plan:
+        if item == "M":
+            size //= 2
+            continue
+        params["convs"].append({
+            "kernel": _conv_param(keys[ki], item, in_ch, cfg.param),
+            "gn": {"scale": jnp.ones((item,), jnp.float32),
+                   "bias": jnp.zeros((item,), jnp.float32)},
+        })
+        in_ch = item
+        ki += 1
+    feat = in_ch * size * size
+    dims = (feat,) + cfg.fc_dims + (cfg.classes,)
+    for i in range(len(dims) - 1):
+        # last FC layers stay dense (paper keeps them unfactorized)
+        w = jax.random.normal(keys[ki], (dims[i], dims[i + 1]), jnp.float32)
+        params["fcs"].append({
+            "w": w * (2.0 / dims[i]) ** 0.5,
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        })
+        ki += 1
+    return params
+
+
+def vgg_apply(params: Dict, cfg: VGGConfig, x: jax.Array) -> jax.Array:
+    """x: (B, H, W, C) -> logits (B, classes)."""
+    ci = 0
+    for item in cfg.plan:
+        if item == "M":
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+            continue
+        p = params["convs"][ci]
+        w = materialize_auto(p["kernel"], cfg.param.kind)      # (O,I,3,3)
+        w = jnp.transpose(w, (2, 3, 1, 0))                      # HWIO
+        x = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = group_norm(x, p["gn"], cfg.gn_groups)
+        x = jax.nn.relu(x)
+        ci += 1
+    x = x.reshape(x.shape[0], -1)
+    for i, fc in enumerate(params["fcs"]):
+        x = x @ fc["w"] + fc["b"]
+        if i < len(params["fcs"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def vgg_loss(params: Dict, cfg: VGGConfig, batch: Dict) -> jax.Array:
+    logits = vgg_apply(params, cfg, batch["x"])
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def vgg_accuracy(params: Dict, cfg: VGGConfig, batch: Dict) -> jax.Array:
+    logits = vgg_apply(params, cfg, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

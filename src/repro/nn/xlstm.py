@@ -1,0 +1,254 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) + sLSTM (scalar
+memory, sequential) — arXiv:2405.04517, simplified.
+
+mLSTM training uses the quadratic parallel form (attention-like with a
+log-gate decay mask, stabilized exp gating); decode is the O(1)
+recurrent update of the (H, P, N) matrix memory. sLSTM is inherently
+sequential (the xLSTM paper says so) and runs a lax.scan over time.
+
+q/k/v/gate/out projections are FedPara-factorized; per-head gate
+parameters stay dense.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn.layers import dense, init_dense
+
+NEG_INF = -1e30
+
+
+def mlstm_dims(cfg: ArchConfig) -> Tuple[int, int]:
+    H = cfg.n_heads
+    P = cfg.resolved_head_dim()
+    return H, P
+
+
+def init_mlstm(key: jax.Array, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    H, P = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_q": init_dense(ks[0], d, H * P, cfg.param),
+        "w_k": init_dense(ks[1], d, H * P, cfg.param),
+        "w_v": init_dense(ks[2], d, H * P, cfg.param),
+        "w_out": init_dense(ks[3], H * P, d, cfg.param),
+        # scalar input/forget gates per head from the residual stream
+        "w_if": jax.random.normal(ks[4], (d, 2 * H), jnp.float32) * (1.0 / d) ** 0.5,
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "norm": {"scale": jnp.ones((H * P,), jnp.float32)},
+    }
+
+
+def mlstm_forward(p: Dict, x: jax.Array, cfg: ArchConfig, *, chunk: int = 256,
+                  dtype=jnp.bfloat16, use_pallas: bool = False,
+                  state=None, return_state: bool = False):
+    """Chunkwise-parallel mLSTM: quadratic within a chunk, O(1) matrix
+    memory across chunks, carried log-scale stabilizer M.
+
+    Derivation: S_t = Σ_{u<=t} exp(cumf_t − cumf_u + i_u)·k_u⊗v_u. We
+    store Ŝ = S·exp(−M); per chunk with g_s = i_s − cumf_s and
+    h_t = max(M, cummax_{s<=t} g_s), both the inter weight exp(M − h_t)
+    and the intra weights exp(g_s − h_t) are ≤ 1 (exp(cumf_t) cancels
+    between numerator and normalizer).
+    """
+    B, S, d = x.shape
+    H, P = mlstm_dims(cfg)
+    q = dense(p["w_q"], x, cfg.param, dtype, use_pallas).reshape(B, S, H, P)
+    k = dense(p["w_k"], x, cfg.param, dtype, use_pallas).reshape(B, S, H, P)
+    v = dense(p["w_v"], x, cfg.param, dtype, use_pallas).reshape(B, S, H, P)
+    gates = x.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_gate, f_gate = gates[..., :H], gates[..., H:]            # (B,S,H)
+    logf = -jax.nn.softplus(-f_gate)                            # log sigmoid(f)
+
+    C = min(chunk, S)
+    nc = (S + C - 1) // C
+    Sp = nc * C
+    if Sp != S:  # pad: f=1 (logf=0, no decay), i=-inf (no contribution)
+        pad = Sp - S
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=NEG_INF)
+
+    def rc(t):  # (B,Sp,...) -> (nc,B,C,...)
+        return jnp.moveaxis(t.reshape(B, nc, C, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc = rc(q / (P ** 0.5)), rc(k), rc(v)
+    ic, fc = rc(i_gate), rc(logf)
+    mask = jnp.tril(jnp.ones((C, C), bool))
+
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+
+    def chunk_step(carry, inp):
+        S_h, n_h, M = carry["C"], carry["n"], carry["m"]        # Ŝ,(B,H,P,P) ñ,(B,H,P) M,(B,H)
+        qi, ki, vi, ii, fi = inp
+        cumf = jnp.cumsum(fi, axis=1)                           # (B,C,H)
+        g = ii - cumf                                           # (B,C,H)
+        hmax = jnp.maximum(M[:, None], jax.lax.cummax(g, axis=1))  # (B,C,H)
+        w_inter = jnp.exp(M[:, None] - hmax)                    # (B,C,H) ≤ 1
+        rel = g[:, None, :, :] - hmax[:, :, None, :]             # (B,C_t,C_s,H)
+        rel = jnp.where(mask[None, :, :, None], rel, -1e30)      # mask pre-exp
+        D = jnp.exp(rel)
+        scores = jnp.einsum("bthp,bshp->btsh", qi, ki,
+                            preferred_element_type=jnp.float32)
+        w = scores * D
+        num = (jnp.einsum("btsh,bshp->bthp", w.astype(vi.dtype), vi,
+                          preferred_element_type=jnp.float32)
+               + w_inter[..., None] * jnp.einsum(
+                   "bthp,bhpq->bthq", qi.astype(jnp.float32), S_h))
+        # normalizer: n_t = q_t·(Σ_s gate_ts k_s) = Σ_s w_ts (+ carried state)
+        n_t = (jnp.sum(w, axis=2)
+               + w_inter * jnp.einsum("bthp,bhp->bth", qi, n_h))
+        denom = jnp.maximum(jnp.abs(n_t), jnp.exp(-(cumf + hmax)))
+        y = (num / denom[..., None]).astype(vi.dtype)
+        # ---- state to end of chunk
+        F = cumf[:, -1]                                         # (B,H)
+        m_loc = jnp.max(g, axis=1)                              # (B,H)
+        Mx = jnp.maximum(M, m_loc)
+        gexp = jnp.exp(g - Mx[:, None]).astype(ki.dtype)
+        T = jnp.einsum("bsh,bshp,bshq->bhpq", gexp, ki, vi,
+                       preferred_element_type=jnp.float32)
+        Tn = jnp.einsum("bsh,bshp->bhp", gexp, ki,
+                        preferred_element_type=jnp.float32)
+        S_new = jnp.exp(M - Mx)[..., None, None] * S_h + T
+        n_new = jnp.exp(M - Mx)[..., None] * n_h + Tn
+        return {"C": S_new, "n": n_new, "m": F + Mx}, y
+
+    final, ys = jax.lax.scan(jax.checkpoint(chunk_step), state,
+                             (qc, kc, vc, ic, fc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H * P)[:, :S]
+    y = (y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6)
+         * p["norm"]["scale"]).astype(dtype)
+    out = dense(p["w_out"], y, cfg.param, dtype, use_pallas)
+    if return_state:
+        return out, final
+    return out
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int):
+    H, P = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),   # matrix memory (k ⊗ v)
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),   # stabilizer
+    }
+
+
+def mlstm_decode_step(p: Dict, x: jax.Array, cfg: ArchConfig, state: Dict,
+                      dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    B = x.shape[0]
+    H, P = mlstm_dims(cfg)
+    q = dense(p["w_q"], x, cfg.param, dtype).reshape(B, H, P).astype(jnp.float32)
+    k = dense(p["w_k"], x, cfg.param, dtype).reshape(B, H, P).astype(jnp.float32)
+    v = dense(p["w_v"], x, cfg.param, dtype).reshape(B, H, P).astype(jnp.float32)
+    gates = x[:, 0].astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_g, f_g = gates[..., :H], gates[..., H:]
+    logf = -jax.nn.softplus(-f_g)
+
+    m_new = jnp.maximum(logf + state["m"], i_g)
+    fs = jnp.exp(logf + state["m"] - m_new)[..., None]
+    is_ = jnp.exp(i_g - m_new)[..., None]
+    q_ = q / (P ** 0.5)  # same convention as the chunked form (k stored raw)
+    C = fs[..., None] * state["C"] + is_[..., None] * jnp.einsum("bhp,bhq->bhpq", k, v)
+    n = fs * state["n"] + is_ * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q_)), jnp.exp(-m_new))
+    y = jnp.einsum("bhpq,bhp->bhq", C, q_) / denom[..., None]
+    yf = y.reshape(B, 1, H * P)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+         * p["norm"]["scale"]).astype(dtype)
+    out = dense(p["w_out"], y, cfg.param, dtype)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ------------------------------------------------------------------- sLSTM
+
+def init_slstm(key: jax.Array, cfg: ArchConfig) -> Dict:
+    d = cfg.d_model
+    H, P = mlstm_dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        # 4 gates (i, f, z, o) from input; recurrent mixing is per-head
+        "w_in": init_dense(ks[0], d, 4 * H * P, cfg.param),
+        "r": jax.random.normal(ks[1], (H, P, 4 * P), jnp.float32) * (1.0 / P) ** 0.5,
+        "w_out": init_dense(ks[2], H * P, d, cfg.param),
+        "b": jnp.zeros((4 * H * P,), jnp.float32),
+        "norm": {"scale": jnp.ones((H * P,), jnp.float32)},
+    }
+
+
+def slstm_forward(p: Dict, x: jax.Array, cfg: ArchConfig, *, dtype=jnp.bfloat16,
+                  use_pallas: bool = False, state=None, return_state: bool = False,
+                  bptt_chunk: int = 64):
+    """Sequential sLSTM over time.
+
+    BPTT memory: a flat 4096-step scan saves a carry per step. We nest
+    two scans (sqrt schedule): the outer scan over S/chunk chunks saves
+    only chunk-boundary carries; the checkpointed inner chunk recomputes
+    its steps during backward — peak residency O(S/chunk + chunk)
+    carries instead of O(S)."""
+    B, S, d = x.shape
+    H, P = mlstm_dims(cfg)
+    zin = (dense(p["w_in"], x, cfg.param, dtype, use_pallas)
+           + p["b"].astype(dtype)).reshape(B, S, H, 4 * P)
+
+    if state is None:
+        state = init_slstm_state(cfg, B)
+
+    def step(carry, z_t):
+        c, n, h, m = carry["c"], carry["n"], carry["h"], carry["m"]
+        rec = jnp.einsum("bhp,hpq->bhq", h, p["r"])             # (B,H,4P)
+        g = z_t.astype(jnp.float32) + rec
+        i_t, f_t, z_raw, o_t = jnp.split(g, 4, axis=-1)         # (B,H,P) each
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_e = jnp.exp(i_t - m_new)
+        f_e = jnp.exp(f_t + m - m_new)
+        c = f_e * c + i_e * jnp.tanh(z_raw)
+        n = f_e * n + i_e
+        h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+        new = {"c": c, "n": n, "h": h, "m": m_new}
+        return new, h.astype(z_t.dtype)
+
+    C = min(bptt_chunk, S)
+    nc = (S + C - 1) // C
+    Sp = nc * C
+    zt = jnp.moveaxis(zin, 1, 0)                                # (S,B,H,4P)
+    if Sp != S:  # pad: i=-inf (no input), f=+inf (keep state), o=-inf
+        padrow = jnp.zeros((Sp - S, B, H, 4 * P), zt.dtype)
+        padrow = padrow.at[..., :P].set(-1e30 if padrow.dtype == jnp.float32
+                                        else -3e38)             # i gate
+        padrow = padrow.at[..., P:2 * P].set(30.0)              # f gate
+        zt = jnp.concatenate([zt, padrow], axis=0)
+    zc = zt.reshape(nc, C, B, H, 4 * P)
+
+    @jax.checkpoint
+    def chunk(carry, z_chunk):
+        return jax.lax.scan(step, carry, z_chunk)
+
+    final, hs = jax.lax.scan(chunk, state, zc)
+    y = jnp.moveaxis(hs.reshape(Sp, B, H, P)[:S], 0, 1).reshape(B, S, H * P)
+    y = (y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + 1e-6)
+         * p["norm"]["scale"]).astype(dtype)
+    out = dense(p["w_out"], y, cfg.param, dtype, use_pallas)
+    if return_state:
+        return out, final
+    return out
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int):
+    H, P = mlstm_dims(cfg)
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, H, P), -30.0, jnp.float32)}
+
+
+def slstm_decode_step(p: Dict, x: jax.Array, cfg: ArchConfig, state: Dict,
+                      dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict]:
+    out, new_state = slstm_forward(p, x, cfg, dtype=dtype, state=state, return_state=True)
+    return out, new_state

@@ -1,0 +1,23 @@
+"""Optimizers from scratch (no optax in this environment).
+
+(init_fn, update_fn) pairs over pytrees, optax-style:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    adamw,
+    apply_updates,
+    chain_clip,
+    global_norm,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_decay, exponential_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer", "adam", "adamw", "apply_updates", "chain_clip",
+    "global_norm", "sgd", "constant", "cosine_decay", "exponential_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,110 @@
+"""SGD / Adam / AdamW over pytrees, with global-norm clipping.
+
+Schedules are callables step -> lr; pass a float for a constant rate.
+States are pytrees with the same structure as params (jit/pjit-safe;
+sharding rules applied to params apply transparently to moments).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr(schedule: Schedule, step: jax.Array) -> jax.Array:
+    if callable(schedule):
+        return schedule(step)
+    return jnp.asarray(schedule, jnp.float32)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Any:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree)
+
+
+def sgd(lr: Schedule, momentum: float = 0.0, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mu": jax.tree.map(jnp.zeros_like, params),
+                    "step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        rate = _lr(lr, step)
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            upd_src = (jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+                       if nesterov else mu)
+            updates = jax.tree.map(lambda m: -rate * m, upd_src)
+            return updates, {"mu": mu, "step": step}
+        updates = jax.tree.map(lambda g: -rate * g, grads)
+        return updates, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": z, "v": jax.tree.map(jnp.zeros_like, z),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        rate = _lr(lr, step)
+        grads32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads32)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -(rate * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps))
+            if weight_decay:
+                u = u - rate * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def chain_clip(opt: Optimizer, max_norm: Optional[float]) -> Optimizer:
+    if not max_norm:
+        return opt
+
+    def update(grads, state, params):
+        return opt.update(clip_by_global_norm(grads, max_norm), state, params)
+
+    return Optimizer(opt.init, update)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

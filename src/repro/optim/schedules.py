@@ -1,0 +1,33 @@
+"""Learning-rate schedules (step -> lr callables)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def exponential_decay(lr: float, decay: float, every: int = 1):
+    """Paper's per-round decay: eta_t = eta * tau^t (tau ~ 0.992)."""
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32) * decay ** (step.astype(jnp.float32) / every)
+    return fn
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr, jnp.float32) * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        t = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr, jnp.float32) * jnp.where(s < warmup, warm, cos)
+    return fn

@@ -1,0 +1,11 @@
+# Intentionally minimal. Do NOT set --xla_force_host_platform_device_count
+# here: smoke tests and benchmarks must see the real (single) device.
+# Multi-device behaviour is tested via subprocesses in test_distributed.py
+# and by repro.launch.dryrun (which sets its own XLA_FLAGS before jax init).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _seed_numpy():
+    np.random.seed(0)

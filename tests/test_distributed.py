@@ -1,0 +1,177 @@
+"""Distributed runtime tests — run in subprocesses with 8 forced host
+devices (device count is locked at first jax init, so in-process tests
+can't change it)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.collectives import (
+    plan_buckets,
+    powersgd_compress,
+    powersgd_decompress,
+    powersgd_init,
+)
+from repro.distributed.fedpod import sync_mask
+from repro.analysis import hlo
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(body: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_powersgd_error_feedback_bounded():
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (64, 32))
+    st = powersgd_init(g.shape, 4, key)
+    sent = jnp.zeros_like(g)
+    for _ in range(30):
+        p, q, st = powersgd_compress(g, st)
+        sent = sent + powersgd_decompress(p, q)
+    rel = float(jnp.linalg.norm(sent - 30 * g) / jnp.linalg.norm(30 * g))
+    assert rel < 0.5  # cumulative transmitted ~ cumulative gradient
+    # full-rank compression is exact
+    st2 = powersgd_init(g.shape, 32, key)
+    p, q, st2 = powersgd_compress(g, st2)
+    assert float(jnp.linalg.norm(powersgd_decompress(p, q) - g)) < 1e-3
+
+
+def test_bucket_plan_respects_size():
+    tree = {f"w{i}": jnp.zeros((1024,)) for i in range(10)}  # 4KB each
+    buckets = plan_buckets(tree, bucket_bytes=8192)
+    assert all(len(b) <= 2 for b in buckets)
+    assert sum(len(b) for b in buckets) == 10
+
+
+def test_sync_mask_keeps_embeddings_local():
+    params = {"embed": {"w": jnp.zeros((8, 4))},
+              "layers": {"wq": {"x1": jnp.zeros((4, 2))}},
+              "unembed": {"w": jnp.zeros((4, 8))}}
+    mask = sync_mask(params, "factors")
+    assert mask["embed"]["w"] is False
+    assert mask["unembed"]["w"] is False
+    assert mask["layers"]["wq"]["x1"] is True
+    mask_full = sync_mask(params, "full")
+    assert all(jax.tree.leaves(mask_full))
+
+
+def test_fedpod_round_semantics():
+    """2 pods diverge during local steps; after FedAvg the synced leaves
+    are equal across pods and equal to the mean, embeddings stay local."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.distributed.fedpod import make_fed_round, stack_for_pods, sync_mask
+        from repro.optim import sgd
+
+        def loss_fn(params, batch):
+            h = batch['x'] @ params['wq']['x1']
+            h = h @ params['embed']['w']
+            return jnp.mean((h - batch['y'])**2)
+
+        params = {'wq': {'x1': jnp.ones((4, 3))},
+                  'embed': {'w': jnp.ones((3, 2)) * 0.5}}
+        opt = sgd(0.05)
+        mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4, 1),
+                    ('pod', 'data', 'model'))
+        stacked = stack_for_pods(params, 2)
+        opt_state = jax.tree.map(lambda a: jnp.stack([a, a]),
+                                 opt.init(params))
+        K, B = 3, 8
+        key = jax.random.PRNGKey(0)
+        batches = {'x': jax.random.normal(key, (2, K, B, 4)),
+                   'y': jax.random.normal(key, (2, K, B, 2))}
+        step = make_fed_round(loss_fn, opt, local_steps=K, sync='factors')
+        with mesh:
+            new_params, opt_state, loss = jax.jit(step)(stacked, opt_state, batches)
+        x1 = np.asarray(new_params['wq']['x1'])
+        emb = np.asarray(new_params['embed']['w'])
+        assert np.allclose(x1[0], x1[1]), 'factors must be pod-synced'
+        assert not np.allclose(emb[0], emb[1]), 'embeddings stay pod-local'
+        print('OK', float(loss))
+    """)
+
+
+def test_quick_dryrun_cell_via_subprocess():
+    """End-to-end dryrun machinery on a small mesh (8 devices)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-125m",
+         "--shape", "decode_32k", "--mesh", "multi", "--quick",
+         "--skip-cost", "--out", "/tmp/dryrun_pytest"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    import json
+    art = json.load(open("/tmp/dryrun_pytest/xlstm-125m_decode_32k_multi.json"))
+    assert "memory" in art and art["memory"]["argument_bytes"] > 0
+
+
+def test_bucketed_pmean_subprocess():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.distributed.collectives import bucketed_pmean
+        mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4),
+                    ('pod', 'data'))
+        tree = {'a': jnp.arange(8.0), 'b': jnp.ones((3, 3))}
+        with mesh:
+            out = jax.jit(lambda t: bucketed_pmean(t, mesh, 'pod'))(tree)
+        np.testing.assert_allclose(np.asarray(out['a']), np.arange(8.0))
+        print('OK')
+    """)
+
+
+# ---------------------------------------------------------------- HLO parse
+
+SAMPLE_HLO = """
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ar = f32[16,128]{1,0} all-reduce(%p0), replica_groups={{0,1},{2,3}}, to_apply=%add
+  %ag = bf16[16,512]{1,0} all-gather(%agin), dimensions={1}, replica_groups=[2,4]<=[8]
+  %agin = bf16[16,128]{1,0} parameter(1)
+  %rs = f32[4,32]{1,0} reduce-scatter(%p0), dimensions={1}, replica_groups={{0,1,2,3}}
+  %cp = f32[8]{0} collective-permute(%cpi), source_target_pairs={{0,1},{1,0}}
+  %cpi = f32[8]{0} parameter(2)
+"""
+
+
+def test_collective_stats_operand_accounting():
+    st = hlo.collective_stats(SAMPLE_HLO, pod_size=0)
+    # all-reduce operand = 16*128*4 = 8192
+    assert st["all-reduce:intra_pod"]["bytes"] == 8192
+    # all-gather operand resolved through defs: bf16 16*128*2 = 4096
+    assert st["all-gather:intra_pod"]["bytes"] == 4096
+    # reduce-scatter operand = full f32 input 8192
+    assert st["reduce-scatter:intra_pod"]["bytes"] == 8192
+    assert st["collective-permute:intra_pod"]["bytes"] == 32
+    assert st["total"]["count"] == 4
+
+
+def test_replica_group_formats_and_domain():
+    groups = hlo.parse_replica_groups("[2,4]<=[8]")
+    assert groups == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    gt = hlo.parse_replica_groups("[4,2]<=[2,4]T(1,0)")
+    assert gt == [[0, 4], [1, 5], [2, 6], [3, 7]]
+    assert hlo.classify_domain([[0, 4]], pod_size=4) == "cross_pod"
+    assert hlo.classify_domain([[0, 1, 2, 3]], pod_size=4) == "intra_pod"
+
+
+def test_extrapolation_linear():
+    u1 = {"total": {"bytes": 10, "ring_bytes": 5.0, "count": 2}}
+    u2 = {"total": {"bytes": 16, "ring_bytes": 8.0, "count": 3}}
+    out = hlo.extrapolate(u1, u2, periods=10)
+    assert out["total"]["bytes"] == 10 + 9 * 6
+    assert out["total"]["count"] == 2 + 9 * 1

@@ -1,0 +1,47 @@
+"""Elastic scaling: mesh planning + checkpoint reshard across meshes
+(subprocess with 8 forced devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.launch.elastic import plan_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_plan_mesh_shapes():
+    assert plan_mesh(512, pods=2) == ((2, 16, 16), ("pod", "data", "model"))
+    assert plan_mesh(256) == ((16, 16), ("data", "model"))
+    assert plan_mesh(64) == ((4, 16), ("data", "model"))
+    assert plan_mesh(8, tp=4) == ((2, 4), ("data", "model"))
+
+
+def test_restore_across_mesh_sizes():
+    """Save on a (2,4) mesh, restore onto (4,2) — elasticity end-to-end."""
+    body = """
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.checkpoint import CheckpointManager
+
+        devs = jax.devices()
+        mesh_a = Mesh(np.array(devs).reshape(2, 4), ('data', 'model'))
+        mesh_b = Mesh(np.array(devs).reshape(4, 2), ('data', 'model'))
+        w = jnp.arange(64.0).reshape(8, 8)
+        wa = jax.device_put(w, NamedSharding(mesh_a, P('data', 'model')))
+        d = tempfile.mkdtemp()
+        cm = CheckpointManager(d)
+        cm.save(1, {'w': wa})
+        got, _ = cm.restore(1, {'w': w},
+                            shardings={'w': NamedSharding(mesh_b, P('data', 'model'))})
+        np.testing.assert_array_equal(np.asarray(got['w']), np.asarray(w))
+        assert got['w'].sharding.mesh.shape['data'] == 4
+        print('OK')
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

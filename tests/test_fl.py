@@ -1,0 +1,143 @@
+"""FL runtime tests: strategies, pFedPara split/merge, comm accounting,
+quantization, straggler/dropout fault tolerance."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ParamCfg
+from repro.data import dirichlet_partition, make_image_dataset, train_test_split
+from repro.fl import (
+    ClientConfig,
+    FLServer,
+    ServerConfig,
+    make_strategy,
+    merge_pfedpara,
+    split_pfedpara,
+)
+from repro.fl import comm
+from repro.nn import recurrent as rec
+
+
+@pytest.fixture(scope="module")
+def task():
+    ds = make_image_dataset(2000, 10, size=16, channels=1, noise=0.3)
+    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+    tr, te = train_test_split(data)
+    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=0.3,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
+    parts = dirichlet_partition(tr["y"], 12, 0.5)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    def eval_fn(p):
+        return float(rec.mlp_accuracy(p, cfg, {"x": te["x"][:300],
+                                               "y": te["y"][:300]}))
+
+    return dict(tr=tr, cfg=cfg, params=params, parts=parts,
+                loss_fn=loss_fn, eval_fn=eval_fn)
+
+
+@pytest.mark.parametrize("strategy", ["fedavg", "fedprox", "scaffold",
+                                      "feddyn", "fedadam"])
+def test_strategies_learn(task, strategy):
+    srv = FLServer(task["loss_fn"], task["params"], task["tr"], task["parts"],
+                   make_strategy(strategy),
+                   ClientConfig(lr=0.1, batch=32, epochs=2),
+                   ServerConfig(clients=12, participation=0.5, rounds=4),
+                   eval_fn=task["eval_fn"])
+    hist = srv.run()
+    assert hist[-1]["eval"] > hist[0]["eval"]
+    assert hist[-1]["eval"] > 0.35  # well above 0.1 chance after 4 rounds
+
+
+def test_pfedpara_split_merge_roundtrip(task):
+    cfg = task["cfg"]
+    p = rec.init_mlp_model(jax.random.PRNGKey(1),
+                           rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                                         param=ParamCfg(kind="pfedpara", gamma=0.5,
+                                                        min_dim_for_factorization=8)))
+    g, l = split_pfedpara(p)
+    # the transferred half carries no x2/y2 leaves
+    def keys(tree, acc=()):
+        out = []
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out += keys(v, acc + (k,))
+            else:
+                out.append(acc + (k,))
+        return out
+    assert not any(k[-1] in ("x2", "y2") for k in keys(g))
+    assert all(k[-1] in ("x2", "y2") for k in keys(l))
+    merged = merge_pfedpara(g, l)
+    for (ka, va), (kb, vb) in zip(
+            sorted(jax.tree_util.tree_flatten_with_path(p)[0], key=str),
+            sorted(jax.tree_util.tree_flatten_with_path(merged)[0], key=str)):
+        assert str(ka) == str(kb)
+        np.testing.assert_array_equal(va, vb)
+    # payload halves (paper: "only a half of each layer's parameters")
+    from repro.core.parameterization import num_params
+    factor_total = sum(num_params(v) for v in [p["fc1"], p["fc2"]])
+    factor_global = sum(num_params(v) for v in [g["fc1"], g["fc2"]])
+    assert abs(factor_global - factor_total / 2) < 2
+
+
+def test_comm_accounting_matches_paper_formula(task):
+    srv = FLServer(task["loss_fn"], task["params"], task["tr"], task["parts"],
+                   make_strategy("fedavg"),
+                   ClientConfig(lr=0.05, batch=32, epochs=1),
+                   ServerConfig(clients=12, participation=0.5, rounds=2))
+    srv.run()
+    from repro.core.parameterization import num_params
+    expected = 2 * 6 * num_params(task["params"]) * 4 * 2  # 2 dirs x 6 cl x 2 rounds
+    assert abs(srv.comm_log.up_bytes + srv.comm_log.down_bytes - expected) < 0.01 * expected
+
+
+def test_quantization_roundtrip():
+    key = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(key, (64, 32)), "b": jax.random.normal(key, (7,))}
+    q = comm.quantize_int8(tree, key)
+    deq = comm.dequantize_int8(q)
+    for k in tree:
+        err = float(jnp.abs(deq[k] - tree[k]).max())
+        scale = float(jnp.abs(tree[k]).max())
+        assert err < scale / 64  # int8 grid
+    assert comm.quantized_bytes(tree, "int8") < comm.quantized_bytes(tree, "fp32") / 3.5
+
+
+def test_straggler_and_dropout_fault_tolerance(task):
+    srv = FLServer(task["loss_fn"], task["params"], task["tr"], task["parts"],
+                   make_strategy("fedavg"),
+                   ClientConfig(lr=0.05, batch=32, epochs=1),
+                   ServerConfig(clients=12, participation=0.5, rounds=3,
+                                oversample=0.5, deadline_quantile=0.5,
+                                dropout_prob=0.3, seed=3))
+    hist = srv.run()
+    assert len(hist) == 3  # no crash despite drops
+    for rec_ in hist:
+        assert rec_["participants"] <= 6
+
+
+def test_total_dropout_skips_round(task):
+    srv = FLServer(task["loss_fn"], task["params"], task["tr"], task["parts"],
+                   make_strategy("fedavg"),
+                   ClientConfig(lr=0.05, batch=32, epochs=1),
+                   ServerConfig(clients=12, participation=0.5, rounds=1,
+                                dropout_prob=1.0))
+    rec_ = srv.run_round()
+    assert rec_.get("skipped") and rec_["participants"] == 0
+
+
+def test_fedpaq_uplink_quantization_runs(task):
+    srv = FLServer(task["loss_fn"], task["params"], task["tr"], task["parts"],
+                   make_strategy("fedavg"),
+                   ClientConfig(lr=0.05, batch=32, epochs=1),
+                   ServerConfig(clients=12, participation=0.5, rounds=2,
+                                uplink_quant="int8"), eval_fn=task["eval_fn"])
+    hist = srv.run()
+    assert np.isfinite(hist[-1]["mean_loss"])

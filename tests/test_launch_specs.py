@@ -1,0 +1,84 @@
+"""Launch-layer unit tests that don't need a big mesh: input specs,
+partition rules, period extrapolation config math."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED, SHAPES, get_arch
+from repro.distributed.sharding import AxisRules, param_spec, tree_param_specs
+from repro.launch import specs as specs_mod
+from repro.launch.dryrun import arch_period, with_periods
+from repro.nn.transformer import ModelOptions, build_model
+
+
+def test_batch_specs_all_cells_defined():
+    for arch in ASSIGNED:
+        cfg = get_arch(arch)
+        for sname, shape in SHAPES.items():
+            bs = specs_mod.batch_specs(cfg, shape)
+            if shape.kind == "train":
+                assert bs["tokens"].shape == (shape.global_batch,
+                                              shape.seq_len + 1)
+            elif shape.kind == "prefill":
+                assert bs["tokens"].shape == (shape.global_batch, shape.seq_len)
+            else:
+                assert bs["token"].shape == (shape.global_batch, 1)
+            if cfg.is_encdec and shape.kind != "decode":
+                assert bs["frames"].shape[1] == cfg.encoder_seq
+
+
+def test_param_rules_paths():
+    rules = AxisRules(None)  # no mesh: divisibility check passes axes thru? -> None
+    # with no mesh all sizes are 1 -> spec falls back to None everywhere,
+    # so test the PATH matching with a fake mesh via direct rule table
+    from repro.distributed.sharding import _param_rules
+
+    table = _param_rules()
+
+    def logical_for(path):
+        for rx, axes in table:
+            if rx.search(path):
+                return axes
+        return None
+
+    assert logical_for("layers/attn/wq/x1") == ("fsdp2", None)
+    assert logical_for("layers/attn/wq/y2") == ("tp2", None)
+    assert logical_for("layers/attn/wo/x1") == ("tp2", None)
+    assert logical_for("layers/mlp/w_down/y1") == ("fsdp2", None)
+    assert logical_for("layers/moe/experts/w_gate/x1") == ("experts", "fsdp2", None)
+    assert logical_for("embed/w") == ("embed_vocab", "tp")
+    assert logical_for("unembed/w") == ("embed", "vocab")
+    assert logical_for("layers/attn/wq/w") == ("fsdp", "tp")
+    assert logical_for("layers/attn/wq/w_q") == ("fsdp", "tp")
+    assert logical_for("final_norm/scale") is None
+
+
+def test_period_config_math():
+    for arch, period in [("llama3-405b", 1), ("gemma3-12b", 6),
+                         ("zamba2-2.7b", 6), ("xlstm-125m", 4),
+                         ("whisper-small", 1)]:
+        cfg = get_arch(arch)
+        assert arch_period(cfg) == period
+        assert cfg.n_layers % period == 0
+        c2 = with_periods(cfg, 2)
+        assert c2.n_layers == 2 * period
+        if cfg.encoder_layers:
+            assert c2.encoder_layers == 2
+
+
+def test_long500k_gate_matches_design():
+    runs = {a for a in ASSIGNED if get_arch(a).subquadratic}
+    assert runs == {"mixtral-8x22b", "gemma3-12b", "zamba2-2.7b", "xlstm-125m"}
+
+
+def test_cache_specs_structure():
+    cfg = get_arch("qwen3-8b").reduced()
+    model = build_model(cfg, ModelOptions())
+    cache = jax.eval_shape(lambda: model.init_cache(4, 64))
+    rules = AxisRules(None)
+    specs = specs_mod.cache_partition_specs(cfg, cache, rules)
+    flat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert all(isinstance(s, P) for s in flat)
+    assert jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P)) \
+        == jax.tree.structure(cache)

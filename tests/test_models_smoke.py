@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests (deliverable f): reduced config of the
+same family, one forward/train step on CPU, asserting output shapes and
+finiteness — plus decode-vs-prefill consistency for every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_arch
+from repro.nn.transformer import ModelOptions, build_model
+from repro.optim import adamw, apply_updates
+
+OPTS = ModelOptions(attn_chunk=8, ssm_chunk=8, logit_chunk=16, dtype=jnp.float32)
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {"tokens": jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)}
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_train_step_smoke(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, OPTS)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), arch
+    assert float(loss) < 2.0 * np.log(cfg.vocab_size)
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf).all()), arch
+    opt = adamw(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    new_params = apply_updates(params, updates)
+    loss2 = model.loss(new_params, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_matches_prefill(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, OPTS)
+    key = jax.random.PRNGKey(1)
+    params = model.init_params(key)
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(B, 64)
+    if cfg.is_encdec:
+        frames = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+        cache, logits_pre = model.prefill(params, {"frames": frames,
+                                                   "tokens": tokens}, cache)
+    else:
+        cache, logits_pre = model.prefill(params, tokens, cache)
+    assert logits_pre.shape == (B, cfg.vocab_size)
+    nxt = jnp.argmax(logits_pre, -1)[:, None]
+    logits_dec, cache = model.decode_step(params, cache, nxt, jnp.int32(S))
+    assert logits_dec.shape == (B, cfg.vocab_size)
+
+    tokens2 = jnp.concatenate([tokens, nxt], 1)
+    cache2 = model.init_cache(B, 64)
+    if cfg.is_encdec:
+        _, logits_ref = model.prefill(params, {"frames": frames,
+                                               "tokens": tokens2}, cache2)
+    else:
+        _, logits_ref = model.prefill(params, tokens2, cache2)
+    scale = float(jnp.abs(logits_ref).max()) + 1e-9
+    assert float(jnp.abs(logits_dec - logits_ref).max()) / scale < 2e-3, arch
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x22b", "zamba2-2.7b",
+                                  "xlstm-125m"])
+def test_precompose_equivalence(arch):
+    """Serving with pre-composed dense weights == serving with factors."""
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg, OPTS)
+    key = jax.random.PRNGKey(2)
+    params = model.init_params(key)
+    composed = model.precompose(params)
+    tokens = jax.random.randint(key, (2, 12), 0, cfg.vocab_size)
+    c1, l1 = model.prefill(params, tokens, model.init_cache(2, 32))
+    c2, l2 = model.prefill(composed, tokens, model.init_cache(2, 32))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_gemma_local_global_pattern():
+    cfg = get_arch("gemma3-12b").reduced()
+    model = build_model(cfg, OPTS)
+    w = np.asarray(model.layer_windows(0))
+    assert (w == 0).sum() == cfg.n_layers // cfg.local_global_period
+    assert all(x in (0, cfg.local_window) for x in w)
+
+
+def test_sliding_window_cache_is_ring():
+    """mixtral: decode cache allocates window slots, not the full seq."""
+    cfg = get_arch("mixtral-8x22b").reduced()
+    model = build_model(cfg, OPTS)
+    cache = model.init_cache(2, 4096)
+    assert cache["k"].shape[2] == cfg.sliding_window
+
+
+def test_scan_vs_unrolled_equivalence():
+    """scan_layers=False (dry-run cost variants) must compute the same
+    function as the scanned model."""
+    cfg = get_arch("qwen3-8b").reduced()
+    key = jax.random.PRNGKey(3)
+    m_scan = build_model(cfg, OPTS)
+    m_unroll = build_model(cfg, ModelOptions(attn_chunk=8, ssm_chunk=8,
+                                             logit_chunk=16, dtype=jnp.float32,
+                                             scan_layers=False))
+    params = m_scan.init_params(key)
+    batch = _batch(cfg, key)
+    l1 = m_scan.loss(params, batch)
+    l2 = m_unroll.loss(params, batch)
+    assert abs(float(l1) - float(l2)) < 1e-4
+
+
+def test_int8_kv_cache_decode_close():
+    """§Perf B2: int8 KV cache decode stays within ~2% of the bf16 cache."""
+    cfg = get_arch("qwen3-8b").reduced()
+    m8 = build_model(cfg, ModelOptions(attn_chunk=8, ssm_chunk=8,
+                                       logit_chunk=16, dtype=jnp.float32,
+                                       int8_kv=True))
+    m = build_model(cfg, OPTS)
+    key = jax.random.PRNGKey(4)
+    params = m.init_params(key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    c8, l8 = m8.prefill(params, tokens, m8.init_cache(2, 64))
+    c, l = m.prefill(params, tokens, m.init_cache(2, 64))
+    assert c8["k_q"].dtype == jnp.int8
+    nxt = jnp.argmax(l8, -1)[:, None]
+    d8, _ = m8.decode_step(params, c8, nxt, jnp.int32(16))
+    d, _ = m.decode_step(params, c, nxt, jnp.int32(16))
+    rel = float(jnp.abs(d8 - d).max() / (jnp.abs(d).max() + 1e-9))
+    assert rel < 0.05, rel

@@ -1,0 +1,139 @@
+"""Property tests for the paper's propositions (hypothesis + numpy).
+
+Prop 1: rank(W) <= r1*r2 for W = (X1Y1t) o (X2Y2t).
+Prop 2: r1 = r2 = R uniquely minimizes (r1+r2)(m+n) s.t. r1 r2 >= R^2.
+Cor 1:  R^2 >= min(m,n) iff full rank achievable; r_min = ceil(sqrt(min)).
+Prop 3: rank of the 1st unfolding of the conv kernel <= R^2.
+Fig 6:  random FedPara at r_min spans full rank (100% of trials).
+Table 1: exact parameter counts.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    compose_conv_fedpara,
+    compose_fedpara,
+    compose_lowrank,
+    init_conv,
+    init_fedpara,
+    init_lowrank,
+    rank_policy,
+)
+
+DIM = st.integers(min_value=4, max_value=96)
+RANK = st.integers(min_value=1, max_value=8)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=DIM, n=DIM, r1=RANK, r2=RANK, seed=st.integers(0, 2**30))
+def test_prop1_rank_bound(m, n, r1, r2, seed):
+    rng = np.random.RandomState(seed)
+    x1, y1 = rng.randn(m, r1), rng.randn(n, r1)
+    x2, y2 = rng.randn(m, r2), rng.randn(n, r2)
+    w = (x1 @ y1.T) * (x2 @ y2.T)
+    assert np.linalg.matrix_rank(w) <= min(r1 * r2, m, n)
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=DIM, n=DIM, big_r=st.integers(1, 12))
+def test_prop2_unique_optimum(m, n, big_r):
+    """Exhaustively verify r1=r2=R is the unique integral minimizer."""
+    best = 2 * big_r * (m + n)
+    for r1 in range(1, 3 * big_r + 1):
+        for r2 in range(1, 3 * big_r + 1):
+            if r1 * r2 >= big_r * big_r and (r1, r2) != (big_r, big_r):
+                assert (r1 + r2) * (m + n) >= best
+                if (r1 + r2) * (m + n) == best:
+                    # ties only possible when r1+r2 == 2R with r1r2 >= R^2
+                    # => AM-GM forces r1 == r2 == R: contradiction
+                    assert r1 + r2 > 2 * big_r
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIM, n=DIM)
+def test_corollary1_rmin(m, n):
+    rmin = rank_policy.matrix_rmin(m, n)
+    assert rmin * rmin >= min(m, n)
+    assert (rmin - 1) * (rmin - 1) < min(m, n) or rmin == 1
+    assert rmin == math.isqrt(min(m, n) - 1) + 1 if min(m, n) > 1 else rmin == 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(o=st.integers(4, 32), i=st.integers(4, 32), r=st.integers(1, 5),
+       seed=st.integers(0, 2**30))
+def test_prop3_conv_unfolding_rank(o, i, r, seed):
+    rng = np.random.RandomState(seed)
+    t1, t2 = rng.randn(r, r, 3, 3), rng.randn(r, r, 3, 3)
+    x1, x2 = rng.randn(o, r), rng.randn(o, r)
+    y1, y2 = rng.randn(i, r), rng.randn(i, r)
+    w1 = np.einsum("oa,ib,abhw->oihw", x1, y1, t1)
+    w2 = np.einsum("oa,ib,abhw->oihw", x2, y2, t2)
+    w = w1 * w2
+    unfold1 = w.reshape(o, -1)                       # 1st unfolding
+    unfold2 = np.moveaxis(w, 1, 0).reshape(i, -1)    # 2nd unfolding
+    assert np.linalg.matrix_rank(unfold1) <= r * r
+    assert np.linalg.matrix_rank(unfold2) <= r * r
+
+
+def test_fig6_full_rank_sampling():
+    """Paper Fig. 6: W in R^{100x100} with r1=r2=10 achieves rank 100 in
+    every one of (here) 100 random trials."""
+    m = n = 100
+    rmin = rank_policy.matrix_rmin(m, n)
+    assert rmin == 10
+    rng = np.random.RandomState(0)
+    for _ in range(100):
+        x1, y1 = rng.randn(m, rmin), rng.randn(n, rmin)
+        x2, y2 = rng.randn(m, rmin), rng.randn(n, rmin)
+        w = (x1 @ y1.T) * (x2 @ y2.T)
+        assert np.linalg.matrix_rank(w) == 100
+
+
+def test_table1_exact_counts():
+    """Table 1 reference example: m=n=O=I=256, K=3, R=16."""
+    assert 256 * 256 == 65536                                   # FC original
+    assert rank_policy.matrix_param_count(256, 256, 16) == 16384  # FC FedPara
+    assert rank_policy.conv_param_count(256, 256, 3, 3, 16) == 20992   # Prop 3
+    assert rank_policy.conv_reshape_param_count(256, 256, 3, 3, 16) == 81920  # Prop 1
+    assert 256 * 256 * 9 == 589824                              # conv original
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(32, 256), n=st.integers(32, 256))
+def test_gamma_interpolation_monotone(m, n):
+    rs = [rank_policy.matrix_rank_for_gamma(m, n, g) for g in (0.0, 0.3, 0.6, 1.0)]
+    assert rs == sorted(rs)
+    assert rs[0] == rank_policy.matrix_rmin(m, n)
+    assert rs[-1] == rank_policy.matrix_rmax(m, n)
+    # parameter parity: r_max keeps us at or under the dense count
+    assert rank_policy.matrix_param_count(m, n, rs[-1]) <= m * n
+
+
+def test_init_variance_matches_he():
+    key = jax.random.PRNGKey(0)
+    m = n = 512
+    r = rank_policy.matrix_rmin(m, n)
+    w = compose_fedpara(init_fedpara(key, m, n, r))
+    assert abs(float(w.var()) - 2.0 / m) < 0.3 * (2.0 / m)
+    wl = compose_lowrank(init_lowrank(key, m, n, 2 * r))
+    assert abs(float(wl.var()) - 2.0 / m) < 0.3 * (2.0 / m)
+    pc = init_conv(key, 128, 128, 3, 3, kind="fedpara", gamma=0.0)
+    wc = compose_conv_fedpara(pc)
+    tgt = 2.0 / (128 * 9)
+    assert abs(float(wc.var()) - tgt) < 0.35 * tgt
+
+
+def test_fedpara_beats_lowrank_rank_at_parity():
+    """Same parameter count: FedPara max rank R^2 vs low-rank 2R (Fig 1)."""
+    m = n = 256
+    r = 16
+    rng = np.random.RandomState(1)
+    w_fp = (rng.randn(m, r) @ rng.randn(n, r).T) * (rng.randn(m, r) @ rng.randn(n, r).T)
+    w_lr = rng.randn(m, 2 * r) @ rng.randn(n, 2 * r).T
+    assert np.linalg.matrix_rank(w_fp) == min(r * r, m)  # full 256
+    assert np.linalg.matrix_rank(w_lr) == 2 * r          # stuck at 32

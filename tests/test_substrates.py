@@ -1,0 +1,152 @@
+"""Optimizers, schedules, data pipeline, checkpoint manager."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.data import (
+    ShardedBatcher,
+    dirichlet_partition,
+    iid_partition,
+    make_char_corpus,
+    make_image_dataset,
+    two_class_partition,
+)
+from repro.data.partition import partition_stats
+from repro.optim import (
+    adam,
+    adamw,
+    apply_updates,
+    chain_clip,
+    cosine_decay,
+    exponential_decay,
+    global_norm,
+    sgd,
+    warmup_cosine,
+)
+
+
+@pytest.mark.parametrize("make_opt", [lambda: sgd(0.1, momentum=0.9),
+                                      lambda: adam(0.05),
+                                      lambda: adamw(0.05, weight_decay=0.0)])
+def test_optimizers_converge_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.full((8,), 3.0)}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        u, state = opt.update(g, state, params)
+        params = apply_updates(params, u)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_bounds_update():
+    opt = chain_clip(sgd(1.0), max_norm=0.5)
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    u, _ = opt.update(huge, state, params)
+    assert float(global_norm(u)) <= 0.5 + 1e-5
+
+
+def test_schedules():
+    s1 = exponential_decay(0.1, 0.992)
+    assert abs(float(s1(jnp.int32(0))) - 0.1) < 1e-7
+    assert float(s1(jnp.int32(100))) < 0.1 * 0.992 ** 99
+    s2 = cosine_decay(1.0, 100)
+    assert float(s2(jnp.int32(0))) == 1.0
+    assert abs(float(s2(jnp.int32(100))) - 0.1) < 1e-6
+    s3 = warmup_cosine(1.0, 10, 100)
+    assert float(s3(jnp.int32(5))) == 0.5
+
+
+def test_dirichlet_partition_covers_all():
+    labels = np.random.RandomState(0).randint(0, 10, 2000)
+    parts = dirichlet_partition(labels, 20, alpha=0.5)
+    joined = np.concatenate(parts)
+    assert len(joined) == 2000 and len(np.unique(joined)) == 2000
+    stats = partition_stats(labels, parts)
+    # non-IID: at least one client misses at least one class
+    assert (stats["class_hist"] == 0).any()
+
+
+def test_two_class_partition_is_highly_skewed():
+    labels = np.random.RandomState(0).randint(0, 10, 1000)
+    parts = two_class_partition(labels, 50)
+    stats = partition_stats(labels, parts)
+    assert stats["max_classes_per_client"] <= 3  # ~2 shards -> <=2-3 classes
+
+
+def test_iid_partition_balanced():
+    parts = iid_partition(1000, 10)
+    assert all(abs(len(p) - 100) <= 1 for p in parts)
+
+
+def test_batcher_resume_determinism():
+    data = {"x": np.arange(100).reshape(100, 1)}
+    b1 = ShardedBatcher(data, 16, seed=7)
+    seq1 = [b1.next_batch()["x"][:, 0].tolist() for _ in range(10)]
+    pos = None
+    b2 = ShardedBatcher(data, 16, seed=7)
+    out = []
+    for i in range(10):
+        if i == 4:
+            pos = b2.position()
+            b3 = ShardedBatcher(data, 16, seed=7)
+            b3.restore(pos)
+            assert b3.next_batch()["x"][:, 0].tolist() == seq1[4]
+        out.append(b2.next_batch()["x"][:, 0].tolist())
+    assert out == seq1
+
+
+def test_char_corpus_learnable():
+    """Markov corpus: bigram statistics beat uniform by a margin."""
+    seqs = make_char_corpus(64, 256, vocab=40, seed=1)
+    trans = np.zeros((40, 40))
+    for row in seqs:
+        for a, b in zip(row[:-1], row[1:]):
+            trans[a, b] += 1
+    top1 = trans.max(1).sum() / max(1, trans.sum())
+    assert top1 > 0.2  # >> 1/40 chance
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=2)
+        tree = {"a": jnp.arange(6.0).reshape(2, 3),
+                "nest": [{"b": jnp.ones((4,), jnp.bfloat16)}]}
+        for s in (1, 2, 3):
+            cm.save(s, tree, extra={"step": s, "pos": {"epoch": 1}})
+        assert cm.all_steps() == [2, 3]
+        got, extra = cm.restore(None, tree)
+        assert extra["step"] == 3
+        np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+        assert got["nest"][0]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_async_and_missing_leaf_error():
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, keep=1, async_save=True)
+        cm.save(5, {"a": jnp.zeros((3,))})
+        cm.wait()
+        with pytest.raises(KeyError):
+            cm.restore(5, {"a": jnp.zeros((3,)), "new": jnp.zeros((1,))})
+        with pytest.raises(ValueError):
+            cm.restore(5, {"a": jnp.zeros((4,))})
+
+
+def test_checkpoint_reshard_on_load():
+    """Elasticity: restore with explicit (single-device) shardings."""
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+        cm.save(1, tree)
+        sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+        got, _ = cm.restore(1, tree, shardings={"w": sharding})
+        assert got["w"].sharding == sharding
