@@ -1,0 +1,96 @@
+"""Sequential-vs-batched FL round latency benchmark.
+
+Times one federated round (16 participating clients, MLP-FedPara task)
+under both engines, steady-state (compile / first-round warmup
+excluded), and records the result into
+``benchmarks/artifacts/BENCH_fl_round.json``.
+
+Run: PYTHONPATH=src python -m benchmarks.fl_round [--clients 16]
+"""
+import argparse
+import json
+import os
+import time
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def build_server(engine: str, clients: int, seed: int = 0):
+    import jax
+
+    from repro.configs.base import ParamCfg
+    from repro.data import iid_partition, make_image_dataset, train_test_split
+    from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+    from repro.nn import recurrent as rec
+
+    ds = make_image_dataset(64 * clients * 2, 10, size=16, channels=1,
+                            noise=0.3, seed=seed)
+    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+    tr, _ = train_test_split(data)
+    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=0.3,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(seed), cfg)
+    parts = iid_partition(len(tr["y"]), clients, seed)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    return FLServer(loss_fn, params, tr, parts, make_strategy("fedavg"),
+                    ClientConfig(lr=0.1, batch=32, epochs=2),
+                    ServerConfig(clients=clients, participation=1.0,
+                                 rounds=1, engine=engine, seed=seed))
+
+
+def time_rounds(engine: str, clients: int, rounds: int = 3) -> float:
+    """Median steady-state seconds per round."""
+    srv = build_server(engine, clients)
+    srv.run_round()  # warmup: jit compile + caches
+    times = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        srv.run_round()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run_bench(clients: int = 16, rounds: int = 3) -> dict:
+    seq = time_rounds("sequential", clients, rounds)
+    bat = time_rounds("batched", clients, rounds)
+    art = {
+        "benchmark": "fl_round",
+        "clients": clients,
+        "participation": 1.0,
+        "local_epochs": 2,
+        "sequential_s": seq,
+        "batched_s": bat,
+        "speedup": seq / bat,
+    }
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, "BENCH_fl_round.json"), "w") as f:
+        json.dump(art, f, indent=1)
+    return art
+
+
+def csv_rows(clients: int = 16):
+    """Rows for benchmarks.run CSV: (name, us_per_call, derived)."""
+    art = run_bench(clients)
+    return [
+        (f"fl_round_sequential_{clients}c", art["sequential_s"] * 1e6, ""),
+        (f"fl_round_batched_{clients}c", art["batched_s"] * 1e6,
+         f"speedup={art['speedup']:.2f}x"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=3)
+    args = ap.parse_args()
+    art = run_bench(args.clients, args.rounds)
+    print(json.dumps(art, indent=1))
+
+
+if __name__ == "__main__":
+    main()

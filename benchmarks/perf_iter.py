@@ -89,12 +89,40 @@ EXPERIMENTS = [
 ]
 
 
+def run_fl_round_experiment(force: bool = False):
+    """Cell E: client-batched FL engine vs the sequential reference.
+
+    Hypothesis: round wall-clock of the sequential engine scales with
+    participation (one jitted dispatch per local step per client); the
+    vmapped ClientBatch engine runs all 16 clients' local epochs as one
+    XLA program — predict >= 4x round-latency drop on CPU."""
+    path = os.path.join(PERF_DIR, "E0_fl_round_batched.json")
+    if os.path.exists(path) and not force:
+        print("== E0_fl_round_batched (cached)")
+        return
+    from benchmarks.fl_round import run_bench
+
+    print("== E0_fl_round_batched: vmapped round loop vs sequential",
+          flush=True)
+    art = run_bench(clients=16)
+    art["perf_name"] = "E0_fl_round_batched"
+    art["hypothesis"] = run_fl_round_experiment.__doc__
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1, default=float)
+    print(f"   sequential {art['sequential_s']*1e3:.1f}ms "
+          f"batched {art['batched_s']*1e3:.1f}ms "
+          f"-> {art['speedup']:.2f}x", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     os.makedirs(PERF_DIR, exist_ok=True)
+
+    if not args.only or args.only in "E0_fl_round_batched":
+        run_fl_round_experiment(force=args.force)
 
     from repro.launch.dryrun import run_cell
 

@@ -25,6 +25,16 @@ def main() -> None:
             failures += 1
             print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if not args.only or args.only in "fl_round_sequential fl_round_batched":
+        try:
+            from benchmarks import fl_round
+
+            for name, us, derived in fl_round.csv_rows():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"fl_round,0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
     if not args.skip_roofline:
         for name, us, derived in roofline.csv_rows():
             print(f"{name},{us:.1f},{derived}", flush=True)

@@ -30,7 +30,7 @@ def run(kind: str, gamma: float, rounds: int = 4):
         strategy=make_strategy("fedavg"),
         client_cfg=ClientConfig(lr=0.05, batch=32, epochs=1),
         server_cfg=ServerConfig(clients=clients, participation=0.4,
-                                rounds=rounds),
+                                rounds=rounds, engine="batched"),
         eval_fn=lambda p: float(vgg_accuracy(p, cfg, {"x": te["x"][:300],
                                                       "y": te["y"][:300]})),
     )

@@ -6,7 +6,7 @@ from __future__ import annotations
 import threading
 import queue as queue_mod
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -17,12 +17,65 @@ def client_epochs(data: Dict[str, np.ndarray], idx: np.ndarray, batch: int,
     rng = np.random.RandomState(seed)
     for _ in range(epochs):
         order = rng.permutation(len(idx))
-        for i in range(0, len(order) - batch + 1, batch) or [0]:
+        for i in range(0, len(order) - batch + 1, batch):
             sel = idx[order[i: i + batch]]
             yield {k: v[sel] for k, v in data.items()}
-        if len(order) < batch and len(order) > 0:  # tiny client: one short batch
+        if 0 < len(order) < batch:  # tiny client: one short batch per epoch
             sel = idx[order]
             yield {k: v[sel] for k, v in data.items()}
+
+
+def stack_client_epochs(
+    data: Dict[str, np.ndarray],
+    partitions: Sequence[np.ndarray],
+    cids: Sequence[int],
+    batch: int,
+    epochs: int,
+    seeds: Sequence[int],
+) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Materialize every sampled client's ``client_epochs`` stream into one
+    stacked batch tensor for the client-batched engine.
+
+    Returns ``(batches, step_mask)`` where ``batches[k]`` has shape
+    ``(C, S, B, ...)`` — C sampled clients, S = max local steps across the
+    batch, B = batch size — and ``step_mask`` is a float32 ``(C, S)``
+    array with 1.0 on real steps. Clients with fewer than S steps are
+    right-padded by repeating their own batches (the pad steps are
+    masked out, so the pad content only needs to be numerically tame).
+    Short batches from tiny clients (fewer than ``batch`` samples) are
+    filled by wrapping their indices; this is the one place the batched
+    engine can diverge from the sequential reference, and only for
+    clients whose whole dataset is smaller than one minibatch."""
+    per_client: List[List[Dict[str, np.ndarray]]] = []
+    for cid, seed in zip(cids, seeds):
+        idx = partitions[cid]
+        per_client.append(
+            list(client_epochs(data, idx, batch, epochs, seed))
+            if len(idx) else [])  # empty client: zero real steps
+    C = len(per_client)
+    S = max(1, max(len(s) for s in per_client))
+    keys = list(data.keys())
+
+    def pad_batch(b: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        n = len(b[keys[0]])
+        if n == batch:
+            return b
+        sel = np.resize(np.arange(n), batch)  # wrap tiny-client batches
+        return {k: v[sel] for k, v in b.items()}
+
+    step_mask = np.zeros((C, S), np.float32)
+    out = {k: np.zeros((C, S, batch) + data[k].shape[1:], data[k].dtype)
+           for k in keys}
+    for c, steps in enumerate(per_client):
+        if not steps:  # empty client: all-padding (zeros), mask stays 0
+            continue
+        steps = [pad_batch(b) for b in steps]
+        step_mask[c, : len(steps)] = 1.0
+        for s in range(S):
+            b = steps[s] if s < len(steps) else steps[s % len(steps)]
+            for k in keys:
+                out[k][c, s] = b[k]
+    return out, step_mask
 
 
 @dataclass

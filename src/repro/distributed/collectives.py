@@ -21,7 +21,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # jax >= 0.6: top-level export, `check_vma` kwarg
+    from jax import shard_map as _shard_map
+    _VMA_KW = "check_vma"
+except ImportError:  # jax 0.4.x/0.5.x: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _VMA_KW = "check_rep"
+
+
+def shard_map(f=None, **kw):
+    """Version-compatible ``shard_map`` accepting either ``check_vma`` or
+    ``check_rep`` and mapping to whatever this jax spells it."""
+    flag = kw.pop("check_vma", kw.pop("check_rep", None))
+    if flag is not None:
+        kw[_VMA_KW] = flag
+    if f is None:
+        return functools.partial(_shard_map, **kw)
+    return _shard_map(f, **kw)
 
 
 # ----------------------------------------------------------- bucketed psum

@@ -28,10 +28,13 @@ class ClientConfig:
     weight_decay: float = 0.0
 
 
-@functools.partial(jax.jit, static_argnames=("loss_fn", "strategy_name", "lr_mom"))
-def _local_step(params, opt_mu, batch, global_params, client_state,
-                loss_fn, strategy_name: str, lr_mom: Tuple[float, float, float]):
-    lr, momentum, wd = lr_mom
+def _step_math(params, opt_mu, batch, global_params, client_state,
+               loss_fn, strategy_name: str, lr, momentum: float, wd: float):
+    """One strategy-aware local SGD step. Pure math shared verbatim by the
+    per-batch jitted sequential path (`_local_step`) and the batched
+    scan-over-steps path (`repro.fl.batch_engine`), so the two engines
+    stay numerically aligned. ``momentum``/``wd`` are static python
+    floats; ``lr`` may be traced."""
 
     def total_loss(p):
         base = loss_fn(p, batch)
@@ -61,6 +64,35 @@ def _local_step(params, opt_mu, batch, global_params, client_state,
     return params, opt_mu, loss
 
 
+@functools.partial(jax.jit, static_argnames=("loss_fn", "strategy_name", "lr_mom"))
+def _local_step(params, opt_mu, batch, global_params, client_state,
+                loss_fn, strategy_name: str, lr_mom: Tuple[float, float, float]):
+    lr, momentum, wd = lr_mom
+    return _step_math(params, opt_mu, batch, global_params, client_state,
+                      loss_fn, strategy_name, lr, momentum, wd)
+
+
+def strategy_post(strategy_name: str, state: Dict, global_params: Any,
+                  params: Any, n_steps, lr) -> Dict:
+    """Per-client post-round state update (SCAFFOLD Option II c_i, FedDyn
+    lambda_i). jit-safe: ``n_steps`` may be a traced per-client step count
+    (the batched engine passes ``step_mask.sum()``); a zero count leaves
+    the state unchanged."""
+    state = dict(state)
+    if strategy_name == "scaffold":
+        n = jnp.maximum(jnp.asarray(n_steps, jnp.float32), 1.0)
+        scale = 1.0 / (n * lr)
+        live = jnp.asarray(n_steps, jnp.float32) > 0
+        state["c_i"] = jax.tree.map(
+            lambda ci, c, wg, wl: jnp.where(live, ci - c + scale * (wg - wl), ci),
+            state["c_i"], state["c"], global_params, params)
+    if strategy_name == "feddyn":
+        state["lambda_i"] = jax.tree.map(
+            lambda lam, wl, wg: lam - state["alpha"] * (wl - wg),
+            state["lambda_i"], params, global_params)
+    return state
+
+
 def local_update(
     global_params: Any,
     batches: Iterator[Dict],
@@ -82,18 +114,9 @@ def local_update(
             strategy.name, (lr, cfg.momentum, cfg.weight_decay))
         n_steps += 1
         last_loss = loss
-    # ---- strategy post-processing
-    if strategy.name == "scaffold" and n_steps > 0:
-        # Option II: c_i' = c_i - c + (w_global - w_local)/(K * lr)
-        scale = 1.0 / (n_steps * lr)
-        state["c_i"] = jax.tree.map(
-            lambda ci, c, wg, wl: ci - c + scale * (wg - wl),
-            state["c_i"], state["c"], global_params, params)
-    if strategy.name == "feddyn":
-        # lambda_i' = lambda_i - alpha (w_local - w_global)
-        state["lambda_i"] = jax.tree.map(
-            lambda lam, wl, wg: lam - state["alpha"] * (wl - wg),
-            state["lambda_i"], params, global_params)
+    # ---- strategy post-processing (shared with the batched engine)
+    state = strategy_post(strategy.name, state, global_params, params,
+                          n_steps, lr)
     metrics = {"steps": n_steps, "loss": float(last_loss)}
     return params, state, metrics
 

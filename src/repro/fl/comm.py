@@ -7,7 +7,7 @@ The paper's cost metric: total bits = 2 × #participants × model_size ×
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -88,14 +88,18 @@ def dequantize_fp16(tree: Any) -> Any:
 
 
 def quantize_int8(tree: Any, key: jax.Array) -> Any:
-    """Per-tensor symmetric int8 with stochastic rounding."""
+    """Per-tensor symmetric int8 with stochastic rounding. The rounding
+    noise is drawn in each leaf's own dtype so fp16/bf16 payloads are
+    not silently upcast to fp32 by the uniform draw."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     keys = jax.random.split(key, len(leaves))
     out = []
     for x, k in zip(leaves, keys):
+        noise_dtype = x.dtype if jnp.issubdtype(x.dtype, jnp.floating) else jnp.float32
         scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
         y = x / scale
-        noise = jax.random.uniform(k, x.shape) - 0.5
+        noise = jax.random.uniform(k, x.shape, dtype=noise_dtype) - jnp.asarray(
+            0.5, noise_dtype)
         q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
         out.append({"q": q, "scale": scale})
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -117,13 +121,67 @@ def dequantize_int8(tree: Any) -> Any:
     return walk(tree)
 
 
+def _is_qnode(n: Any) -> bool:
+    return isinstance(n, dict) and set(n) == {"q", "scale"}
+
+
 def quantized_bytes(tree: Any, scheme: str) -> int:
-    n = sum(int(x.size) for x in jax.tree.leaves(tree) if hasattr(x, "size"))
+    """Wire bytes of ``tree`` under ``scheme``. Already-quantized
+    ``{"q", "scale"}`` subtrees are counted exactly (q at its stored
+    itemsize + 4 bytes per scale) regardless of ``scheme``; plain
+    trees are priced by the scheme as before."""
+    qb, plain = 0, []
+
+    def walk(n):
+        nonlocal qb
+        if _is_qnode(n):
+            q, s = n["q"], n["scale"]
+            qb += int(q.size) * q.dtype.itemsize + 4 * max(int(getattr(s, "size", 1)), 1)
+            return
+        if isinstance(n, dict):
+            for v in n.values():
+                walk(v)
+            return
+        if isinstance(n, (list, tuple)):
+            for v in n:
+                walk(v)
+            return
+        if hasattr(n, "size"):
+            plain.append(n)
+
+    walk(tree)
+    n = sum(int(x.size) for x in plain)
     if scheme == "int8":
-        return n * 1 + 4 * len(jax.tree.leaves(tree))
+        return qb + n * 1 + 4 * len(plain)
     if scheme == "fp16":
-        return n * 2
-    return n * 4
+        return qb + n * 2
+    return qb + n * 4
+
+
+def quantize_dequantize(tree: Any, scheme: str, key: Optional[jax.Array] = None) -> Any:
+    """Simulate one up/down-link quantization round trip (jit-safe)."""
+    if scheme == "int8":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return dequantize_int8(quantize_int8(tree, key))
+    if scheme == "fp16":
+        return dequantize_fp16(quantize_fp16(tree))
+    return tree
+
+
+def batched_quantize_dequantize(stacked: Any, scheme: str,
+                                keys: Optional[jax.Array] = None) -> Any:
+    """Per-client quantization of a client-stacked tree (leaves
+    ``(C, ...)``): each client gets its own RNG key and its own
+    per-tensor scales, exactly as if quantized individually."""
+    if scheme not in ("int8", "fp16"):
+        return stacked
+    if scheme == "fp16":
+        return quantize_dequantize(stacked, "fp16")
+    if keys is None:
+        C = jax.tree.leaves(stacked)[0].shape[0]
+        keys = jax.random.split(jax.random.PRNGKey(0), C)
+    return jax.vmap(lambda t, k: quantize_dequantize(t, "int8", k))(stacked, keys)
 
 
 # ------------------------------------------------------------ accounting

@@ -8,6 +8,29 @@ the deadline are dropped from the round — a dropped pod costs a round
 of its data, never a crash. Async (staleness-weighted) aggregation is
 available as ``staleness_mix``.
 
+Execution engines (``ServerConfig.engine``):
+  sequential  — reference implementation: a Python loop over arrived
+                clients, one jitted step per local minibatch.
+  batched     — ``repro.fl.batch_engine.ClientBatch``: all sampled
+                clients' params/state are stacked along a leading
+                client axis and the whole round (local epochs, payload
+                selection, quantization, aggregation) runs as one
+                jit-compiled vmap/shard_map program.
+
+Masked-aggregation semantics: both engines derive the SAME boolean
+arrived-mask over the sampled clients from host-side RNG draws
+(``_select_round``): a client participates iff it survived random
+dropout, beat the straggler deadline, and falls within the first
+``n_target`` arrivals in sampling order. The sequential engine
+materializes the mask as the ``arrived`` list it loops over; the
+batched engine keeps every sampled client in the stacked program and
+multiplies the mask into the aggregation weights, so dropped clients
+contribute exactly zero to the weighted tree-reduce and their
+state/resident updates are discarded at unstack time. The mask is
+bitwise identical between engines (it is recorded per round in
+``history[i]["arrived_mask"]``), and the aggregated global params
+match to fp32 tolerance.
+
 Personalization modes:
   none      — vanilla FL (upload/download everything)
   pfedpara  — paper §2.3: only x1/y1 (the global halves) transferred;
@@ -25,10 +48,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.data.loader import client_epochs
+from repro.data.loader import client_epochs, stack_client_epochs
 from repro.fl import comm
 from repro.fl.client import ClientConfig, init_client_state, local_update
-from repro.fl.strategies import Strategy, tree_mean
+from repro.fl.strategies import (
+    Strategy,
+    tree_index,
+    tree_mean,
+    tree_stack,
+    tree_zeros,
+)
 
 FEDPER_LOCAL_KEYS = ("head", "fc2", "b2")   # model-specific last layers
 
@@ -48,6 +77,7 @@ class ServerConfig:
     bandwidth_mbps: float = 10.0
     dropout_prob: float = 0.0          # random client failure per round
     staleness_mix: float = 0.0         # >0: async staleness-weighted mixing
+    engine: str = "sequential"         # sequential | batched
     seed: int = 0
 
 
@@ -62,6 +92,8 @@ class FLServer:
         client_cfg: ClientConfig,
         server_cfg: ServerConfig,
         eval_fn: Optional[Callable] = None,
+        mesh: Optional[Any] = None,
+        mesh_axis: str = "clients",
     ):
         self.loss_fn = loss_fn
         self.global_params = global_params
@@ -79,6 +111,16 @@ class FLServer:
         self.client_states: Dict[int, Dict] = {}
         self.local_trees: Dict[int, Any] = {}   # personalization residents
         self.history: List[Dict] = []
+        self._engine = None
+        if server_cfg.engine == "batched":
+            from repro.fl.batch_engine import ClientBatch
+
+            self._engine = ClientBatch(
+                loss_fn=loss_fn, strategy=strategy, client_cfg=client_cfg,
+                personalization=server_cfg.personalization,
+                uplink_quant=server_cfg.uplink_quant,
+                fedper_local_keys=FEDPER_LOCAL_KEYS,
+                mesh=mesh, mesh_axis=mesh_axis)
 
     # ------------------------------------------------------------ payload
     def _download_payload(self, cid: int) -> Any:
@@ -123,13 +165,36 @@ class FLServer:
             return None
         return trained
 
+    def _apply_aggregated(self, new_global_part: Any, agg_target: Any):
+        """Write the aggregated global slice back, with optional
+        staleness-weighted async mixing. Shared by both engines."""
+        scfg = self.scfg
+        if scfg.staleness_mix > 0:
+            a = scfg.staleness_mix
+            new_global_part = jax.tree.map(
+                lambda old, new: (1 - a) * old + a * new,
+                agg_target, new_global_part)
+        if scfg.personalization == "none":
+            self.global_params = new_global_part
+        elif scfg.personalization == "pfedpara":
+            self.global_params = comm.merge_pfedpara(
+                new_global_part, comm.split_pfedpara(self.global_params)[1])
+        else:
+            self.global_params = {**self.global_params, **new_global_part}
+
     # ------------------------------------------------------------- round
     def _simulate_latency(self, payload_bytes: int, n: int) -> np.ndarray:
         comp = self.rng.lognormal(mean=0.0, sigma=self.scfg.straggler_sigma, size=n)
         comm_s = 8.0 * payload_bytes / (self.scfg.bandwidth_mbps * 1e6)
         return comp + comm_s
 
-    def run_round(self) -> Dict:
+    def _select_round(self):
+        """Host-side RNG for one round, shared verbatim by both engines:
+        sample clients, simulate stragglers/dropout, derive the boolean
+        arrived-mask over the sampled order (truncated to the first
+        ``n_target`` arrivals), and draw every sampled client's data
+        seed. The mask — not a filtered list — is the round's
+        participation record, so the two engines agree bitwise."""
         scfg = self.scfg
         n_target = max(1, int(round(scfg.participation * scfg.clients)))
         n_sample = max(n_target, int(round(n_target * (1 + scfg.oversample))))
@@ -137,21 +202,46 @@ class FLServer:
                                   replace=False)
         lr = self.ccfg.lr * (scfg.lr_decay ** self.round_idx)
 
-        # straggler & dropout simulation
         probe_payload = self._download_payload(int(sampled[0]))
         payload_bytes = comm.tree_bytes(probe_payload)
         lat = self._simulate_latency(payload_bytes, len(sampled))
         alive = self.rng.rand(len(sampled)) >= scfg.dropout_prob
-        deadline = np.quantile(lat, scfg.deadline_quantile) if scfg.oversample else np.inf
-        arrived = [int(c) for c, l, a in zip(sampled, lat, alive)
-                   if a and l <= deadline]
-        arrived = arrived[:n_target] if len(arrived) > n_target else arrived
-        if not arrived:   # everyone failed: skip round (fault tolerance)
+        deadline = (np.quantile(lat, scfg.deadline_quantile)
+                    if scfg.oversample else np.inf)
+        ok = alive & (lat <= deadline)
+        mask = ok & (np.cumsum(ok) <= n_target)
+        seeds = self.rng.randint(1 << 30, size=len(sampled))
+        return sampled, mask, seeds, lr, probe_payload
+
+    def _quant_keys(self, n: int) -> jax.Array:
+        base = jax.random.PRNGKey(self.round_idx)
+        return jnp.stack([jax.random.fold_in(base, i) for i in range(n)])
+
+    def run_round(self) -> Dict:
+        sampled, mask, seeds, lr, probe = self._select_round()
+        if not mask.any():   # everyone failed: skip round (fault tolerance)
             self.round_idx += 1
             return {"round": self.round_idx, "participants": 0, "skipped": True}
+        if self._engine is not None:
+            rec = self._run_round_batched(sampled, mask, seeds, lr, probe)
+        else:
+            rec = self._run_round_sequential(sampled, mask, seeds, lr, probe)
+        self.round_idx += 1
+        rec["round"] = self.round_idx
+        rec["arrived_mask"] = mask.astype(int).tolist()
+        if self.eval_fn is not None:
+            rec["eval"] = self.eval_fn(self.global_params)
+        self.history.append(rec)
+        return rec
 
+    # ------------------------------------------- sequential reference
+    def _run_round_sequential(self, sampled, mask, seeds, lr, probe) -> Dict:
+        scfg = self.scfg
+        quant_keys = self._quant_keys(len(sampled))
         uploads, weights, losses = [], [], []
-        for cid in arrived:
+        for i, cid in enumerate(int(c) for c in sampled):
+            if not mask[i]:
+                continue
             download = self._download_payload(cid)
             params = self._client_full_params(cid, download)
             state = self.client_states.get(cid)
@@ -163,18 +253,15 @@ class FLServer:
                         "c", jax.tree.map(jnp.zeros_like, params))
             batches = client_epochs(self.data, self.partitions[cid],
                                     self.ccfg.batch, self.ccfg.epochs,
-                                    seed=self.rng.randint(1 << 30))
+                                    seed=int(seeds[i]))
             trained, state, m = local_update(
                 params, batches, self.loss_fn, self.ccfg, self.strategy,
                 client_state=state, lr=lr)
             self.client_states[cid] = state
             up = self._split_upload(cid, trained)
             if up is not None:
-                if scfg.uplink_quant == "int8":
-                    up = comm.dequantize_int8(
-                        comm.quantize_int8(up, jax.random.PRNGKey(self.round_idx)))
-                elif scfg.uplink_quant == "fp16":
-                    up = comm.dequantize_fp16(comm.quantize_fp16(up))
+                up = comm.quantize_dequantize(up, scfg.uplink_quant,
+                                              quant_keys[i])
                 uploads.append(up)
                 weights.append(float(len(self.partitions[cid])))
             losses.append(m["loss"])
@@ -186,35 +273,80 @@ class FLServer:
         if uploads and scfg.personalization != "local":
             agg_target = (self.global_params if scfg.personalization == "none"
                           else self._download_payload(-1))
-            new_global_part, self.server_state = self.strategy.aggregate(
-                self.server_state, agg_target, uploads, weights)
-            if scfg.staleness_mix > 0:
-                a = scfg.staleness_mix
-                new_global_part = jax.tree.map(
-                    lambda old, new: (1 - a) * old + a * new,
-                    agg_target, new_global_part)
-            if scfg.personalization == "none":
-                self.global_params = new_global_part
-            else:  # write the aggregated global slice back into params
-                self.global_params = comm.merge_pfedpara(
-                    new_global_part,
-                    comm.split_pfedpara(self.global_params)[1],
-                ) if scfg.personalization == "pfedpara" else {
-                    **self.global_params, **new_global_part}
+            new_global_part, self.server_state = self.strategy.server_update(
+                self.server_state, agg_target, tree_mean(uploads, weights))
+            self._apply_aggregated(new_global_part, agg_target)
 
-        self.round_idx += 1
-        rec = {
-            "round": self.round_idx,
-            "participants": len(arrived),
+        return {
+            "participants": int(mask.sum()),
             "sampled": len(sampled),
             "mean_loss": float(np.mean(losses)) if losses else float("nan"),
             "comm_gb": self.comm_log.total_gb,
             "lr": lr,
         }
-        if self.eval_fn is not None:
-            rec["eval"] = self.eval_fn(self.global_params)
-        self.history.append(rec)
-        return rec
+
+    # ------------------------------------------------ batched engine
+    def _run_round_batched(self, sampled, mask, seeds, lr, probe) -> Dict:
+        scfg = self.scfg
+        cids = [int(c) for c in sampled]
+        C = len(cids)
+
+        full, states = [], []
+        for cid in cids:
+            params = self._client_full_params(cid, self._download_payload(cid))
+            state = self.client_states.get(cid)
+            if state is None:
+                state = init_client_state(self.strategy, params)
+            if self.strategy.name == "scaffold" and "c" in state:
+                c = (jax.tree.map(jnp.zeros_like, params)
+                     if not self.server_state else self.server_state.get(
+                         "c", jax.tree.map(jnp.zeros_like, params)))
+                state = {**state, "c": c}
+            full.append(params)
+            states.append(state)
+        stacked_params = tree_stack(full)
+        stacked_state = tree_stack(states) if states and states[0] else {}
+
+        batches, step_mask = stack_client_epochs(
+            self.data, self.partitions, cids, self.ccfg.batch,
+            self.ccfg.epochs, seeds)
+        sizes = np.array([len(self.partitions[c]) for c in cids], np.float32)
+        agg_target = (self.global_params if scfg.personalization == "none"
+                      else self._download_payload(-1))
+
+        (new_p, new_state, upload, local, last_loss, n_steps, new_global,
+         new_server_state) = self._engine.run(
+            stacked_params, stacked_state, batches, step_mask,
+            mask, sizes, lr, self._quant_keys(C),
+            self.server_state, agg_target)
+
+        arrived = np.nonzero(mask)[0]
+        for pos in arrived:
+            cid = cids[pos]
+            if new_state:
+                self.client_states[cid] = tree_index(new_state, pos)
+            else:
+                self.client_states[cid] = {}
+            if local is not None:
+                self.local_trees[cid] = tree_index(local, pos)
+        if upload is not None and scfg.personalization != "local":
+            self.server_state = new_server_state
+            self._apply_aggregated(new_global, agg_target)
+
+        losses = np.asarray(last_loss)[arrived]
+        up_probe = (tree_index(upload, int(arrived[0]))
+                    if upload is not None else {})
+        self.comm_log.log_round(probe, up_probe, int(mask.sum()),
+                                up_scheme=scfg.uplink_quant,
+                                down_scheme=scfg.downlink_quant)
+
+        return {
+            "participants": int(mask.sum()),
+            "sampled": len(sampled),
+            "mean_loss": float(np.mean(losses)) if len(losses) else float("nan"),
+            "comm_gb": self.comm_log.total_gb,
+            "lr": lr,
+        }
 
     def run(self, rounds: Optional[int] = None, log_every: int = 0) -> List[Dict]:
         for r in range(rounds or self.scfg.rounds):
@@ -224,8 +356,20 @@ class FLServer:
         return self.history
 
     # --------------------------------------------- personalization eval
-    def personalized_eval(self, eval_fn: Callable) -> List[float]:
-        """Evaluate each client's merged (global + resident local) model."""
+    def personalized_eval(self, eval_fn: Optional[Callable] = None,
+                          batch_eval_fn: Optional[Callable] = None) -> List[float]:
+        """Evaluate each client's merged (global + resident local) model.
+
+        ``eval_fn(params, cid)`` runs the sequential per-client sweep.
+        ``batch_eval_fn(stacked_params, cids)`` replaces the sweep with
+        one batched call over all clients' stacked params (see
+        ``repro.fl.batch_engine.batched_personalized_eval``)."""
+        if batch_eval_fn is not None:
+            full = [self._client_full_params(cid, self._download_payload(cid))
+                    for cid in range(self.scfg.clients)]
+            scores = batch_eval_fn(tree_stack(full),
+                                   np.arange(self.scfg.clients))
+            return [float(s) for s in np.asarray(scores)]
         scores = []
         for cid in range(self.scfg.clients):
             params = self._client_full_params(cid, self._download_payload(cid))

@@ -22,6 +22,44 @@ def tree_mean(trees: List[Any], weights: Optional[List[float]] = None) -> Any:
     return jax.tree.map(lambda *xs: sum(w * x for w, x in zip(weights, xs)), *trees)
 
 
+# ------------------------------------------------- stacked (client-axis) ops
+
+def tree_stack(trees: List[Any]) -> Any:
+    """Stack a list of identically-structured pytrees along a new leading
+    client axis: leaves (..,) -> (C, ..)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(tree: Any) -> List[Any]:
+    """Inverse of ``tree_stack``: split the leading axis back into a list."""
+    n = jax.tree.leaves(tree)[0].shape[0]
+    return [tree_index(tree, i) for i in range(n)]
+
+
+def tree_index(tree: Any, i) -> Any:
+    """Slice client ``i`` out of a stacked tree (lazy: one gather per leaf)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_broadcast(tree: Any, n: int) -> Any:
+    """Replicate a tree along a new leading client axis of size ``n``."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + jnp.shape(x)), tree)
+
+
+def tree_wmean_stacked(stacked: Any, weights: jax.Array) -> Any:
+    """Masked weighted mean over the leading client axis.
+
+    ``weights`` is a (C,) float vector; masked-out clients carry weight 0,
+    so this is the jit-safe replacement for aggregating an ``arrived``
+    list — the mask IS the participation decision."""
+    total = jnp.maximum(weights.sum(), 1e-12)
+    wn = (weights / total).astype(jnp.float32)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(wn, x.astype(jnp.float32), axes=1).astype(x.dtype),
+        stacked)
+
+
 def tree_sub(a: Any, b: Any) -> Any:
     return jax.tree.map(lambda x, y: x - y, a, b)
 
@@ -44,6 +82,14 @@ def tree_dot(a: Any, b: Any) -> jax.Array:
 
 @dataclass
 class Strategy:
+    """FL strategy. Server-side aggregation is expressed as
+    ``server_update(server_state, global_params, mean_w)`` — a pure,
+    jit-safe transform of the (already weighted/masked) client mean —
+    so the sequential engine (list mean) and the batched engine
+    (masked stacked weighted mean over the client axis) share the
+    exact same server math. ``aggregate`` is the legacy list-based
+    entry point, derived from ``server_update``."""
+
     name: str = "fedavg"
     # client loss modifier: fn(params, global_params, client_state) -> penalty
     client_penalty: Optional[Callable] = None
@@ -51,24 +97,29 @@ class Strategy:
     grad_correction: Optional[Callable] = None
     # server state init / aggregation
     server_init: Optional[Callable] = None
+    # (server_state, global_params, mean_w) -> (new_global, new_server_state)
+    server_update: Optional[Callable] = None
     aggregate: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.server_update is None:
+            self.server_update = lambda st, gp, mean_w: (mean_w, st)
+        if self.aggregate is None:
+            def agg(server_state, global_params, client_params, weights):
+                return self.server_update(server_state, global_params,
+                                          tree_mean(client_params, weights))
+            self.aggregate = agg
 
 
 def fedavg() -> Strategy:
-    def agg(server_state, global_params, client_params, weights):
-        return tree_mean(client_params, weights), server_state
-
-    return Strategy(name="fedavg", aggregate=agg)
+    return Strategy(name="fedavg")
 
 
 def fedprox(mu: float = 0.1) -> Strategy:
     def penalty(params, global_params, _state):
         return 0.5 * mu * tree_sqnorm(tree_sub(params, global_params))
 
-    def agg(server_state, global_params, client_params, weights):
-        return tree_mean(client_params, weights), server_state
-
-    return Strategy(name="fedprox", client_penalty=penalty, aggregate=agg)
+    return Strategy(name="fedprox", client_penalty=penalty)
 
 
 def scaffold(lr_local: float = 0.1, local_steps_hint: int = 1) -> Strategy:
@@ -80,10 +131,7 @@ def scaffold(lr_local: float = 0.1, local_steps_hint: int = 1) -> Strategy:
         return jax.tree.map(lambda g, ci, c: g - ci + c,
                             grads, client_state["c_i"], client_state["c"])
 
-    def agg(server_state, global_params, client_params, weights):
-        return tree_mean(client_params, weights), server_state
-
-    return Strategy(name="scaffold", grad_correction=correction, aggregate=agg)
+    return Strategy(name="scaffold", grad_correction=correction)
 
 
 def feddyn(alpha: float = 0.1) -> Strategy:
@@ -98,15 +146,14 @@ def feddyn(alpha: float = 0.1) -> Strategy:
     def server_init(params):
         return {"h": tree_zeros(params)}
 
-    def agg(server_state, global_params, client_params, weights):
-        mean_w = tree_mean(client_params, weights)
+    def update(server_state, global_params, mean_w):
         delta = tree_sub(mean_w, global_params)
         h = tree_add(server_state["h"], delta, scale=-alpha)
         new_global = tree_add(mean_w, h, scale=-1.0 / alpha)
         return new_global, {"h": h}
 
     return Strategy(name="feddyn", client_penalty=penalty,
-                    server_init=server_init, aggregate=agg)
+                    server_init=server_init, server_update=update)
 
 
 def fedadam(eta_g: float = 0.01, b1: float = 0.9, b2: float = 0.99,
@@ -115,8 +162,8 @@ def fedadam(eta_g: float = 0.01, b1: float = 0.9, b2: float = 0.99,
         return {"m": tree_zeros(params), "v": tree_zeros(params),
                 "t": jnp.zeros((), jnp.int32)}
 
-    def agg(server_state, global_params, client_params, weights):
-        delta = tree_sub(tree_mean(client_params, weights), global_params)
+    def update(server_state, global_params, mean_w):
+        delta = tree_sub(mean_w, global_params)
         m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d,
                          server_state["m"], delta)
         v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * d * d,
@@ -126,7 +173,8 @@ def fedadam(eta_g: float = 0.01, b1: float = 0.9, b2: float = 0.99,
             global_params, m, v)
         return new_global, {"m": m, "v": v, "t": server_state["t"] + 1}
 
-    return Strategy(name="fedadam", server_init=server_init, aggregate=agg)
+    return Strategy(name="fedadam", server_init=server_init,
+                    server_update=update)
 
 
 def make_strategy(name: str, **kw) -> Strategy:

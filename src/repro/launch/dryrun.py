@@ -117,6 +117,8 @@ def _post_spmd_text() -> Optional[str]:
 def _analyze(compiled, pod_size: int) -> Dict:
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per computation
+        cost = cost[0] if cost else {}
     spmd_txt = _post_spmd_text()
     colls = hlo_mod.collective_stats(spmd_txt if spmd_txt is not None
                                      else compiled.as_text(), pod_size)

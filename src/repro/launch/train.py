@@ -171,11 +171,16 @@ def train_fl(args):
                          "benchmarks/ for VGG16/LSTM experiments")
 
     parts = dirichlet_partition(tr["y"], args.clients, 0.5, seed=args.seed)
+    mesh = None
+    if args.engine == "batched" and len(jax.devices()) > 1:
+        mesh = Mesh(np.array(jax.devices()), ("clients",))
     srv = FLServer(loss_fn, params, tr, parts, make_strategy(args.strategy),
                    ClientConfig(lr=args.lr, batch=64, epochs=args.local_epochs),
                    ServerConfig(clients=args.clients, participation=0.16,
-                                rounds=args.rounds, personalization=args.personalization),
-                   eval_fn=eval_fn)
+                                rounds=args.rounds,
+                                personalization=args.personalization,
+                                engine=args.engine),
+                   eval_fn=eval_fn, mesh=mesh)
     hist = srv.run(log_every=1)
     print(json.dumps(hist[-1], indent=1))
 
@@ -211,6 +216,10 @@ def main():
     ap.add_argument("--param", default="fedpara")
     ap.add_argument("--gamma", type=float, default=0.3)
     ap.add_argument("--personalization", default="none")
+    ap.add_argument("--engine", default="batched",
+                    choices=["sequential", "batched"],
+                    help="FL round engine: sequential reference loop or "
+                         "the client-batched vmap/shard_map program")
     args = ap.parse_args()
     if args.mode == "pods":
         train_pods(args)

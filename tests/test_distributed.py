@@ -43,10 +43,12 @@ def test_powersgd_error_feedback_bounded():
         sent = sent + powersgd_decompress(p, q)
     rel = float(jnp.linalg.norm(sent - 30 * g) / jnp.linalg.norm(30 * g))
     assert rel < 0.5  # cumulative transmitted ~ cumulative gradient
-    # full-rank compression is exact
+    # full-rank compression is exact (up to fp32 QR/matmul roundoff)
     st2 = powersgd_init(g.shape, 32, key)
     p, q, st2 = powersgd_compress(g, st2)
-    assert float(jnp.linalg.norm(powersgd_decompress(p, q) - g)) < 1e-3
+    rel_full = float(jnp.linalg.norm(powersgd_decompress(p, q) - g)
+                     / jnp.linalg.norm(g))
+    assert rel_full < 1e-3
 
 
 def test_bucket_plan_respects_size():
