@@ -1,0 +1,164 @@
+"""Bytes-vs-loss trade-off curves for the up/down-link codec stack.
+
+Runs the MLP-FedPara synthetic FL task under a sweep of codec specs
+applied to BOTH links, records cumulative wire bytes (exact, from the
+codecs' ``wire_bytes``) against round accuracy/loss, and checks the
+paper's headline claim shape: compressed configs reach the fp32
+baseline's task quality at a multiple fewer total bytes (FedPara §4
+claims 3-10x; the delta|topk|int8 stack lands ~8x on this task).
+
+Also times one sequential vs batched round under the full codec stack
+and records their global-param agreement (engine parity), writing
+everything to ``benchmarks/artifacts/BENCH_comm.json``.
+
+Run: PYTHONPATH=src python -m benchmarks.comm_codecs [--rounds 10]
+"""
+import argparse
+import json
+import os
+import time
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+CODEC_SWEEP = [
+    ("fp32", ""),
+    ("fp16", "fp16"),
+    ("int8", "int8"),
+    ("delta_topk0.25_int8", "delta|topk0.25|int8"),
+    ("delta_topk0.1_int8", "delta|topk0.1|int8"),
+    ("delta_lowrank2_int8", "delta|lowrank2|int8"),
+]
+MATCH_TOL = 0.03   # eval-accuracy tolerance for "matched task loss"
+
+
+def build_server(codec: str, engine: str, clients: int, rounds: int,
+                 seed: int = 0):
+    import jax
+
+    from repro.configs.base import ParamCfg
+    from repro.data import dirichlet_partition, make_image_dataset, \
+        train_test_split
+    from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+    from repro.nn import recurrent as rec
+
+    ds = make_image_dataset(2400, 10, size=16, channels=1, noise=0.3,
+                            seed=seed)
+    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+    tr, te = train_test_split(data)
+    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=0.3,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(seed), cfg)
+    parts = dirichlet_partition(tr["y"], clients, 0.5, seed=seed)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    def eval_fn(p):
+        return float(rec.mlp_accuracy(p, cfg, {"x": te["x"][:400],
+                                               "y": te["y"][:400]}))
+
+    return FLServer(loss_fn, params, tr, parts, make_strategy("fedavg"),
+                    ClientConfig(lr=0.1, batch=32, epochs=2),
+                    ServerConfig(clients=clients, participation=0.5,
+                                 rounds=rounds, engine=engine, seed=seed,
+                                 uplink_codec=codec, downlink_codec=codec),
+                    eval_fn=eval_fn)
+
+
+def sweep_curves(rounds: int, clients: int) -> list:
+    curves = []
+    for name, spec in CODEC_SWEEP:
+        srv = build_server(spec, "batched", clients, rounds)
+        hist = srv.run()
+        curves.append({
+            "name": name,
+            "codec": spec or "fp32",
+            "rounds": [r["round"] for r in hist],
+            "eval": [r.get("eval") for r in hist],
+            "mean_loss": [r["mean_loss"] for r in hist],
+            "comm_gb": [r["comm_gb"] for r in hist],
+            "total_bytes": srv.comm_log.up_bytes + srv.comm_log.down_bytes,
+            "up_bytes": srv.comm_log.up_bytes,
+            "down_bytes": srv.comm_log.down_bytes,
+        })
+        print(f"  {name:>22}: {curves[-1]['total_bytes']/1e6:8.3f} MB, "
+              f"final eval {curves[-1]['eval'][-1]:.3f}", flush=True)
+    base = curves[0]
+    for c in curves:
+        c["reduction_vs_fp32"] = base["total_bytes"] / max(c["total_bytes"], 1)
+        c["matched_loss"] = bool(
+            c["eval"][-1] >= base["eval"][-1] - MATCH_TOL)
+    return curves
+
+
+def parity_timing(clients: int, spec: str = "delta|topk0.1|int8") -> dict:
+    """Seq-vs-batched wall clock + global-param agreement under the
+    full codec stack (steady-state: warmup round excluded)."""
+    import jax
+    import jax.numpy as jnp
+
+    out = {"codec": spec}
+    params = {}
+    for engine in ("sequential", "batched"):
+        srv = build_server(spec, engine, clients, rounds=3)
+        srv.run_round()     # warmup: jit compile + caches
+        t0 = time.perf_counter()
+        srv.run_round()
+        srv.run_round()
+        out[f"{engine}_s"] = (time.perf_counter() - t0) / 2
+        params[engine] = srv.global_params
+    out["speedup"] = out["sequential_s"] / out["batched_s"]
+    out["global_param_maxdiff"] = float(max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: jnp.abs(a - b).max(),
+        params["sequential"], params["batched"]))))
+    return out
+
+
+def run_bench(rounds: int = 10, clients: int = 8) -> dict:
+    curves = sweep_curves(rounds, clients)
+    matched = [c for c in curves if c["matched_loss"] and c["name"] != "fp32"]
+    best = max(matched, key=lambda c: c["reduction_vs_fp32"]) if matched else None
+    art = {
+        "benchmark": "comm_codecs",
+        "clients": clients,
+        "rounds": rounds,
+        "curves": curves,
+        "parity": parity_timing(clients),
+        "best_matched": (
+            {"name": best["name"],
+             "reduction_vs_fp32": best["reduction_vs_fp32"]} if best else None),
+    }
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, "BENCH_comm.json"), "w") as f:
+        json.dump(art, f, indent=1)
+    return art
+
+
+def csv_rows(rounds: int = 10, clients: int = 8):
+    """Rows for benchmarks.run CSV: (name, us_per_call, derived)."""
+    art = run_bench(rounds, clients)
+    rows = []
+    for c in art["curves"]:
+        rows.append((f"comm_{c['name']}", 0.0,
+                     f"bytes={c['total_bytes']} "
+                     f"reduction={c['reduction_vs_fp32']:.2f}x "
+                     f"eval={c['eval'][-1]:.3f}"))
+    p = art["parity"]
+    rows.append(("comm_codec_parity", p["batched_s"] * 1e6,
+                 f"speedup={p['speedup']:.2f}x "
+                 f"maxdiff={p['global_param_maxdiff']:.2e}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=8)
+    args = ap.parse_args()
+    art = run_bench(args.rounds, args.clients)
+    print(json.dumps(art, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,16 @@ def main() -> None:
             failures += 1
             print(f"fl_round,0,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if not args.only or "comm" in args.only or args.only in "comm_codecs":
+        try:
+            from benchmarks import comm_codecs
+
+            for name, us, derived in comm_codecs.csv_rows():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"comm_codecs,0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
     if not args.skip_roofline:
         for name, us, derived in roofline.csv_rows():
             print(f"{name},{us:.1f},{derived}", flush=True)

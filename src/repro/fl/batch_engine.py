@@ -16,7 +16,11 @@ jit-compiled program:
      applied to each device's client shard;
   3. payload selection (none / pfedpara / fedper / local) as pure tree
      restructuring on the stacked tree;
-  4. per-client uplink quantization with per-client RNG keys;
+  4. per-client uplink codec encode/decode (``repro.fl.codecs``: delta
+     vs the round's decoded broadcast, top-k with client-stacked
+     error-feedback accumulators riding in ``stacked_state["_ef_up"]``,
+     low-rank delta truncation, int8/fp16 quantization) vmapped over
+     the client axis with per-client RNG keys;
   5. masked weighted tree-reduce over the client axis (the
      arrived-mask replaces the sequential engine's ``arrived`` list)
      followed by the strategy's ``server_update``.
@@ -38,6 +42,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.fl import comm
+from repro.fl.codecs import Codec, make_codec
 from repro.fl.client import ClientConfig, _step_math, strategy_post
 from repro.fl.strategies import (
     Strategy,
@@ -140,12 +145,14 @@ class ClientBatch:
     strategy: Strategy
     client_cfg: ClientConfig
     personalization: str = "none"
-    uplink_quant: str = "fp32"
+    uplink_codec: Optional[Codec] = None
     fedper_local_keys: Tuple[str, ...] = ()
     mesh: Optional[Mesh] = None
     mesh_axis: str = "clients"
 
     def __post_init__(self):
+        if self.uplink_codec is None:
+            self.uplink_codec = make_codec("")
         self._program = jax.jit(self._round_program)
 
     # ----------------------------------------------------- payload select
@@ -167,16 +174,29 @@ class ClientBatch:
     # ------------------------------------------------------- the program
     def _round_program(self, stacked_params, stacked_state, batches,
                        step_mask, arrived_mask, sizes, lr, quant_keys,
-                       server_state, agg_target):
+                       server_state, agg_target, down_payload):
         new_p, new_state, last_loss, n_steps = batched_local_update(
             stacked_params, stacked_state, batches, step_mask,
             self.loss_fn, self.client_cfg, self.strategy.name, lr,
             mesh=self.mesh, axis=self.mesh_axis)
 
         upload, local = self._select_upload(new_p)
-        if upload is not None and self.uplink_quant in ("int8", "fp16"):
-            upload = comm.batched_quantize_dequantize(
-                upload, self.uplink_quant, quant_keys)
+        codec = self.uplink_codec
+        if upload is not None and not codec.is_identity:
+            # per-client encode/decode: delta against the round's decoded
+            # broadcast (closure => broadcast under vmap), error feedback
+            # threaded through the stacked client state
+            if codec.has_ef:
+                upload, new_ef = jax.vmap(
+                    lambda u, e, k: codec.encode_decode(
+                        u, ref=down_payload, ef=e, key=k)
+                )(upload, new_state["_ef_up"], quant_keys)
+                new_state = {**new_state, "_ef_up": new_ef}
+            else:
+                upload, _ = jax.vmap(
+                    lambda u, k: codec.encode_decode(
+                        u, ref=down_payload, key=k)
+                )(upload, quant_keys)
 
         if upload is not None:
             w = arrived_mask * sizes
@@ -189,11 +209,12 @@ class ClientBatch:
                 new_global, new_server_state)
 
     def run(self, stacked_params, stacked_state, batches, step_mask,
-            arrived_mask, sizes, lr, quant_keys, server_state, agg_target):
+            arrived_mask, sizes, lr, quant_keys, server_state, agg_target,
+            down_payload):
         return self._program(
             stacked_params, stacked_state,
             jax.tree.map(jnp.asarray, batches), jnp.asarray(step_mask),
             jnp.asarray(arrived_mask, jnp.float32),
             jnp.asarray(sizes, jnp.float32),
             jnp.asarray(lr, jnp.float32), quant_keys,
-            server_state, agg_target)
+            server_state, agg_target, down_payload)

@@ -122,6 +122,10 @@ def local_update(
 
 
 def init_client_state(strategy: Strategy, params: Any, **kw) -> Dict:
+    """Strategy-owned client state. The key ``"_ef_up"`` is reserved:
+    the server attaches the uplink codec's error-feedback accumulator
+    there (``FLServer._ensure_ef``); step math and ``strategy_post``
+    carry it through untouched."""
     if strategy.name == "scaffold":
         return {"c_i": tree_zeros(params), "c": tree_zeros(params)}
     if strategy.name == "feddyn":

@@ -13,42 +13,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.parameterization import tree_bytes  # dtype-aware; re-exported
+
 PFEDPARA_LOCAL = ("x2", "y2")
-
-
-def tree_bytes(tree: Any, bytes_per_param: int = 4) -> int:
-    return sum(int(x.size) * bytes_per_param for x in jax.tree.leaves(tree)
-               if hasattr(x, "size"))
 
 
 # ------------------------------------------------------- payload selection
 
 def split_pfedpara(params: Any) -> Tuple[Any, Any]:
     """(global_tree, local_tree): x2/y2 subtree leaves stay local, the
-    rest (x1/y1, dense weights, biases, norms) is transferred."""
-    def walk(node, keep_local: bool):
+    rest (x1/y1, dense weights, biases, norms) is transferred.
+
+    List/tuple nodes keep ``None`` placeholders at pruned positions so
+    the two halves stay positionally aligned and ``merge_pfedpara`` can
+    zip them back without dropping leaves."""
+    def walk_local(node, keep_local: bool):
         if isinstance(node, dict):
             out = {}
             for k, v in node.items():
-                is_local = k in PFEDPARA_LOCAL
-                sub = walk(v, is_local)
+                sub = walk_local(v, keep_local or k in PFEDPARA_LOCAL)
                 if sub is not None:
                     out[k] = sub
             return out or None
         if isinstance(node, (list, tuple)):
-            subs = [walk(v, keep_local) for v in node]
-            return type(node)(s for s in subs if s is not None) or None
+            subs = type(node)(walk_local(v, keep_local) for v in node)
+            return subs if any(s is not None for s in subs) else None
         return node if keep_local else None
 
     def walk_global(node):
         if isinstance(node, dict):
-            out = {k: walk_global(v) for k, v in node.items() if k not in PFEDPARA_LOCAL}
+            out = {k: walk_global(v) for k, v in node.items()
+                   if k not in PFEDPARA_LOCAL}
             return {k: v for k, v in out.items() if v is not None} or None
         if isinstance(node, (list, tuple)):
             return type(node)(walk_global(v) for v in node)
         return node
 
-    return walk_global(params), walk(params, False)
+    return walk_global(params), walk_local(params, False)
 
 
 def merge_pfedpara(global_tree: Any, local_tree: Any) -> Any:
@@ -70,7 +71,13 @@ def merge_pfedpara(global_tree: Any, local_tree: Any) -> Any:
             else:
                 out[k] = merge_pfedpara(g, l)
         return out
-    if isinstance(global_tree, (list, tuple)):
+    if isinstance(global_tree, (list, tuple)) and isinstance(local_tree, (list, tuple)):
+        if len(global_tree) != len(local_tree):
+            raise ValueError(
+                "merge_pfedpara: misaligned sequence nodes "
+                f"({len(global_tree)} vs {len(local_tree)} entries); "
+                "split_pfedpara keeps None placeholders so halves must "
+                "have equal length")
         return type(global_tree)(
             merge_pfedpara(g, l) for g, l in zip(global_tree, local_tree)
         )
@@ -169,35 +176,23 @@ def quantize_dequantize(tree: Any, scheme: str, key: Optional[jax.Array] = None)
     return tree
 
 
-def batched_quantize_dequantize(stacked: Any, scheme: str,
-                                keys: Optional[jax.Array] = None) -> Any:
-    """Per-client quantization of a client-stacked tree (leaves
-    ``(C, ...)``): each client gets its own RNG key and its own
-    per-tensor scales, exactly as if quantized individually."""
-    if scheme not in ("int8", "fp16"):
-        return stacked
-    if scheme == "fp16":
-        return quantize_dequantize(stacked, "fp16")
-    if keys is None:
-        C = jax.tree.leaves(stacked)[0].shape[0]
-        keys = jax.random.split(jax.random.PRNGKey(0), C)
-    return jax.vmap(lambda t, k: quantize_dequantize(t, "int8", k))(stacked, keys)
-
-
 # ------------------------------------------------------------ accounting
 
 class CommLog:
-    """Accumulates up/down-link bytes over an FL run (paper Fig. 3)."""
+    """Accumulates up/down-link wire bytes over an FL run (paper Fig. 3).
+
+    Bytes are exact integers measured by the active codec's
+    ``wire_bytes`` (see ``repro.fl.codecs``) — already summed over the
+    round's participants — not scheme-priced dense trees."""
 
     def __init__(self):
         self.up_bytes = 0
         self.down_bytes = 0
         self.rounds = 0
 
-    def log_round(self, down_payload: Any, up_payload: Any, participants: int,
-                  up_scheme: str = "fp32", down_scheme: str = "fp32"):
-        self.down_bytes += participants * quantized_bytes(down_payload, down_scheme)
-        self.up_bytes += participants * quantized_bytes(up_payload, up_scheme)
+    def log_round(self, down_bytes: int, up_bytes: int):
+        self.down_bytes += int(down_bytes)
+        self.up_bytes += int(up_bytes)
         self.rounds += 1
 
     @property

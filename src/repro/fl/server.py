@@ -21,7 +21,8 @@ Masked-aggregation semantics: both engines derive the SAME boolean
 arrived-mask over the sampled clients from host-side RNG draws
 (``_select_round``): a client participates iff it survived random
 dropout, beat the straggler deadline, and falls within the first
-``n_target`` arrivals in sampling order. The sequential engine
+``n_target`` arrivals in simulated-latency order (earliest arrivals
+win, not earliest sampling positions). The sequential engine
 materializes the mask as the ``arrived`` list it loops over; the
 batched engine keeps every sampled client in the stacked program and
 multiplies the mask into the aggregation weights, so dropped clients
@@ -37,6 +38,19 @@ Personalization modes:
               x2/y2 persist per client
   fedper    — Arivazhagan et al.: last layer stays local
   local     — FedPAQ-style local-only baseline (no aggregation)
+
+Communication codecs (``ServerConfig.uplink_codec`` /
+``downlink_codec``, specs like ``"delta|topk0.1|int8"`` — see
+``repro.fl.codecs``): the downlink payload is encoded/decoded ONCE per
+round host-side (the broadcast is identical for every client; delta
+reference and server-side error feedback are broadcast state shared by
+all clients, the standard sync-FL simulation assumption), and clients
+train on the DECODED payload. Uplinks are encoded per client against
+the round's decoded broadcast, with client-resident error-feedback
+accumulators threaded through ``client_states["_ef_up"]``. The legacy
+``uplink_quant`` / ``downlink_quant`` fields map to single-stage
+quantizer codecs when no codec spec is given. ``CommLog`` charges the
+codecs' exact ``wire_bytes``.
 """
 from __future__ import annotations
 
@@ -49,7 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.loader import client_epochs, stack_client_epochs
-from repro.fl import comm
+from repro.fl import codecs, comm
 from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.strategies import (
     Strategy,
@@ -62,6 +76,18 @@ from repro.fl.strategies import (
 FEDPER_LOCAL_KEYS = ("head", "fc2", "b2")   # model-specific last layers
 
 
+def arrival_mask(ok: np.ndarray, lat: np.ndarray, n_target: int) -> np.ndarray:
+    """Keep the first ``n_target`` *arrivals*: among clients that
+    survived dropout and the deadline (``ok``), the ``n_target`` with
+    the smallest simulated latency — not the first in sampling order.
+    Returned in sampling order (boolean mask over the sampled array)."""
+    order = np.argsort(lat, kind="stable")
+    keep_sorted = ok[order] & (np.cumsum(ok[order]) <= n_target)
+    mask = np.zeros_like(ok)
+    mask[order] = keep_sorted
+    return mask
+
+
 @dataclass
 class ServerConfig:
     clients: int = 100
@@ -69,8 +95,10 @@ class ServerConfig:
     rounds: int = 20
     lr_decay: float = 0.992
     personalization: str = "none"      # none | pfedpara | fedper | local
-    uplink_quant: str = "fp32"         # fp32 | fp16 | int8  (FedPAQ-style)
-    downlink_quant: str = "fp32"
+    uplink_quant: str = "fp32"         # legacy: fp32 | fp16 | int8
+    downlink_quant: str = "fp32"       # legacy: fp32 | fp16 | int8
+    uplink_codec: str = ""             # codec spec, e.g. "delta|topk0.1|int8"
+    downlink_codec: str = ""           # overrides *_quant when non-empty
     oversample: float = 0.0            # straggler over-sampling fraction
     deadline_quantile: float = 0.9
     straggler_sigma: float = 0.5       # lognormal sigma of compute time
@@ -111,6 +139,12 @@ class FLServer:
         self.client_states: Dict[int, Dict] = {}
         self.local_trees: Dict[int, Any] = {}   # personalization residents
         self.history: List[Dict] = []
+        self.uplink_codec = codecs.make_codec(
+            server_cfg.uplink_codec or server_cfg.uplink_quant)
+        self.downlink_codec = codecs.make_codec(
+            server_cfg.downlink_codec or server_cfg.downlink_quant)
+        self._down_ref: Any = None   # last decoded broadcast (delta ref)
+        self._down_ef: Any = None    # server-side downlink error feedback
         self._engine = None
         if server_cfg.engine == "batched":
             from repro.fl.batch_engine import ClientBatch
@@ -118,7 +152,7 @@ class FLServer:
             self._engine = ClientBatch(
                 loss_fn=loss_fn, strategy=strategy, client_cfg=client_cfg,
                 personalization=server_cfg.personalization,
-                uplink_quant=server_cfg.uplink_quant,
+                uplink_codec=self.uplink_codec,
                 fedper_local_keys=FEDPER_LOCAL_KEYS,
                 mesh=mesh, mesh_axis=mesh_axis)
 
@@ -134,20 +168,27 @@ class FLServer:
         return p
 
     def _client_full_params(self, cid: int, download: Any) -> Any:
+        """Client-side model assembly from the (decoded) downlink payload
+        plus personalization residents. First-time participants take
+        their resident half from the global init, so they too train on
+        the decoded broadcast — not on uncompressed global params."""
         mode = self.scfg.personalization
         if mode == "none":
             return download
         resident = self.local_trees.get(cid)
-        if resident is None:  # first participation: start from global
-            return self.global_params
         if mode == "pfedpara":
+            if resident is None:
+                resident = comm.split_pfedpara(self.global_params)[1]
             return comm.merge_pfedpara(download, resident)
         if mode == "fedper":
+            if resident is None:
+                resident = {k: v for k, v in self.global_params.items()
+                            if k in FEDPER_LOCAL_KEYS}
             merged = dict(download)
             merged.update(resident)
             return merged
         if mode == "local":
-            return resident
+            return resident if resident is not None else download
         return download
 
     def _split_upload(self, cid: int, trained: Any):
@@ -192,9 +233,11 @@ class FLServer:
         """Host-side RNG for one round, shared verbatim by both engines:
         sample clients, simulate stragglers/dropout, derive the boolean
         arrived-mask over the sampled order (truncated to the first
-        ``n_target`` arrivals), and draw every sampled client's data
-        seed. The mask — not a filtered list — is the round's
-        participation record, so the two engines agree bitwise."""
+        ``n_target`` ARRIVALS — earliest simulated latency first), and
+        draw every sampled client's data seed. The mask — not a
+        filtered list — is the round's participation record, so the two
+        engines agree bitwise. Download latency is priced at the active
+        downlink codec's wire bytes, not the raw fp32 tree."""
         scfg = self.scfg
         n_target = max(1, int(round(scfg.participation * scfg.clients)))
         n_sample = max(n_target, int(round(n_target * (1 + scfg.oversample))))
@@ -203,13 +246,13 @@ class FLServer:
         lr = self.ccfg.lr * (scfg.lr_decay ** self.round_idx)
 
         probe_payload = self._download_payload(int(sampled[0]))
-        payload_bytes = comm.tree_bytes(probe_payload)
+        payload_bytes = self.downlink_codec.wire_bytes(probe_payload)
         lat = self._simulate_latency(payload_bytes, len(sampled))
         alive = self.rng.rand(len(sampled)) >= scfg.dropout_prob
         deadline = (np.quantile(lat, scfg.deadline_quantile)
                     if scfg.oversample else np.inf)
         ok = alive & (lat <= deadline)
-        mask = ok & (np.cumsum(ok) <= n_target)
+        mask = arrival_mask(ok, lat, n_target)
         seeds = self.rng.randint(1 << 30, size=len(sampled))
         return sampled, mask, seeds, lr, probe_payload
 
@@ -217,15 +260,41 @@ class FLServer:
         base = jax.random.PRNGKey(self.round_idx)
         return jnp.stack([jax.random.fold_in(base, i) for i in range(n)])
 
+    def _encode_downlink(self, payload: Any):
+        """One broadcast encode/decode per round (the downlink payload
+        is identical for every sampled client). Returns the DECODED
+        payload clients actually train on plus its exact per-client
+        wire bytes; advances the server-side delta reference / error
+        feedback. Identity codecs short-circuit so legacy runs are
+        numerically untouched."""
+        codec = self.downlink_codec
+        if codec.is_identity:
+            return payload, codec.wire_bytes(payload)
+        if codec.has_delta and self._down_ref is None:
+            self._down_ref = jax.tree.map(jnp.zeros_like, payload)
+        if codec.has_ef and self._down_ef is None:
+            self._down_ef = codec.ef_init(payload)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.round_idx),
+                                 0x7FFFFFFF)   # distinct from client keys
+        wire, self._down_ef = codec.encode(
+            payload, ref=self._down_ref, ef=self._down_ef, key=key)
+        decoded = codec.decode(wire, ref=self._down_ref)
+        if codec.has_delta:
+            self._down_ref = decoded   # clients cache the last broadcast
+        return decoded, codec.wire_bytes(payload)
+
     def run_round(self) -> Dict:
         sampled, mask, seeds, lr, probe = self._select_round()
         if not mask.any():   # everyone failed: skip round (fault tolerance)
             self.round_idx += 1
             return {"round": self.round_idx, "participants": 0, "skipped": True}
+        down_dec, down_bytes = self._encode_downlink(probe)
         if self._engine is not None:
-            rec = self._run_round_batched(sampled, mask, seeds, lr, probe)
+            rec = self._run_round_batched(sampled, mask, seeds, lr,
+                                          down_dec, down_bytes)
         else:
-            rec = self._run_round_sequential(sampled, mask, seeds, lr, probe)
+            rec = self._run_round_sequential(sampled, mask, seeds, lr,
+                                             down_dec, down_bytes)
         self.round_idx += 1
         rec["round"] = self.round_idx
         rec["arrived_mask"] = mask.astype(int).tolist()
@@ -234,19 +303,33 @@ class FLServer:
         self.history.append(rec)
         return rec
 
+    def _ensure_ef(self, state: Dict, payload: Any) -> Dict:
+        """Attach a zero uplink error-feedback accumulator (payload
+        structure) to a client state that does not have one yet."""
+        if self.uplink_codec.has_ef and "_ef_up" not in state:
+            state = {**state, "_ef_up": self.uplink_codec.ef_init(payload)}
+        return state
+
     # ------------------------------------------- sequential reference
-    def _run_round_sequential(self, sampled, mask, seeds, lr, probe) -> Dict:
+    def _run_round_sequential(self, sampled, mask, seeds, lr, down_dec,
+                              down_bytes) -> Dict:
         scfg = self.scfg
+        up_codec = self.uplink_codec
         quant_keys = self._quant_keys(len(sampled))
+        # per-client wire bytes are shape-only, hence identical across
+        # clients: the upload payload has the downlink payload's structure
+        up_bytes = (0 if scfg.personalization == "local"
+                    else up_codec.wire_bytes(down_dec))
         uploads, weights, losses = [], [], []
         for i, cid in enumerate(int(c) for c in sampled):
             if not mask[i]:
                 continue
-            download = self._download_payload(cid)
-            params = self._client_full_params(cid, download)
+            params = self._client_full_params(cid, down_dec)
             state = self.client_states.get(cid)
             if state is None:
                 state = init_client_state(self.strategy, params)
+            if scfg.personalization != "local":
+                state = self._ensure_ef(state, down_dec)
             if self.strategy.name == "scaffold" and "c" in state:
                 state["c"] = jax.tree.map(jnp.zeros_like, params) \
                     if not self.server_state else self.server_state.get(
@@ -257,17 +340,19 @@ class FLServer:
             trained, state, m = local_update(
                 params, batches, self.loss_fn, self.ccfg, self.strategy,
                 client_state=state, lr=lr)
-            self.client_states[cid] = state
             up = self._split_upload(cid, trained)
             if up is not None:
-                up = comm.quantize_dequantize(up, scfg.uplink_quant,
-                                              quant_keys[i])
+                up, new_ef = up_codec.encode_decode(
+                    up, ref=down_dec, ef=state.get("_ef_up"),
+                    key=quant_keys[i])
+                if new_ef is not None:
+                    state = {**state, "_ef_up": new_ef}
                 uploads.append(up)
                 weights.append(float(len(self.partitions[cid])))
+            self.client_states[cid] = state
             losses.append(m["loss"])
-            self.comm_log.log_round(download, up if up is not None else {},
-                                    1, up_scheme=scfg.uplink_quant,
-                                    down_scheme=scfg.downlink_quant)
+        n_arrived = int(mask.sum())
+        self.comm_log.log_round(n_arrived * down_bytes, n_arrived * up_bytes)
 
         # ---------------------------------------------------- aggregation
         if uploads and scfg.personalization != "local":
@@ -286,17 +371,20 @@ class FLServer:
         }
 
     # ------------------------------------------------ batched engine
-    def _run_round_batched(self, sampled, mask, seeds, lr, probe) -> Dict:
+    def _run_round_batched(self, sampled, mask, seeds, lr, down_dec,
+                           down_bytes) -> Dict:
         scfg = self.scfg
         cids = [int(c) for c in sampled]
         C = len(cids)
 
         full, states = [], []
         for cid in cids:
-            params = self._client_full_params(cid, self._download_payload(cid))
+            params = self._client_full_params(cid, down_dec)
             state = self.client_states.get(cid)
             if state is None:
                 state = init_client_state(self.strategy, params)
+            if scfg.personalization != "local":
+                state = self._ensure_ef(state, down_dec)
             if self.strategy.name == "scaffold" and "c" in state:
                 c = (jax.tree.map(jnp.zeros_like, params)
                      if not self.server_state else self.server_state.get(
@@ -318,7 +406,7 @@ class FLServer:
          new_server_state) = self._engine.run(
             stacked_params, stacked_state, batches, step_mask,
             mask, sizes, lr, self._quant_keys(C),
-            self.server_state, agg_target)
+            self.server_state, agg_target, down_dec)
 
         arrived = np.nonzero(mask)[0]
         for pos in arrived:
@@ -334,11 +422,10 @@ class FLServer:
             self._apply_aggregated(new_global, agg_target)
 
         losses = np.asarray(last_loss)[arrived]
-        up_probe = (tree_index(upload, int(arrived[0]))
-                    if upload is not None else {})
-        self.comm_log.log_round(probe, up_probe, int(mask.sum()),
-                                up_scheme=scfg.uplink_quant,
-                                down_scheme=scfg.downlink_quant)
+        n_arrived = int(mask.sum())
+        up_bytes = (0 if scfg.personalization == "local"
+                    else self.uplink_codec.wire_bytes(down_dec))
+        self.comm_log.log_round(n_arrived * down_bytes, n_arrived * up_bytes)
 
         return {
             "participants": int(mask.sum()),

@@ -179,9 +179,13 @@ def train_fl(args):
                    ServerConfig(clients=args.clients, participation=0.16,
                                 rounds=args.rounds,
                                 personalization=args.personalization,
+                                uplink_codec=args.uplink_codec,
+                                downlink_codec=args.downlink_codec,
                                 engine=args.engine),
                    eval_fn=eval_fn, mesh=mesh)
     hist = srv.run(log_every=1)
+    hist[-1]["comm_up_mb"] = srv.comm_log.up_bytes / 1e6
+    hist[-1]["comm_down_mb"] = srv.comm_log.down_bytes / 1e6
     print(json.dumps(hist[-1], indent=1))
 
 
@@ -216,6 +220,12 @@ def main():
     ap.add_argument("--param", default="fedpara")
     ap.add_argument("--gamma", type=float, default=0.3)
     ap.add_argument("--personalization", default="none")
+    ap.add_argument("--uplink-codec", default="",
+                    help="uplink codec spec, e.g. 'delta|topk0.1|int8' "
+                         "(stages: delta, topk<f>, lowrank<r>, int8, fp16)")
+    ap.add_argument("--downlink-codec", default="",
+                    help="downlink codec spec (same grammar); applied to "
+                         "the payload clients actually train on")
     ap.add_argument("--engine", default="batched",
                     choices=["sequential", "batched"],
                     help="FL round engine: sequential reference loop or "

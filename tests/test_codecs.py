@@ -1,0 +1,265 @@
+"""Codec pipeline unit tests: per-stage round trips, exact wire-byte
+accounting, error-feedback bias reduction, vmap-vs-per-client parity,
+split/merge placeholder alignment, and the downlink-application
+regression (downlink quantization used to be a silent no-op)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import codecs, comm
+from repro.fl.codecs import make_codec, measured_bytes
+from repro.fl.strategies import tree_sub, tree_zeros
+
+
+@pytest.fixture()
+def payload():
+    key = jax.random.PRNGKey(7)
+    ka, kb, kc = jax.random.split(key, 3)
+    return {
+        "fc1": {"x1": jax.random.normal(ka, (40, 6)),
+                "y1": jax.random.normal(kb, (30, 6))},
+        "b1": jax.random.normal(kc, (30,)),
+    }
+
+
+def _maxdiff(a, b):
+    return max(jax.tree.leaves(
+        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b)))
+
+
+# ------------------------------------------------------------ stage trips
+
+def test_identity_codec_is_noop(payload):
+    codec = make_codec("fp32")
+    assert codec.is_identity and not codec.has_ef
+    dec, ef = codec.encode_decode(payload)
+    assert dec is payload and ef is None
+    assert codec.wire_bytes(payload) == comm.tree_bytes(payload)
+
+
+def test_fp16_roundtrip(payload):
+    dec, _ = make_codec("fp16").encode_decode(payload)
+    assert _maxdiff(dec, payload) < 2e-3
+    assert jax.tree.leaves(dec)[0].dtype == jnp.float32
+
+
+def test_int8_roundtrip(payload):
+    dec, _ = make_codec("int8").encode_decode(payload, key=jax.random.PRNGKey(0))
+    for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(payload)):
+        scale = float(jnp.abs(b).max())
+        assert float(jnp.abs(a - b).max()) < scale / 64
+
+
+def test_delta_roundtrip_is_exact(payload):
+    ref = jax.tree.map(lambda x: x + 0.5, payload)
+    codec = make_codec("delta")
+    dec, _ = codec.encode_decode(payload, ref=ref)
+    assert _maxdiff(dec, payload) < 1e-6
+    # the wire carries the difference, not the payload
+    wire, _ = codec.encode(payload, ref=ref)
+    assert _maxdiff(wire, tree_sub(payload, ref)) == 0.0
+
+
+def test_topk_keeps_exactly_k_largest(payload):
+    frac = 0.2
+    codec = make_codec(f"topk{frac}")
+    wire, ef = codec.encode(payload, ef=codec.ef_init(payload))
+    for w, x in zip(jax.tree.leaves(wire), jax.tree.leaves(payload)):
+        k = max(1, math.ceil(frac * x.size))
+        nz = int((np.asarray(w) != 0).sum())
+        assert nz == k
+        kept = np.sort(np.abs(np.asarray(w).ravel()))[-k:]
+        top = np.sort(np.abs(np.asarray(x).ravel()))[-k:]
+        np.testing.assert_allclose(kept, top, atol=1e-7)
+    # residual = input - wire (error feedback)
+    assert _maxdiff(ef, tree_sub(payload, wire)) == 0.0
+
+
+def test_lowrank_reconstructs_lowrank_input():
+    a = jax.random.normal(jax.random.PRNGKey(0), (24, 3))
+    b = jax.random.normal(jax.random.PRNGKey(1), (3, 18))
+    x = {"w": a @ b}   # true rank 3
+    dec, _ = make_codec("lowrank3").encode_decode(x)
+    assert _maxdiff(dec, x) < 1e-4
+    # rank-1 truncation of a rank-3 matrix must lose energy
+    dec1, _ = make_codec("lowrank1").encode_decode(x)
+    assert _maxdiff(dec1, x) > 1e-2
+
+
+def test_lowrank_fractional_rank_and_ineligible_leaves(payload):
+    codec = make_codec("lowrank0.25")
+    wire, _ = codec.encode(payload)
+    assert codecs._is_lr_node(wire["fc1"]["x1"])
+    # 1-D bias passes through untouched
+    np.testing.assert_array_equal(np.asarray(wire["b1"]),
+                                  np.asarray(payload["b1"]))
+
+
+# --------------------------------------------------------------- parsing
+
+def test_spec_validation():
+    assert make_codec("").is_identity
+    assert make_codec("delta|topk0.1|int8").has_ef
+    with pytest.raises(ValueError):
+        make_codec("int8|delta")          # wrong order
+    with pytest.raises(ValueError):
+        make_codec("topk0.1|lowrank4")    # mutually exclusive sparsifiers
+    with pytest.raises(ValueError):
+        make_codec("topk0.1|topk0.2")     # duplicate category
+    with pytest.raises(ValueError):
+        make_codec("gzip")                # unknown stage
+    with pytest.raises(ValueError):
+        make_codec("topk1.5")             # fraction out of range
+
+
+# ------------------------------------------------------------ wire bytes
+
+def test_wire_bytes_exact(payload):
+    sizes = {k: int(np.prod(v.shape)) for k, v in
+             [("x1", payload["fc1"]["x1"]), ("y1", payload["fc1"]["y1"]),
+              ("b1", payload["b1"])]}
+    n = sum(sizes.values())
+    assert make_codec("fp32").wire_bytes(payload) == 4 * n
+    assert make_codec("fp16").wire_bytes(payload) == 2 * n
+    assert make_codec("int8").wire_bytes(payload) == n + 4 * 3  # 3 scales
+    # delta|topk0.1|int8: per leaf k int8 values + 4B indices + 4B scale
+    expect = sum(
+        (lambda k: k * 1 + 4 * k + 4)(max(1, math.ceil(0.1 * s)))
+        for s in sizes.values())
+    assert make_codec("delta|topk0.1|int8").wire_bytes(payload) == expect
+    # delta|lowrank2|int8: eligible 2-D leaves carry r*(m+n) int8 factor
+    # entries + 2 scales; the 1-D bias stays a plain int8 leaf + 1 scale
+    r = 2
+    expect_lr = ((r * (40 + 6) + 8) + (r * (30 + 6) + 8)
+                 + (sizes["b1"] + 4))
+    assert make_codec("delta|lowrank2|int8").wire_bytes(payload) == expect_lr
+
+
+def test_measured_bytes_matches_wire_bytes(payload):
+    key = jax.random.PRNGKey(3)
+    ref = tree_zeros(payload)
+    for spec, kw in [("int8", {}), ("fp16", {}), ("delta|lowrank2|int8", {}),
+                     ("delta|topk0.1|int8", {"topk_frac": 0.1}),
+                     ("topk0.3", {"topk_frac": 0.3})]:
+        codec = make_codec(spec)
+        wire, _ = codec.encode(payload, ref=ref, ef=codec.ef_init(payload),
+                               key=key)
+        assert measured_bytes(wire, **kw) == codec.wire_bytes(payload), spec
+
+
+# ------------------------------------------------------- error feedback
+
+def test_error_feedback_reduces_longrun_bias():
+    """Accumulated EF-top-k transmissions converge to the true signal;
+    naive top-k keeps dropping the same small coordinates forever."""
+    x = {"g": jnp.asarray(np.linspace(0.1, 1.0, 50, dtype=np.float32))}
+    codec = make_codec("topk0.2")
+    T = 20
+    naive = tree_zeros(x)
+    with_ef = tree_zeros(x)
+    ef = codec.ef_init(x)
+    for _ in range(T):
+        dec_naive, _ = codec.encode_decode(x)          # no accumulator
+        naive = jax.tree.map(jnp.add, naive, dec_naive)
+        dec_ef, ef = codec.encode_decode(x, ef=ef)
+        with_ef = jax.tree.map(jnp.add, with_ef, dec_ef)
+    target = jax.tree.map(lambda a: T * a, x)
+    bias_naive = _maxdiff(naive, target) / T
+    bias_ef = _maxdiff(with_ef, target) / T
+    assert bias_naive > 0.05          # small coords never transmitted
+    assert bias_ef < bias_naive / 5   # EF amortizes the truncation away
+
+
+# ----------------------------------------------------- vmap == per-client
+
+def test_vmap_path_matches_per_client(payload):
+    C = 3
+    codec = make_codec("delta|topk0.25|int8")
+    keys = jax.random.split(jax.random.PRNGKey(5), C)
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x * (i + 1) for i in range(C)]), payload)
+    ref = jax.tree.map(lambda x: 0.5 * x, payload)
+    ef0 = codec.ef_init(payload)
+    stacked_ef = jax.tree.map(lambda x: jnp.stack([x] * C), ef0)
+
+    dec_v, ef_v = jax.vmap(
+        lambda u, e, k: codec.encode_decode(u, ref=ref, ef=e, key=k)
+    )(stacked, stacked_ef, keys)
+
+    for i in range(C):
+        one = jax.tree.map(lambda x: x[i], stacked)
+        dec_i, ef_i = codec.encode_decode(one, ref=ref, ef=ef0, key=keys[i])
+        assert _maxdiff(jax.tree.map(lambda x: x[i], dec_v), dec_i) < 1e-6
+        assert _maxdiff(jax.tree.map(lambda x: x[i], ef_v), ef_i) < 1e-6
+
+
+# ------------------------------------- split/merge placeholder alignment
+
+def test_split_merge_preserves_sequence_placeholders():
+    """Regression: list/tuple nodes used to drop None entries on the
+    local side, so merge zipped misaligned sequences and silently
+    replaced leaves."""
+    key = jax.random.PRNGKey(0)
+    leaf = lambda s: jax.random.normal(key, s)
+    p = {
+        "blocks": [
+            {"x1": leaf((8, 2)), "y1": leaf((6, 2)),
+             "x2": leaf((8, 2)), "y2": leaf((6, 2))},
+            {"w": leaf((6, 6))},                      # dense block
+        ],
+        "pair": (leaf((4,)), {"x2": leaf((3, 2)), "x1": leaf((3, 2))}),
+        "head": {"w": leaf((6, 3))},
+    }
+    g, l = comm.split_pfedpara(p)
+    assert len(g["blocks"]) == 2                      # placeholders kept
+    assert len(l["blocks"]) == 2 and l["blocks"][1] is None
+    merged = comm.merge_pfedpara(g, l)
+    flat_p = jax.tree_util.tree_flatten_with_path(p)[0]
+    flat_m = jax.tree_util.tree_flatten_with_path(merged)[0]
+    assert len(flat_p) == len(flat_m)
+    for (ka, va), (kb, vb) in zip(sorted(flat_p, key=str),
+                                  sorted(flat_m, key=str)):
+        assert str(ka) == str(kb)
+        np.testing.assert_array_equal(va, vb)
+
+
+def test_split_merge_roundtrip_property():
+    """Randomized nested dict/list/tuple trees round-trip exactly."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    rng = np.random.RandomState(0)
+
+    def leaves():
+        return st.builds(lambda s: rng.randn(s).astype(np.float32),
+                         st.integers(1, 4))
+
+    def trees(depth=3):
+        if depth == 0:
+            return leaves()
+        sub = trees(depth - 1)
+        fed = st.fixed_dictionaries(
+            {"x1": leaves(), "y1": leaves(), "x2": leaves(), "y2": leaves()})
+        return st.one_of(
+            leaves(), fed,
+            st.dictionaries(st.sampled_from(["a", "b", "w"]), sub,
+                            min_size=1, max_size=2),
+            st.lists(sub, min_size=1, max_size=3),
+            st.lists(sub, min_size=1, max_size=3).map(tuple),
+        )
+
+    @given(trees())
+    @settings(max_examples=30, deadline=None)
+    def check(tree):
+        g, l = comm.split_pfedpara(tree)
+        merged = comm.merge_pfedpara(g, l)
+        fa = jax.tree_util.tree_flatten_with_path(tree)[0]
+        fb = jax.tree_util.tree_flatten_with_path(merged)[0]
+        assert [str(k) for k, _ in fa] == [str(k) for k, _ in fb]
+        for (_, va), (_, vb) in zip(fa, fb):
+            np.testing.assert_array_equal(va, vb)
+
+    check()

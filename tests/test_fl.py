@@ -43,6 +43,7 @@ def task():
                 loss_fn=loss_fn, eval_fn=eval_fn)
 
 
+@pytest.mark.slow  # 4-round FL loop per strategy; parity is covered fast
 @pytest.mark.parametrize("strategy", ["fedavg", "fedprox", "scaffold",
                                       "feddyn", "fedadam"])
 def test_strategies_learn(task, strategy):
@@ -141,3 +142,67 @@ def test_fedpaq_uplink_quantization_runs(task):
                                 uplink_quant="int8"), eval_fn=task["eval_fn"])
     hist = srv.run()
     assert np.isfinite(hist[-1]["mean_loss"])
+
+
+def _one_round_server(task, **server_kw):
+    srv = FLServer(task["loss_fn"], task["params"], task["tr"], task["parts"],
+                   make_strategy("fedavg"),
+                   ClientConfig(lr=0.05, batch=32, epochs=1),
+                   ServerConfig(clients=12, participation=0.5, rounds=1,
+                                **server_kw))
+    srv.run()
+    return srv
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_downlink_quantization_is_applied(task, engine):
+    """Regression: downlink_quant used to be charged to CommLog but
+    never applied to the payload clients trained on. An int8 downlink
+    must change the client training inputs — and therefore the
+    aggregated global params — in BOTH engines."""
+    srv_fp32 = _one_round_server(task, engine=engine)
+    srv_int8 = _one_round_server(task, engine=engine, downlink_quant="int8")
+    diffs = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()),
+        srv_fp32.global_params, srv_int8.global_params))
+    assert max(diffs) > 1e-6, "int8 downlink did not change training"
+    # and the decoded broadcast itself differs from the raw payload
+    down_dec, _ = srv_int8._encode_downlink(srv_int8._download_payload(0))
+    raw = srv_int8._download_payload(0)
+    assert max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), down_dec, raw))) > 0
+
+
+def test_commlog_bytes_equal_measured_encoded_bytes(task):
+    """CommLog accounting must equal the bytes of the actually-encoded
+    wire trees, not scheme-priced dense payloads."""
+    from repro.fl import codecs
+
+    srv = _one_round_server(task, uplink_quant="int8", downlink_quant="int8")
+    n = srv.history[-1]["participants"]
+    payload = srv._download_payload(0)
+    codec = srv.downlink_codec
+    wire, _ = codec.encode(payload, key=jax.random.PRNGKey(0))
+    measured = codecs.measured_bytes(wire)
+    assert srv.comm_log.down_bytes == n * measured
+    assert srv.comm_log.up_bytes == n * measured  # same structure both links
+    assert measured == codec.wire_bytes(payload)
+
+
+def test_straggler_mask_keeps_first_arrivals():
+    """Regression: the mask used to keep the first n_target in
+    *sampling* order; it must keep the n_target earliest *arrivals*."""
+    from repro.fl.server import arrival_mask
+
+    lat = np.array([5.0, 1.0, 4.0, 2.0, 3.0])
+    ok = np.array([True, True, True, True, True])
+    np.testing.assert_array_equal(
+        arrival_mask(ok, lat, 3), [False, True, False, True, True])
+    # dropped-out clients never count toward the target
+    ok2 = np.array([True, False, True, True, True])
+    np.testing.assert_array_equal(
+        arrival_mask(ok2, lat, 2), [False, False, False, True, True])
+    # ties broken stably by sampling position
+    lat3 = np.array([2.0, 1.0, 1.0])
+    np.testing.assert_array_equal(
+        arrival_mask(np.ones(3, bool), lat3, 2), [False, True, True])

@@ -114,6 +114,27 @@ def test_quantized_uplink_parity(task):
     _assert_parity(seq, bat)
 
 
+def test_full_codec_stack_parity(task):
+    """Acceptance: sequential and batched agree under
+    "delta|topk0.1|int8" on BOTH links — including the client-stacked
+    error-feedback accumulators threaded through client_states."""
+    seq, bat = _run_pair(task, rounds=3,
+                         uplink_codec="delta|topk0.1|int8",
+                         downlink_codec="delta|topk0.1|int8")
+    _assert_parity(seq, bat)
+    # error feedback is live: accumulators exist and are non-zero
+    efs = [st["_ef_up"] for st in seq.client_states.values()]
+    assert efs and any(float(jnp.abs(l).max()) > 0
+                       for e in efs for l in jax.tree.leaves(e))
+
+
+def test_codec_parity_with_personalization(task):
+    seq, bat = _run_pair(task, rounds=2, personalization="pfedpara",
+                         uplink_codec="delta|topk0.2|int8",
+                         downlink_codec="fp16")
+    _assert_parity(seq, bat, check_residents=True)
+
+
 def test_batched_engine_learns(task):
     cfg, params, loss_fn = _make(task, "fedpara")
     parts = dirichlet_partition(task["tr"]["y"], 8, 0.5)

@@ -35,6 +35,10 @@ from repro.nn import recurrent as rec
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# multi-round FL training loops + subprocess train.py runs: minutes, not
+# seconds — excluded from the PR CI job (see pytest.ini / ci.yml)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def image_task():
