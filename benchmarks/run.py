@@ -45,6 +45,16 @@ def main() -> None:
             failures += 1
             print(f"comm_codecs,0,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if not args.only or "grad" in args.only or "kernel" in args.only:
+        try:
+            from benchmarks import fedpara_grad
+
+            for name, us, derived in fedpara_grad.csv_rows():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"fedpara_grad,0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
     if not args.skip_roofline:
         for name, us, derived in roofline.csv_rows():
             print(f"{name},{us:.1f},{derived}", flush=True)

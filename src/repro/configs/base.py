@@ -20,6 +20,10 @@ class ParamCfg:
     gamma: float = 0.1             # paper's rank interpolation knob
     factorize_embeddings: bool = False  # paper keeps embeddings/last-FC dense
     min_dim_for_factorization: int = 128  # below this, 2R(m+n) >= mn anyway
+    use_pallas: bool = False       # fused differentiable fedpara_matmul in
+                                   # every dense() of this parameterization:
+                                   # training never materializes W (custom
+                                   # VJP, repro.kernels.fedpara_grad)
 
 
 @dataclass(frozen=True)

@@ -109,10 +109,15 @@ def init_pfedpara(key: jax.Array, m: int, n: int, r: int, dtype=jnp.float32) -> 
 
     W2 factors start near zero so W ≈ W1 at initialization (the "+1"
     acts as a switch, paper §2.3); W1 carries low-rank He scaling.
+    The personal-half std is 0.5·std1: W2 entries are still tiny
+    (σ_W2 ≈ r·std2² ≪ 1, so W ≈ W1 holds) but the W2 factor GRADIENTS —
+    which scale with the factor magnitudes (dX2 = (dW ⊙ W1) Y2) — are
+    5× larger than at the old 0.1·std1, so the personal half actually
+    adapts within few-round regimes instead of staying frozen at init.
     """
     k1, k2, k3, k4 = jax.random.split(key, 4)
     std1 = lowrank_factor_std(m, r)
-    std2 = 0.1 * std1
+    std2 = 0.5 * std1
     return {
         "x1": jax.random.normal(k1, (m, r), dtype) * std1,  # global
         "y1": jax.random.normal(k2, (n, r), dtype) * std1,  # global

@@ -29,6 +29,14 @@ Numerical contract: with the same round selection (mask, seeds, keys)
 the engine matches the sequential reference to fp32 tolerance; the
 aggregation mask itself is bitwise identical because both engines
 derive it from the same host-side RNG draws (``FLServer._select_round``).
+
+Pallas interplay: when the model's loss runs the fused differentiable
+fedpara_matmul (``ParamCfg(use_pallas=True)``), the client-axis
+``jax.vmap`` here batches its custom-VJP forward/backward Pallas calls
+through Pallas' batching rule — the mapped client axis folds into a
+leading grid dimension, so each layer's compose+matmul (and each of its
+three backward kernels) is ONE kernel launch for the whole client
+batch, not C sequential launches.
 """
 from __future__ import annotations
 

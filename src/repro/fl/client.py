@@ -5,6 +5,13 @@ correction, FedDyn dynamic regularizer) and parameterization-agnostic —
 FedPara factors are just the params pytree. Optionally applies the
 Jacobian-correction regularizer (supplementary Eq. 9) for matrix-
 parameterized models.
+
+The ``jax.value_and_grad`` in ``_step_math`` traces whatever the model's
+``loss_fn`` contains — including the fused Pallas fedpara_matmul, which
+is a ``jax.custom_vjp`` (``repro.kernels.fedpara_grad``): with
+``ParamCfg(use_pallas=True)`` every local step's forward AND backward
+run dense-W-free, the local-training cost drops from O(mn) to
+O(r(m+n)) HBM bytes per layer, and no engine code changes.
 """
 from __future__ import annotations
 

@@ -1,0 +1,36 @@
+"""Block-size selection shared by the fused forward and backward kernels.
+
+One (block_b, block_m, block_n) choice per (m, n, r) regime, so the
+custom-VJP forward and its backward kernels tile identically (the
+backward's VMEM high-water mark is the (bm, bn) dW scratch plus four
+factor slices — the same working set the forward composes). ``r`` rides
+along in each tile's minor dimension (bm·r / bn·r factor slices), so
+the regimes are keyed on the layer extent max(m, n) alone; the tiles
+stay within VMEM budget up to r ≈ 512.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+# max(m, n) lower bound -> (block_b, block_m, block_n); first match
+# wins, rows ordered largest-extent first.
+_TABLE = (
+    # huge layers (405B-config FFN): wide n tiles amortize factor reloads
+    (8192, (128, 256, 512)),
+    # large MXU-aligned layers
+    (1024, (128, 256, 256)),
+    # mid-size layers; smaller tiles keep padding waste bounded
+    (256, (64, 256, 256)),
+    # small layers (MLP/LSTM miniatures): one or two tiles per axis
+    (0, (32, 128, 128)),
+)
+
+
+def select_blocks(m: int, n: int, r: int) -> Tuple[int, int, int]:
+    """(block_b, block_m, block_n) for a (m, n) layer of inner rank r."""
+    del r  # tiles carry r in the minor dim; extent decides the regime
+    mn = max(m, n)
+    for min_mn, blocks in _TABLE:
+        if mn >= min_mn:
+            return blocks
+    return _TABLE[-1][1]

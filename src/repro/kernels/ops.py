@@ -3,24 +3,76 @@
 ``interpret`` defaults to True when no TPU is present so the same code
 path runs (slowly but correctly) on CPU; on TPU backends the compiled
 Mosaic kernels are used.
+
+``fedpara_matmul`` is DIFFERENTIABLE: it is a ``jax.custom_vjp`` whose
+forward and backward are both fused Pallas kernels
+(``repro.kernels.fedpara_grad``), so ``jax.value_and_grad`` of a loss
+through it never materializes the dense (m, n) weight or its cotangent
+— in HBM the training step moves only factors and activations,
+O(r·(m+n) + B·(m+n)) bytes instead of O(m·n). All three paper variants
+(fedpara, fedpara_tanh, pfedpara) are supported, block sizes come from
+one table shared by forward and backward (``repro.kernels.blocks``),
+and client-stacked (C, ...) inputs — or ``jax.vmap`` over a client axis,
+as in the batched FL engine — lower to a single launch per layer.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import blocks, fedpara_grad, ref
 from repro.kernels.fedpara_compose import fedpara_compose as _compose
-from repro.kernels.fedpara_matmul import fedpara_matmul as _matmul
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def fedpara_matmul(x, x1, y1, x2, y2, *, use_tanh=False, interpret=None, **kw):
-    """y = x @ ((X1Y1ᵀ)⊙(X2Y2ᵀ)) — fused, W never materialized in HBM."""
+def resolve_kind(kind=None, use_tanh: bool = False) -> str:
+    if kind is None:
+        return "fedpara_tanh" if use_tanh else "fedpara"
+    if kind not in ("fedpara", "fedpara_tanh", "pfedpara"):
+        raise ValueError(f"unsupported fused-matmul kind: {kind!r}")
+    return kind
+
+
+def _resolve_cfg(x1, y1, kind, use_tanh, interpret, block_b, block_m, block_n):
+    kind = resolve_kind(kind, use_tanh)
     interpret = _default_interpret() if interpret is None else interpret
-    return _matmul(x, x1, y1, x2, y2, use_tanh=use_tanh, interpret=interpret, **kw)
+    m, n, r = x1.shape[-2], y1.shape[-2], x1.shape[-1]
+    tb, tm, tn = blocks.select_blocks(m, n, r)
+    return (kind, interpret, block_b or tb, block_m or tm, block_n or tn)
+
+
+def fedpara_matmul(x, x1, y1, x2, y2, *, kind=None, use_tanh=False,
+                   interpret=None, block_b=None, block_m=None, block_n=None,
+                   out_dtype=None):
+    """y = x @ (f1(X1Y1ᵀ)⊙f2(X2Y2ᵀ)) — fused AND differentiable; W never
+    materialized in HBM on forward or backward."""
+    kind, interpret, bb, bm, bn = _resolve_cfg(
+        x1, y1, kind, use_tanh, interpret, block_b, block_m, block_n)
+    f = fedpara_grad.differentiable_matmul(
+        kind == "fedpara_tanh", kind == "pfedpara", bb, bm, bn, interpret,
+        jnp.dtype(out_dtype).name if out_dtype is not None else None)
+    return f(x, x1, y1, x2, y2)
+
+
+def fedpara_matmul_vjp(x, x1, y1, x2, y2, dy, *, kind=None, use_tanh=False,
+                       interpret=None, block_b=None, block_m=None,
+                       block_n=None):
+    """Directly evaluate the fused backward: (dx, dX1, dY1, dX2, dY2).
+
+    Exposed for tests/benchmarks; training paths get this implicitly via
+    ``jax.grad`` through :func:`fedpara_matmul`.
+    """
+    kind, interpret, bb, bm, bn = _resolve_cfg(
+        x1, y1, kind, use_tanh, interpret, block_b, block_m, block_n)
+    kw = dict(use_tanh=kind == "fedpara_tanh", plus_one=kind == "pfedpara",
+              block_b=bb, block_m=bm, block_n=bn, interpret=interpret)
+    dx = fedpara_grad.fedpara_dx(dy, x1, y1, x2, y2, out_dtype=x.dtype, **kw)
+    dx1, dx2 = fedpara_grad.fedpara_dx_factors(x, dy, x1, y1, x2, y2, **kw)
+    dy1, dy2 = fedpara_grad.fedpara_dy_factors(x, dy, x1, y1, x2, y2, **kw)
+    return dx, dx1, dy1, dx2, dy2
 
 
 def fedpara_compose(x1, y1, x2, y2, *, use_tanh=False, interpret=None, **kw):
@@ -39,3 +91,5 @@ def pfedpara_compose(x1, y1, x2, y2, *, interpret=None, **kw):
 fedpara_matmul_ref = ref.fedpara_matmul_ref
 fedpara_compose_ref = ref.fedpara_compose_ref
 pfedpara_compose_ref = ref.pfedpara_compose_ref
+fedpara_matmul_vjp_ref = ref.fedpara_matmul_vjp_ref
+select_blocks = blocks.select_blocks

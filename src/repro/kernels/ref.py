@@ -1,8 +1,19 @@
-"""Pure-jnp oracles for the Pallas kernels (ground truth for tests)."""
+"""Pure-jnp oracles for the Pallas kernels (ground truth for tests).
+
+``kind`` selects the paper variant — "fedpara" (identity), "fedpara_tanh"
+(tanh ⊙ tanh, supp. B) or "pfedpara" (the "+1 switch", §2.3). The legacy
+``use_tanh`` flag maps onto ``kind`` for older call sites.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def _resolve_kind(kind, use_tanh):
+    if kind is None:
+        return "fedpara_tanh" if use_tanh else "fedpara"
+    return kind
 
 
 def fedpara_compose_ref(
@@ -12,13 +23,17 @@ def fedpara_compose_ref(
     y2: jax.Array,
     *,
     use_tanh: bool = False,
+    kind: str = None,
     out_dtype=None,
 ) -> jax.Array:
-    """W = (X1 Y1ᵀ) ⊙ (X2 Y2ᵀ), computed densely in fp32."""
+    """W = f1(X1 Y1ᵀ) ⊙ f2(X2 Y2ᵀ), computed densely in fp32."""
+    kind = _resolve_kind(kind, use_tanh)
     w1 = x1.astype(jnp.float32) @ y1.astype(jnp.float32).T
     w2 = x2.astype(jnp.float32) @ y2.astype(jnp.float32).T
-    if use_tanh:
+    if kind == "fedpara_tanh":
         w1, w2 = jnp.tanh(w1), jnp.tanh(w2)
+    if kind == "pfedpara":
+        w2 = w2 + 1.0
     w = w1 * w2
     return w.astype(out_dtype or x1.dtype)
 
@@ -31,10 +46,12 @@ def fedpara_matmul_ref(
     y2: jax.Array,
     *,
     use_tanh: bool = False,
+    kind: str = None,
     out_dtype=None,
 ) -> jax.Array:
-    """y = x @ W with W = (X1Y1ᵀ)⊙(X2Y2ᵀ); x: (B, m) -> y: (B, n)."""
-    w = fedpara_compose_ref(x1, y1, x2, y2, use_tanh=use_tanh, out_dtype=jnp.float32)
+    """y = x @ W with W = f1(X1Y1ᵀ)⊙f2(X2Y2ᵀ); x: (B, m) -> y: (B, n)."""
+    kind = _resolve_kind(kind, use_tanh)
+    w = fedpara_compose_ref(x1, y1, x2, y2, kind=kind, out_dtype=jnp.float32)
     y = x.astype(jnp.float32) @ w
     return y.astype(out_dtype or x.dtype)
 
@@ -43,7 +60,44 @@ def pfedpara_compose_ref(
     x1: jax.Array, y1: jax.Array, x2: jax.Array, y2: jax.Array, *, out_dtype=None
 ) -> jax.Array:
     """W = W1 ⊙ (W2 + 1) — pFedPara personalization compose."""
+    return fedpara_compose_ref(x1, y1, x2, y2, kind="pfedpara",
+                               out_dtype=out_dtype)
+
+
+def fedpara_matmul_vjp_ref(
+    x: jax.Array,
+    x1: jax.Array,
+    y1: jax.Array,
+    x2: jax.Array,
+    y2: jax.Array,
+    dy: jax.Array,
+    *,
+    kind: str = "fedpara",
+):
+    """Closed-form dense VJP oracle: (dx, dX1, dY1, dX2, dY2) in fp32.
+
+    Materializes W, dW = xᵀdy and the chain-rule tiles densely — the
+    ground truth the fused backward kernels must reproduce without ever
+    building these (m, n) intermediates.
+    """
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
     w1 = x1.astype(jnp.float32) @ y1.astype(jnp.float32).T
     w2 = x2.astype(jnp.float32) @ y2.astype(jnp.float32).T
-    w = w1 * (w2 + 1.0)
-    return w.astype(out_dtype or x1.dtype)
+    if kind == "fedpara_tanh":
+        t1, t2 = jnp.tanh(w1), jnp.tanh(w2)
+        f1, f2 = t1, t2
+        d1, d2 = 1.0 - t1 * t1, 1.0 - t2 * t2
+    elif kind == "pfedpara":
+        f1, f2 = w1, w2 + 1.0
+        d1 = d2 = None
+    else:
+        f1, f2 = w1, w2
+        d1 = d2 = None
+    w = f1 * f2
+    dw = xf.T @ dyf
+    g1 = dw * f2 if d1 is None else dw * f2 * d1
+    g2 = dw * f1 if d2 is None else dw * f1 * d2
+    dx = (dyf @ w.T).astype(x.dtype)
+    return (dx, g1 @ y1.astype(jnp.float32), g1.T @ x1.astype(jnp.float32),
+            g2 @ y2.astype(jnp.float32), g2.T @ x2.astype(jnp.float32))

@@ -75,7 +75,8 @@ def train_pods(args):
 
     shape = ShapeCfg("custom", seq, batch, "train")
     opts = ModelOptions(attn_chunk=min(512, seq), ssm_chunk=min(256, seq),
-                        logit_chunk=min(1024, seq), scan_layers=True)
+                        logit_chunk=min(1024, seq), scan_layers=True,
+                        use_pallas=args.use_pallas)
     model = build_model(cfg, opts)
     rules = specs_mod.rules_for(mesh, shape, fed=n_pods > 1)
     key = jax.random.PRNGKey(args.seed)
@@ -160,7 +161,8 @@ def train_fl(args):
         tr, te = train_test_split(data)
         cfg = rec.MLPConfig(in_dim=784, hidden=256, classes=10,
                             param=ParamCfg(kind=args.param, gamma=args.gamma,
-                                           min_dim_for_factorization=8))
+                                           min_dim_for_factorization=8,
+                                           use_pallas=args.use_pallas))
         params = rec.init_mlp_model(jax.random.PRNGKey(args.seed), cfg)
         loss_fn = functools.partial(_mlp_loss, cfg)
         def eval_fn(p):
@@ -230,6 +232,13 @@ def main():
                     choices=["sequential", "batched"],
                     help="FL round engine: sequential reference loop or "
                          "the client-batched vmap/shard_map program")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route every FedPara dense() through the fused "
+                         "differentiable Pallas kernels: local training "
+                         "never materializes the dense W (custom VJP; "
+                         "O(r(m+n)) HBM instead of O(mn) per layer/step). "
+                         "Applies to both --mode fl (MLP param cfg) and "
+                         "--mode pods (transformer ModelOptions)")
     args = ap.parse_args()
     if args.mode == "pods":
         train_pods(args)

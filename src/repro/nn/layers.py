@@ -70,21 +70,29 @@ def dense(
     dtype=jnp.bfloat16,
     use_pallas: bool = False,
 ) -> jax.Array:
-    """y = x @ W for any parameterization. ``x``: (..., m) -> (..., n)."""
-    if use_pallas and "x1" in sub and pcfg.kind in ("fedpara", "fedpara_tanh"):
+    """y = x @ W for any parameterization. ``x``: (..., m) -> (..., n).
+
+    With ``use_pallas`` (argument or ``pcfg.use_pallas``) every FedPara
+    variant — fedpara, fedpara_tanh AND pfedpara — routes through the
+    fused differentiable matmul (``repro.kernels.ops.fedpara_matmul``, a
+    custom-VJP pair of Pallas kernels), so neither the forward nor the
+    ``jax.grad`` backward ever materializes the dense (m, n) weight.
+    """
+    if ((use_pallas or pcfg.use_pallas) and "x1" in sub
+            and sub["x1"].ndim == 2
+            and pcfg.kind in ("fedpara", "fedpara_tanh", "pfedpara")):
         from repro.kernels import ops
 
         lead = x.shape[:-1]
         y = ops.fedpara_matmul(
             x.reshape(-1, x.shape[-1]).astype(dtype),
             sub["x1"], sub["y1"], sub["x2"], sub["y2"],
-            use_tanh=(pcfg.kind == "fedpara_tanh"),
+            kind=pcfg.kind,
             out_dtype=dtype,
         )
         return y.reshape(*lead, y.shape[-1])
+    # materialize_auto already delivers ``dtype`` for every factor path
     w = materialize_auto(sub, pcfg.kind, dtype)
-    if w.dtype != dtype:  # dense master weights: cast before the dot
-        w = w.astype(dtype)
     return jnp.einsum("...m,mn->...n", x.astype(dtype), w)
 
 

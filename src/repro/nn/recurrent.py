@@ -4,6 +4,11 @@ two-FC-layer MLP (FEMNIST/MNIST personalization experiments).
 The LSTM gate matrices (input-to-hidden and hidden-to-hidden) are
 FedPara-factorized; the embedding and output head stay dense, per the
 paper's convention of leaving small/last layers unfactorized.
+
+All parameterized matmuls route through :func:`repro.nn.layers.dense`,
+so ``ParamCfg(use_pallas=True)`` switches every FL client's local
+training step onto the fused differentiable Pallas kernels (W never
+materialized, forward or backward) with no model-code changes.
 """
 from __future__ import annotations
 
@@ -14,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ParamCfg
-from repro.nn.layers import init_dense, materialize_auto
+from repro.nn.layers import dense, init_dense
 
 
 @dataclass(frozen=True)
@@ -46,11 +51,10 @@ def init_lstm(key: jax.Array, cfg: LSTMConfig) -> Dict:
     return params
 
 
-def _cell_step(p, kind, carry, x_t):
+def _cell_step(p, pcfg: ParamCfg, carry, x_t):
     h, c = carry
-    wi = materialize_auto(p["wi"], kind)
-    wh = materialize_auto(p["wh"], kind)
-    z = x_t @ wi + h @ wh + p["b"]
+    z = (dense(p["wi"], x_t, pcfg, jnp.float32)
+         + dense(p["wh"], h, pcfg, jnp.float32) + p["b"])
     i, f, g, o = jnp.split(z, 4, axis=-1)
     c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
     h = jax.nn.sigmoid(o) * jnp.tanh(c)
@@ -63,8 +67,7 @@ def lstm_apply(params: Dict, cfg: LSTMConfig, tokens: jax.Array) -> jax.Array:
     x = params["embed"]["w"][tokens]
     for p in params["cells"]:
         h0 = (jnp.zeros((B, cfg.hidden)), jnp.zeros((B, cfg.hidden)))
-        kind = cfg.param.kind
-        _, hs = jax.lax.scan(lambda c, xt: _cell_step(p, kind, c, xt),
+        _, hs = jax.lax.scan(lambda c, xt: _cell_step(p, cfg.param, c, xt),
                              h0, jnp.moveaxis(x, 1, 0))
         x = jnp.moveaxis(hs, 0, 1)
     return x @ params["head"]["w"]
@@ -107,8 +110,9 @@ def init_mlp_model(key: jax.Array, cfg: MLPConfig) -> Dict:
 
 
 def mlp_apply(params: Dict, cfg: MLPConfig, x: jax.Array) -> jax.Array:
-    h = jax.nn.relu(x @ materialize_auto(params["fc1"], cfg.param.kind) + params["b1"])
-    return h @ materialize_auto(params["fc2"], cfg.param.kind) + params["b2"]
+    h = jax.nn.relu(dense(params["fc1"], x, cfg.param, jnp.float32)
+                    + params["b1"])
+    return dense(params["fc2"], h, cfg.param, jnp.float32) + params["b2"]
 
 
 def mlp_loss(params: Dict, cfg: MLPConfig, batch: Dict) -> jax.Array:

