@@ -15,10 +15,8 @@ Run: PYTHONPATH=src python -m benchmarks.comm_codecs [--rounds 10]
 """
 import argparse
 import json
-import os
 import time
 
-ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
 CODEC_SWEEP = [
     ("fp32", ""),
@@ -129,9 +127,9 @@ def run_bench(rounds: int = 10, clients: int = 8) -> dict:
             {"name": best["name"],
              "reduction_vs_fp32": best["reduction_vs_fp32"]} if best else None),
     }
-    os.makedirs(ART_DIR, exist_ok=True)
-    with open(os.path.join(ART_DIR, "BENCH_comm.json"), "w") as f:
-        json.dump(art, f, indent=1)
+    from benchmarks.common import write_artifact
+
+    write_artifact("BENCH_comm.json", art)
     return art
 
 

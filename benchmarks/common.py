@@ -9,6 +9,8 @@ personalization — not the absolute CIFAR numbers.
 from __future__ import annotations
 
 import functools
+import json
+import os
 import time
 from typing import Callable, Dict, Optional, Tuple
 
@@ -38,6 +40,25 @@ from repro.nn.recurrent import (
     mlp_loss,
 )
 from repro.nn.vision import VGG_SMALL_PLAN, VGGConfig, init_vgg, vgg_accuracy, vgg_loss
+
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_artifact(name: str, art: dict) -> str:
+    """Write a BENCH_*.json artifact under benchmarks/artifacts/ (the
+    canonical location) and mirror it to the repo root, where the
+    perf-trajectory tooling looks for BENCH_*.json files. Returns the
+    canonical path."""
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, name)
+    payload = json.dumps(art, indent=1)
+    with open(path, "w") as f:
+        f.write(payload)
+    with open(os.path.join(REPO_ROOT, name), "w") as f:
+        f.write(payload)
+    return path
 
 
 def timer(fn):

@@ -24,10 +24,8 @@ Run: PYTHONPATH=src python -m benchmarks.fedpara_grad
 """
 import argparse
 import json
-import os
 import time
 
-ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
 # (label, B, m, n, r): mid-size and 405B-FFN-config layers for the HBM
 # accounting; the small layer is executed for real for the timing row.
@@ -136,9 +134,9 @@ def run_bench(iters: int = 5) -> dict:
         "hbm": hbm_rows(),
         "timing": timing_row(iters),
     }
-    os.makedirs(ART_DIR, exist_ok=True)
-    with open(os.path.join(ART_DIR, "BENCH_kernels.json"), "w") as f:
-        json.dump(art, f, indent=1)
+    from benchmarks.common import write_artifact
+
+    write_artifact("BENCH_kernels.json", art)
     return art
 
 

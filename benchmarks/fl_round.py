@@ -9,10 +9,7 @@ Run: PYTHONPATH=src python -m benchmarks.fl_round [--clients 16]
 """
 import argparse
 import json
-import os
 import time
-
-ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
 
 def build_server(engine: str, clients: int, seed: int = 0):
@@ -67,9 +64,9 @@ def run_bench(clients: int = 16, rounds: int = 3) -> dict:
         "batched_s": bat,
         "speedup": seq / bat,
     }
-    os.makedirs(ART_DIR, exist_ok=True)
-    with open(os.path.join(ART_DIR, "BENCH_fl_round.json"), "w") as f:
-        json.dump(art, f, indent=1)
+    from benchmarks.common import write_artifact
+
+    write_artifact("BENCH_fl_round.json", art)
     return art
 
 

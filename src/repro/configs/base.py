@@ -152,6 +152,11 @@ class FedCfg:
     sync: str = "factors"          # factors | full  (full = dense baseline)
     strategy: str = "fedavg"       # fedavg | fedprox | fedadam ...
     compression: str = "none"      # none | fp16 | int8 | powersgd
+    engine: str = "batched"        # client-sim engine: sequential |
+                                   # batched | streaming (fl mode)
+    client_chunk: int = 16         # streaming engine: clients per
+                                   # lax.scan step (the round's memory
+                                   # high-water mark is O(chunk·model))
 
 
 @dataclass(frozen=True)

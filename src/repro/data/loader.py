@@ -25,6 +25,16 @@ def client_epochs(data: Dict[str, np.ndarray], idx: np.ndarray, batch: int,
             yield {k: v[sel] for k, v in data.items()}
 
 
+def client_step_count(n_samples: int, batch: int, epochs: int) -> int:
+    """Number of local steps ``client_epochs`` yields for a client with
+    ``n_samples`` points — computed from sizes alone, so chunked engines
+    can fix a round-wide step axis without materializing any stream."""
+    if n_samples <= 0:
+        return 0
+    per_epoch = n_samples // batch if n_samples >= batch else 1
+    return per_epoch * epochs
+
+
 def stack_client_epochs(
     data: Dict[str, np.ndarray],
     partitions: Sequence[np.ndarray],
@@ -32,6 +42,7 @@ def stack_client_epochs(
     batch: int,
     epochs: int,
     seeds: Sequence[int],
+    pad_steps: Optional[int] = None,
 ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
     """Materialize every sampled client's ``client_epochs`` stream into one
     stacked batch tensor for the client-batched engine.
@@ -45,7 +56,10 @@ def stack_client_epochs(
     Short batches from tiny clients (fewer than ``batch`` samples) are
     filled by wrapping their indices; this is the one place the batched
     engine can diverge from the sequential reference, and only for
-    clients whose whole dataset is smaller than one minibatch."""
+    clients whose whole dataset is smaller than one minibatch.
+    ``pad_steps`` fixes the step axis S explicitly (must cover every
+    client's real step count) so chunked callers keep one shape
+    signature across chunks and rounds."""
     per_client: List[List[Dict[str, np.ndarray]]] = []
     for cid, seed in zip(cids, seeds):
         idx = partitions[cid]
@@ -54,6 +68,11 @@ def stack_client_epochs(
             if len(idx) else [])  # empty client: zero real steps
     C = len(per_client)
     S = max(1, max(len(s) for s in per_client))
+    if pad_steps is not None:
+        if pad_steps < S:
+            raise ValueError(
+                f"pad_steps={pad_steps} below max real step count {S}")
+        S = max(1, pad_steps)
     keys = list(data.keys())
 
     def pad_batch(b: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:

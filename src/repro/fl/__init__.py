@@ -1,19 +1,31 @@
-from repro.fl import batch_engine, client, codecs, comm, server, strategies
+from repro.fl import (
+    batch_engine,
+    client,
+    codecs,
+    comm,
+    server,
+    strategies,
+    stream_engine,
+)
 from repro.fl.batch_engine import (
     ClientBatch,
     batched_local_update,
     batched_personalized_eval,
+    chunk_round_program,
+    select_upload,
 )
 from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.codecs import Codec, make_codec
 from repro.fl.comm import CommLog, merge_pfedpara, split_pfedpara
 from repro.fl.server import FLServer, ServerConfig
 from repro.fl.strategies import Strategy, make_strategy
+from repro.fl.stream_engine import StreamingRound
 
 __all__ = [
     "batch_engine", "client", "codecs", "comm", "server", "strategies",
-    "ClientBatch", "batched_local_update", "batched_personalized_eval",
+    "stream_engine", "ClientBatch", "batched_local_update",
+    "batched_personalized_eval", "chunk_round_program", "select_upload",
     "ClientConfig", "init_client_state", "local_update", "Codec",
     "make_codec", "CommLog", "merge_pfedpara", "split_pfedpara", "FLServer",
-    "ServerConfig", "Strategy", "make_strategy",
+    "ServerConfig", "Strategy", "make_strategy", "StreamingRound",
 ]

@@ -111,23 +111,38 @@ def batched_local_update(
 
     f = jax.vmap(one_client)
     if mesh is not None and axis in mesh.axis_names:
+        from repro.distributed.collectives import shard_map
+
         C = step_mask.shape[0]
-        if C % mesh.shape[axis] == 0:
-            from repro.distributed.collectives import shard_map
-
-            spec = P(axis)
-            f = shard_map(
-                jax.vmap(one_client), mesh=mesh,
-                in_specs=(spec, spec, spec, spec),
-                out_specs=(spec, spec, spec, spec),
-                check_rep=False)
+        ndev = mesh.shape[axis]
+        pad = -C % ndev
+        spec = P(axis)
+        f_sharded = shard_map(
+            jax.vmap(one_client), mesh=mesh,
+            in_specs=(spec, spec, spec, spec),
+            out_specs=(spec, spec, spec, spec),
+            check_rep=False)
+        if pad == 0:
+            f = f_sharded
         else:
-            import warnings
+            # Keep the shard_map path for any C: pad the client batch
+            # with masked dummies (client 0 replicated, step_mask 0 so
+            # every padded step is a discarded no-op) and slice the
+            # results back. The pad rows go through the identical step
+            # math, so real clients stay bit-identical to the unpadded
+            # run.
+            def pad_tree(t):
+                return jax.tree.map(
+                    lambda x: jnp.concatenate(
+                        [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])], 0),
+                    t)
 
-            warnings.warn(
-                f"client batch of {C} not divisible by mesh axis "
-                f"'{axis}' ({mesh.shape[axis]} devices); falling back "
-                "to single-device vmap for this round")
+            def f(sp, ss, bt, sm):
+                sm_p = jnp.concatenate(
+                    [sm, jnp.zeros((pad,) + sm.shape[1:], sm.dtype)], 0)
+                outs = f_sharded(pad_tree(sp), pad_tree(ss), pad_tree(bt),
+                                 sm_p)
+                return jax.tree.map(lambda x: x[:C], outs)
     return f(stacked_params, stacked_state, batches, step_mask)
 
 
@@ -137,6 +152,79 @@ def batched_personalized_eval(stacked_params: Any, eval_data: Dict,
     ``metric_fn(params, batch) -> scalar`` over the client axis.
     ``eval_data`` leaves are ``(C, n, ...)`` per-client eval batches."""
     return jax.vmap(metric_fn)(stacked_params, eval_data)
+
+
+def select_upload(stacked_params: Any, personalization: str,
+                  fedper_local_keys: Tuple[str, ...] = ()):
+    """(upload, local) stacked trees per personalization mode."""
+    if personalization == "pfedpara":
+        return comm.split_pfedpara(stacked_params)
+    if personalization == "fedper":
+        up = {k: v for k, v in stacked_params.items()
+              if k not in fedper_local_keys}
+        loc = {k: v for k, v in stacked_params.items()
+               if k in fedper_local_keys}
+        return up, loc
+    if personalization == "local":
+        return None, stacked_params
+    return stacked_params, None
+
+
+def chunk_round_program(
+    stacked_params: Any,
+    stacked_state: Dict,
+    batches: Dict[str, jax.Array],
+    step_mask: jax.Array,
+    quant_keys: jax.Array,
+    down_payload: Any,
+    *,
+    loss_fn: Callable,
+    client_cfg: ClientConfig,
+    strategy_name: str,
+    personalization: str,
+    fedper_local_keys: Tuple[str, ...],
+    uplink_codec: Codec,
+    lr,
+    mesh: Optional[Mesh] = None,
+    axis: str = "clients",
+    encoded_upload: bool = False,
+):
+    """One chunk of clients: local epochs, payload selection, per-client
+    uplink encoding. The shared core of the batched engine's round
+    program (chunk = the whole sampled cohort) and of every streaming
+    scan step (chunk = ``ServerConfig.client_chunk`` clients).
+
+    With ``encoded_upload=False`` uploads come back DECODED (the batched
+    engine weighted-means them densely). With ``encoded_upload=True``
+    uploads stay in the codec's encoded-for-aggregation form
+    (``Codec.encode_for_agg``: int8 ``{"q", "scale"}`` nodes / dense
+    linear carriers, delta offset left to the aggregator) so the
+    streaming accumulator can fold them in with the fused
+    dequant-accumulate kernel without ever materializing the dense
+    stack. Returns ``(new_params, new_state, upload, local, last_loss,
+    n_steps)``, all stacked along the chunk's client axis.
+    """
+    new_p, new_state, last_loss, n_steps = batched_local_update(
+        stacked_params, stacked_state, batches, step_mask,
+        loss_fn, client_cfg, strategy_name, lr, mesh=mesh, axis=axis)
+
+    upload, local = select_upload(new_p, personalization, fedper_local_keys)
+    codec = uplink_codec
+    if upload is not None and not codec.is_identity:
+        # per-client encode: delta against the round's decoded broadcast
+        # (closure => broadcast under vmap), error feedback threaded
+        # through the stacked client state
+        enc = codec.encode_for_agg if encoded_upload else codec.encode_decode
+        if codec.has_ef:
+            upload, new_ef = jax.vmap(
+                lambda u, e, k: enc(u, ref=down_payload, ef=e, key=k)
+            )(upload, new_state["_ef_up"], quant_keys)
+            new_state = {**new_state, "_ef_up": new_ef}
+        else:
+            upload, _ = jax.vmap(
+                lambda u, k: enc(u, ref=down_payload, key=k)
+            )(upload, quant_keys)
+    return new_p, new_state, upload, local, last_loss, n_steps
 
 
 @dataclass
@@ -163,48 +251,20 @@ class ClientBatch:
             self.uplink_codec = make_codec("")
         self._program = jax.jit(self._round_program)
 
-    # ----------------------------------------------------- payload select
-    def _select_upload(self, stacked_params):
-        """(upload, local) stacked trees per personalization mode."""
-        mode = self.personalization
-        if mode == "pfedpara":
-            return comm.split_pfedpara(stacked_params)
-        if mode == "fedper":
-            up = {k: v for k, v in stacked_params.items()
-                  if k not in self.fedper_local_keys}
-            loc = {k: v for k, v in stacked_params.items()
-                   if k in self.fedper_local_keys}
-            return up, loc
-        if mode == "local":
-            return None, stacked_params
-        return stacked_params, None
-
     # ------------------------------------------------------- the program
     def _round_program(self, stacked_params, stacked_state, batches,
                        step_mask, arrived_mask, sizes, lr, quant_keys,
                        server_state, agg_target, down_payload):
-        new_p, new_state, last_loss, n_steps = batched_local_update(
-            stacked_params, stacked_state, batches, step_mask,
-            self.loss_fn, self.client_cfg, self.strategy.name, lr,
-            mesh=self.mesh, axis=self.mesh_axis)
-
-        upload, local = self._select_upload(new_p)
-        codec = self.uplink_codec
-        if upload is not None and not codec.is_identity:
-            # per-client encode/decode: delta against the round's decoded
-            # broadcast (closure => broadcast under vmap), error feedback
-            # threaded through the stacked client state
-            if codec.has_ef:
-                upload, new_ef = jax.vmap(
-                    lambda u, e, k: codec.encode_decode(
-                        u, ref=down_payload, ef=e, key=k)
-                )(upload, new_state["_ef_up"], quant_keys)
-                new_state = {**new_state, "_ef_up": new_ef}
-            else:
-                upload, _ = jax.vmap(
-                    lambda u, k: codec.encode_decode(
-                        u, ref=down_payload, key=k)
-                )(upload, quant_keys)
+        new_p, new_state, upload, local, last_loss, n_steps = \
+            chunk_round_program(
+                stacked_params, stacked_state, batches, step_mask,
+                quant_keys, down_payload,
+                loss_fn=self.loss_fn, client_cfg=self.client_cfg,
+                strategy_name=self.strategy.name,
+                personalization=self.personalization,
+                fedper_local_keys=self.fedper_local_keys,
+                uplink_codec=self.uplink_codec, lr=lr,
+                mesh=self.mesh, axis=self.mesh_axis)
 
         if upload is not None:
             w = arrived_mask * sizes

@@ -45,6 +45,7 @@ tests hold the two to each other.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from typing import Any, List, Optional, Tuple
 
@@ -93,11 +94,47 @@ def _is_lr_node(node: Any) -> bool:
 
 # ----------------------------------------------------------- stage encoders
 
+# Top-k selection backend: None = auto (approx_max_k on accelerator
+# backends, where it maps to the fast partial-reduction TPU/GPU
+# lowering; exact lax.top_k on CPU), True/False = forced. approx_max_k
+# with recall_target < 1.0 may keep a slightly different index set than
+# exact top-k — the parity-tolerance test bounds the decoded error.
+_APPROX_TOPK: Optional[bool] = None
+_APPROX_RECALL = 0.95
+
+
+def set_approx_topk(enabled: Optional[bool]) -> None:
+    """Force (True/False) or restore auto-selection (None) of the
+    ``jax.lax.approx_max_k`` top-k backend.
+
+    The flag is read at TRACE time: it applies to codec programs traced
+    after the call (fresh servers / first-round compiles). Round
+    programs that were already jit-compiled keep whichever backend was
+    baked in — set the flag before building the server."""
+    global _APPROX_TOPK
+    _APPROX_TOPK = enabled
+
+
+def use_approx_topk() -> bool:
+    if _APPROX_TOPK is not None:
+        return _APPROX_TOPK
+    env = os.environ.get("REPRO_APPROX_TOPK", "").lower()
+    if env in ("1", "true", "yes"):
+        return True
+    if env in ("0", "false", "no"):
+        return False
+    return jax.default_backend() in ("tpu", "gpu")
+
+
 def _topk_leaf(x: jax.Array, frac: float) -> jax.Array:
     """Dense masked carrier: top-k |entries| kept, the rest zeroed."""
     k = _topk_count(x.shape, frac)
     flat = x.reshape(-1)
-    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    if use_approx_topk():
+        _, idx = jax.lax.approx_max_k(jnp.abs(flat), k,
+                                      recall_target=_APPROX_RECALL)
+    else:
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
     kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
     return kept.reshape(x.shape)
 
@@ -198,6 +235,55 @@ class Codec:
             return payload, ef
         wire, new_ef = self.encode(payload, ref=ref, ef=ef, key=key)
         return self.decode(wire, ref=ref), new_ef
+
+    # ------------------------------------------- encoded-form aggregation
+    #
+    # The streaming engine never decodes uplinks to a dense (C, model)
+    # stack; it accumulates  Σ_c w_c · dequant(wire_c)  directly (the
+    # fused kernel in ``repro.kernels.agg``). That only works when the
+    # remaining decode is LINEAR per leaf: int8 dequant (q·scale), fp16
+    # widening and the top-k dense carrier all are; the low-rank factor
+    # product is bilinear, and the delta reference is a constant the
+    # mean absorbs:  mean(decode(wire_c)) = mean(lin(wire_c)) + ref.
+
+    @property
+    def agg_linear(self) -> bool:
+        """True when decode(wire) = linear-dequant(wire) [+ delta ref]
+        leaf-wise, i.e. encoded wires can be weighted-summed without a
+        per-client decode (no low-rank factor stage)."""
+        return not any(s.kind == "lowrank" for s in self.stages)
+
+    def encode_for_agg(self, payload: Any, *, ref: Any = None, ef: Any = None,
+                       key: Optional[jax.Array] = None
+                       ) -> Tuple[Any, Optional[Any]]:
+        """Encode for a streaming (encoded-form) aggregator.
+
+        Returns ``(agg_wire, new_ef)`` where ``agg_wire`` leaves are
+        ``{"q", "scale"}`` int8 nodes or dense arrays satisfying
+        ``decode(wire) = linear(agg_wire) + (ref if has_delta)``. For
+        codecs with a low-rank stage the bilinear factor product is
+        composed back per client here (still O(client) at a time under
+        the chunk vmap), leaving the delta offset to the aggregator.
+        """
+        if self.is_identity:
+            return payload, ef
+        wire, new_ef = self.encode(payload, ref=ref, ef=ef, key=key)
+        if not self.agg_linear:
+            # undo the nonlinear stages per client via the one decode
+            # implementation, minus the delta stage (left to the mean)
+            stripped = Codec(spec=self.spec, stages=tuple(
+                s for s in self.stages if s.kind != "delta"))
+            wire = stripped.decode(wire)
+        return wire, new_ef
+
+    def agg_finalize(self, mean: Any, *, ref: Any = None) -> Any:
+        """Map the weighted mean of ``encode_for_agg`` wires back to
+        payload space (adds the delta reference back in)."""
+        if self.has_delta:
+            if ref is None:
+                raise ValueError("delta stage requires a reference tree")
+            return jax.tree.map(lambda d, r: d + r.astype(d.dtype), mean, ref)
+        return mean
 
     # ---------------------------------------------------------- accounting
     def wire_bytes(self, payload: Any) -> int:

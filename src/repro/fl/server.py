@@ -15,7 +15,17 @@ Execution engines (``ServerConfig.engine``):
                 clients' params/state are stacked along a leading
                 client axis and the whole round (local epochs, payload
                 selection, quantization, aggregation) runs as one
-                jit-compiled vmap/shard_map program.
+                jit-compiled vmap/shard_map program. Round memory is
+                O(C · model).
+  streaming   — ``repro.fl.stream_engine.StreamingRound``: one
+                jit-compiled ``lax.scan`` over fixed-size client chunks
+                (``ServerConfig.client_chunk``) threading a running
+                fp32 weighted-sum accumulator; uploads stay in encoded
+                wire form and are folded in by the fused
+                dequant-accumulate Pallas kernel. Round memory is
+                O(chunk · model + model) — participation becomes a
+                time axis, so cohorts the stacked engine cannot hold
+                (1024+ simulated clients on one host) stream through.
 
 Masked-aggregation semantics: both engines derive the SAME boolean
 arrived-mask over the sampled clients from host-side RNG draws
@@ -105,7 +115,8 @@ class ServerConfig:
     bandwidth_mbps: float = 10.0
     dropout_prob: float = 0.0          # random client failure per round
     staleness_mix: float = 0.0         # >0: async staleness-weighted mixing
-    engine: str = "sequential"         # sequential | batched
+    engine: str = "sequential"         # sequential | batched | streaming
+    client_chunk: int = 16             # streaming: clients per scan step
     seed: int = 0
 
 
@@ -146,6 +157,7 @@ class FLServer:
         self._down_ref: Any = None   # last decoded broadcast (delta ref)
         self._down_ef: Any = None    # server-side downlink error feedback
         self._engine = None
+        self._stream = None
         if server_cfg.engine == "batched":
             from repro.fl.batch_engine import ClientBatch
 
@@ -155,6 +167,20 @@ class FLServer:
                 uplink_codec=self.uplink_codec,
                 fedper_local_keys=FEDPER_LOCAL_KEYS,
                 mesh=mesh, mesh_axis=mesh_axis)
+        elif server_cfg.engine == "streaming":
+            from repro.fl.stream_engine import StreamingRound
+
+            self._stream = StreamingRound(
+                loss_fn=loss_fn, strategy=strategy, client_cfg=client_cfg,
+                personalization=server_cfg.personalization,
+                uplink_codec=self.uplink_codec,
+                fedper_local_keys=FEDPER_LOCAL_KEYS,
+                chunk=max(1, int(server_cfg.client_chunk)),
+                mesh=mesh, mesh_axis=mesh_axis)
+        elif server_cfg.engine != "sequential":
+            raise ValueError(
+                f"unknown engine {server_cfg.engine!r} "
+                "(expected sequential | batched | streaming)")
 
     # ------------------------------------------------------------ payload
     def _download_payload(self, cid: int) -> Any:
@@ -289,7 +315,10 @@ class FLServer:
             self.round_idx += 1
             return {"round": self.round_idx, "participants": 0, "skipped": True}
         down_dec, down_bytes = self._encode_downlink(probe)
-        if self._engine is not None:
+        if self._stream is not None:
+            rec = self._run_round_streaming(sampled, mask, seeds, lr,
+                                            down_dec, down_bytes)
+        elif self._engine is not None:
             rec = self._run_round_batched(sampled, mask, seeds, lr,
                                           down_dec, down_bytes)
         else:
@@ -325,15 +354,7 @@ class FLServer:
             if not mask[i]:
                 continue
             params = self._client_full_params(cid, down_dec)
-            state = self.client_states.get(cid)
-            if state is None:
-                state = init_client_state(self.strategy, params)
-            if scfg.personalization != "local":
-                state = self._ensure_ef(state, down_dec)
-            if self.strategy.name == "scaffold" and "c" in state:
-                state["c"] = jax.tree.map(jnp.zeros_like, params) \
-                    if not self.server_state else self.server_state.get(
-                        "c", jax.tree.map(jnp.zeros_like, params))
+            state = self._prep_client_state(cid, params, down_dec)
             batches = client_epochs(self.data, self.partitions[cid],
                                     self.ccfg.batch, self.ccfg.epochs,
                                     seed=int(seeds[i]))
@@ -370,6 +391,23 @@ class FLServer:
             "lr": lr,
         }
 
+    def _prep_client_state(self, cid: int, params: Any, down_dec: Any) -> Dict:
+        """Round-start client state: stored state or strategy init, with
+        the uplink EF accumulator (payload structure) attached and the
+        SCAFFOLD server control variate broadcast in. Shared by the
+        batched and streaming engines."""
+        state = self.client_states.get(cid)
+        if state is None:
+            state = init_client_state(self.strategy, params)
+        if self.scfg.personalization != "local":
+            state = self._ensure_ef(state, down_dec)
+        if self.strategy.name == "scaffold" and "c" in state:
+            c = (jax.tree.map(jnp.zeros_like, params)
+                 if not self.server_state else self.server_state.get(
+                     "c", jax.tree.map(jnp.zeros_like, params)))
+            state = {**state, "c": c}
+        return state
+
     # ------------------------------------------------ batched engine
     def _run_round_batched(self, sampled, mask, seeds, lr, down_dec,
                            down_bytes) -> Dict:
@@ -380,18 +418,8 @@ class FLServer:
         full, states = [], []
         for cid in cids:
             params = self._client_full_params(cid, down_dec)
-            state = self.client_states.get(cid)
-            if state is None:
-                state = init_client_state(self.strategy, params)
-            if scfg.personalization != "local":
-                state = self._ensure_ef(state, down_dec)
-            if self.strategy.name == "scaffold" and "c" in state:
-                c = (jax.tree.map(jnp.zeros_like, params)
-                     if not self.server_state else self.server_state.get(
-                         "c", jax.tree.map(jnp.zeros_like, params)))
-                state = {**state, "c": c}
             full.append(params)
-            states.append(state)
+            states.append(self._prep_client_state(cid, params, down_dec))
         stacked_params = tree_stack(full)
         stacked_state = tree_stack(states) if states and states[0] else {}
 
@@ -430,6 +458,101 @@ class FLServer:
         return {
             "participants": int(mask.sum()),
             "sampled": len(sampled),
+            "mean_loss": float(np.mean(losses)) if len(losses) else float("nan"),
+            "comm_gb": self.comm_log.total_gb,
+            "lr": lr,
+        }
+
+    # ---------------------------------------------- streaming engine
+    def _run_round_streaming(self, sampled, mask, seeds, lr, down_dec,
+                             down_bytes) -> Dict:
+        """Chunked round: identical selection/bookkeeping contract as the
+        batched engine, but clients are fed to the jitted scan program
+        ``client_chunk`` at a time and the aggregate is a streamed fp32
+        accumulator — no (C, model) tree is ever stacked."""
+        from repro.data.loader import client_step_count
+        from repro.fl.stream_engine import chunk_layout, from_chunks, to_chunks
+
+        scfg = self.scfg
+        mode = scfg.personalization
+        cids = [int(c) for c in sampled]
+        C = len(cids)
+        chunk, n_chunks, pad = chunk_layout(C, scfg.client_chunk)
+        cids_pad = cids + cids[:1] * pad   # pad slots reuse client 0's
+        # (small) state/resident trees; their batches are zeros below
+
+        states, residents = [], []
+        for cid in cids_pad:
+            params = self._client_full_params(cid, down_dec)
+            states.append(self._prep_client_state(cid, params, down_dec))
+            if mode == "pfedpara":
+                residents.append(comm.split_pfedpara(params)[1])
+            elif mode == "fedper":
+                residents.append({k: params[k] for k in FEDPER_LOCAL_KEYS
+                                  if k in params})
+            elif mode == "local":
+                residents.append(params)
+        stacked_state = tree_stack(states) if states and states[0] else {}
+        stacked_res = tree_stack(residents) if residents else None
+
+        # one round-wide step axis so every chunk (and every later round
+        # with the same cohort shape) shares a compiled program
+        S = max(client_step_count(len(self.partitions[c]), self.ccfg.batch,
+                                  self.ccfg.epochs) for c in cids)
+        batches, step_mask = stack_client_epochs(
+            self.data, self.partitions, cids, self.ccfg.batch,
+            self.ccfg.epochs, [int(s) for s in seeds], pad_steps=max(S, 1))
+        if pad:   # pad slots: zero batches, every step a masked no-op
+            batches = {k: np.concatenate(
+                [v, np.zeros((pad,) + v.shape[1:], v.dtype)]) for k, v in
+                batches.items()}
+            step_mask = np.concatenate(
+                [step_mask, np.zeros((pad,) + step_mask.shape[1:],
+                                     step_mask.dtype)])
+        mask_pad = np.concatenate([mask.astype(np.float32),
+                                   np.zeros(pad, np.float32)])
+        sizes_pad = np.concatenate(
+            [np.array([len(self.partitions[c]) for c in cids], np.float32),
+             np.zeros(pad, np.float32)])
+        agg_target = (self.global_params if mode == "none"
+                      else self._download_payload(-1))
+
+        (state_ys, local_ys, loss_ys, _steps, new_global,
+         new_server_state) = self._stream.run(
+            to_chunks(stacked_state, n_chunks, chunk),
+            to_chunks(stacked_res, n_chunks, chunk)
+            if stacked_res is not None else None,
+            to_chunks(jax.tree.map(jnp.asarray, batches), n_chunks, chunk),
+            to_chunks(jnp.asarray(step_mask, jnp.float32), n_chunks, chunk),
+            to_chunks(jnp.asarray(mask_pad), n_chunks, chunk),
+            to_chunks(jnp.asarray(sizes_pad), n_chunks, chunk),
+            to_chunks(self._quant_keys(C + pad), n_chunks, chunk),
+            lr, self.server_state, agg_target, down_dec)
+
+        new_state = from_chunks(state_ys) if state_ys else {}
+        local = from_chunks(local_ys) if local_ys is not None else None
+        arrived = np.nonzero(mask)[0]
+        for pos in arrived:
+            cid = cids[pos]
+            self.client_states[cid] = (tree_index(new_state, int(pos))
+                                       if new_state else {})
+            if local is not None:
+                self.local_trees[cid] = tree_index(local, int(pos))
+        if mode != "local":
+            self.server_state = new_server_state
+            self._apply_aggregated(new_global, agg_target)
+
+        losses = np.asarray(from_chunks(loss_ys))[arrived]
+        n_arrived = int(mask.sum())
+        up_bytes = (0 if mode == "local"
+                    else self.uplink_codec.wire_bytes(down_dec))
+        self.comm_log.log_round(n_arrived * down_bytes, n_arrived * up_bytes)
+
+        return {
+            "participants": n_arrived,
+            "sampled": len(sampled),
+            "chunks": n_chunks,
+            "client_chunk": chunk,
             "mean_loss": float(np.mean(losses)) if len(losses) else float("nan"),
             "comm_gb": self.comm_log.total_gb,
             "lr": lr,

@@ -1,0 +1,204 @@
+"""Streaming chunked FL rounds: O(chunk) client memory per round.
+
+The batched engine (``repro.fl.batch_engine``) stacks every sampled
+client's params, optimizer state and local batches into one ``(C, ...)``
+tree — round memory grows linearly with participation, so simulated
+cohorts die at a few hundred clients per host. This engine turns the
+participation axis from a MEMORY axis into a TIME axis:
+
+  1. ``jax.lax.scan`` over fixed-size client **chunks**
+     (``ServerConfig.client_chunk``). Each scan step reuses the batched
+     engine's chunk program (``chunk_round_program``: scan over local
+     steps, vmap over the chunk's clients, payload selection, per-client
+     uplink encoding) on ``chunk`` clients at a time, so the training
+     working set — activations, per-step grads, the chunk's
+     params/opt-state — peaks at O(chunk · model), never O(C · model).
+  2. The carry threads a running **weighted-sum accumulator** plus a
+     weight total instead of stacking uploads: uploads stay in the
+     codec's encoded-for-aggregation form (``Codec.encode_for_agg`` —
+     int8 ``{"q", "scale"}`` nodes, fp16/dense linear carriers) and are
+     folded straight into an fp32 accumulator by the fused
+     dequant-accumulate Pallas kernel (``repro.kernels.agg``): each
+     wire byte is read once at its wire itemsize; the dense
+     ``(C, model)`` fp32 upload stack of the batched engine never
+     exists.
+  3. Client params are ASSEMBLED inside each scan step from the round's
+     single decoded broadcast (plus per-client personalization
+     residents where the mode has them), so the program's inputs carry
+     no ``(C, model)`` params tree at all — for vanilla FL the xs are
+     just data batches, masks and RNG keys.
+  4. The jitted round program donates the chunk-stacked state / batch
+     buffers (``donate_argnums``), so XLA updates chunk params and
+     opt-state in place instead of double-buffering them.
+  5. On a ``("clients",)`` shard_map mesh the chunk's clients split
+     across devices and aggregation goes two-level: each device reduces
+     its shard with the fused kernel (partial sums), one ``psum``
+     combines the fp32 partials (``sharded_tree_dequant_acc``).
+
+Numerical contract: identical round selections (bitwise-equal arrival
+masks — both engines derive them from ``FLServer._select_round``) give
+global params, client states and residents matching the batched engine
+to fp32 accumulation-order tolerance, for every personalization mode
+and every codec (error-feedback accumulators thread through the chunk
+state exactly as in the batched engine; the delta reference is a
+constant the mean absorbs, added back by ``Codec.agg_finalize``).
+Aggregation itself is chunk-size invariant: chunking only reassociates
+the fp32 weighted sum.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.fl import comm
+from repro.fl.batch_engine import chunk_round_program
+from repro.fl.client import ClientConfig
+from repro.fl.codecs import Codec, make_codec
+from repro.fl.strategies import Strategy, tree_broadcast
+from repro.kernels import agg as agg_kernels
+
+
+@dataclass
+class StreamingRound:
+    """The jitted streaming round program, configured once per server.
+
+    ``run`` consumes chunk-stacked xs trees with leading
+    ``(n_chunks, chunk, ...)`` axes and executes the whole round —
+    local epochs, payload selection, uplink encoding, fused encoded-form
+    aggregation, strategy server update — as one XLA program whose live
+    set scales with ``chunk``. Recompiles only when the
+    (n_chunks, chunk, S, B) shape signature changes.
+    """
+
+    loss_fn: Callable
+    strategy: Strategy
+    client_cfg: ClientConfig
+    personalization: str = "none"
+    uplink_codec: Optional[Codec] = None
+    fedper_local_keys: Tuple[str, ...] = ()
+    chunk: int = 16
+    mesh: Optional[Mesh] = None
+    mesh_axis: str = "clients"
+    use_pallas_agg: bool = True
+
+    def __post_init__(self):
+        if self.uplink_codec is None:
+            self.uplink_codec = make_codec("")
+        # The chunk-stacked client state and personalization residents
+        # (positions 0-1) have the same shapes as the scan's ys, so
+        # donating them lets XLA write each chunk's updated params /
+        # opt-state over the incoming buffers instead of
+        # double-buffering them. Batches are pure inputs (no
+        # matching-shape output) — donating them would only warn.
+        self._program = jax.jit(self._round_program,
+                                donate_argnums=(0, 1))
+
+    # --------------------------------------------------- param assembly
+    def _assemble(self, resident_chunk, down_payload, chunk: int):
+        """Chunk params from the broadcast + per-client residents: the
+        (chunk, model) tree exists only inside the scan step. ``chunk``
+        is the actual chunk width (small cohorts clamp it below the
+        configured size)."""
+        mode = self.personalization
+        if mode == "none":
+            return tree_broadcast(down_payload, chunk)
+        if mode == "pfedpara":
+            return comm.merge_pfedpara(
+                tree_broadcast(down_payload, chunk), resident_chunk)
+        if mode == "fedper":
+            merged = dict(tree_broadcast(down_payload, chunk))
+            merged.update(resident_chunk)
+            return merged
+        # mode == "local": residents are the full per-client params
+        return resident_chunk
+
+    # ------------------------------------------------------- the program
+    def _round_program(self, state_xs, resident_xs, batches_xs, step_mask_xs,
+                       mask_xs, sizes_xs, quant_keys_xs, lr, server_state,
+                       agg_target, down_payload):
+        codec = self.uplink_codec
+        mode = self.personalization
+        mesh, axis = self.mesh, self.mesh_axis
+        chunk = step_mask_xs.shape[1]   # actual width (≤ configured)
+        two_level = (mesh is not None and axis in mesh.axis_names
+                     and chunk % mesh.shape[axis] == 0)
+
+        def chunk_step(carry, xs):
+            acc, wtot = carry
+            state_c, resident_c, batches_c, smask_c, mask_c, sizes_c, keys_c = xs
+            params_c = self._assemble(resident_c, down_payload, chunk)
+            new_p, new_state, upload, local, last_loss, n_steps = \
+                chunk_round_program(
+                    params_c, state_c, batches_c, smask_c, keys_c,
+                    down_payload,
+                    loss_fn=self.loss_fn, client_cfg=self.client_cfg,
+                    strategy_name=self.strategy.name, personalization=mode,
+                    fedper_local_keys=self.fedper_local_keys,
+                    uplink_codec=codec, lr=lr, mesh=mesh, axis=axis,
+                    encoded_upload=True)
+            if upload is not None:
+                w = mask_c * sizes_c
+                if two_level:
+                    part = agg_kernels.sharded_tree_dequant_acc(
+                        upload, w, mesh, axis,
+                        use_pallas=self.use_pallas_agg)
+                    acc = jax.tree.map(jnp.add, acc, part)
+                else:
+                    acc = agg_kernels.tree_dequant_acc(
+                        acc, upload, w, use_pallas=self.use_pallas_agg)
+                wtot = wtot + w.sum()
+            del new_p  # reassembled from the broadcast next round
+            return (acc, wtot), (new_state, local, last_loss, n_steps)
+
+        acc0 = jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.float32),
+                            down_payload)
+        xs = (state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
+              sizes_xs, quant_keys_xs)
+        (acc, wtot), (state_ys, local_ys, loss_ys, steps_ys) = jax.lax.scan(
+            chunk_step, (acc0, jnp.zeros((), jnp.float32)), xs)
+
+        if mode != "local":
+            mean = jax.tree.map(lambda a: a / jnp.maximum(wtot, 1e-12), acc)
+            mean = codec.agg_finalize(mean, ref=down_payload)
+            new_global, new_server_state = self.strategy.server_update(
+                server_state, agg_target, mean)
+        else:
+            new_global, new_server_state = agg_target, server_state
+        return (state_ys, local_ys, loss_ys, steps_ys, new_global,
+                new_server_state)
+
+    def run(self, state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
+            sizes_xs, quant_keys_xs, lr, server_state, agg_target,
+            down_payload):
+        return self._program(
+            state_xs, resident_xs,
+            jax.tree.map(jnp.asarray, batches_xs),
+            jnp.asarray(step_mask_xs, jnp.float32),
+            jnp.asarray(mask_xs, jnp.float32),
+            jnp.asarray(sizes_xs, jnp.float32),
+            quant_keys_xs, jnp.asarray(lr, jnp.float32),
+            server_state, agg_target, down_payload)
+
+
+def chunk_layout(n_clients: int, chunk: int) -> Tuple[int, int, int]:
+    """(chunk, n_chunks, pad): clients padded to a whole number of
+    fixed-size chunks; pad entries ride along fully masked."""
+    chunk = max(1, min(int(chunk), n_clients))
+    n_chunks = -(-n_clients // chunk)
+    return chunk, n_chunks, n_chunks * chunk - n_clients
+
+
+def to_chunks(tree: Any, n_chunks: int, chunk: int) -> Any:
+    """Reshape (C_pad, ...) stacked leaves to (n_chunks, chunk, ...)."""
+    return jax.tree.map(
+        lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), tree)
+
+
+def from_chunks(tree: Any) -> Any:
+    """Inverse of ``to_chunks``: flatten the two leading axes."""
+    return jax.tree.map(
+        lambda x: x.reshape((-1,) + x.shape[2:]), tree)

@@ -34,3 +34,31 @@ def select_blocks(m: int, n: int, r: int) -> Tuple[int, int, int]:
         if mn >= min_mn:
             return blocks
     return _TABLE[-1][1]
+
+
+# --------------------------------------------------- dequant-aggregate tiles
+#
+# The fused dequant-accumulate kernel (kernels/agg.py) reduces a
+# (C, L) client-stacked wire buffer into a (L,) fp32 accumulator. The
+# client axis is the sublane dim of the wire tile, so it follows the
+# int8 tiling minimum (32 sublanes); the flat-value axis is the lane
+# dim and widens with L so large leaves amortize per-step overheads
+# while one wire tile + the (1, bl) fp32 accumulator stay far inside
+# VMEM (a (32, 8192) int8 tile is 256 KB).
+
+# flat length lower bound -> (block_c, block_l); first match wins.
+_AGG_TABLE = (
+    (1 << 20, (32, 16384)),
+    (1 << 16, (32, 8192)),
+    (1 << 12, (32, 2048)),
+    (0, (32, 512)),
+)
+
+
+def select_agg_blocks(c: int, length: int) -> Tuple[int, int]:
+    """(block_c, block_l) for reducing a (c, length) wire stack."""
+    del c  # the client axis is padded to the int8 sublane minimum
+    for min_l, blocks in _AGG_TABLE:
+        if length >= min_l:
+            return blocks
+    return _AGG_TABLE[-1][1]

@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import blocks, fedpara_grad, ref
+from repro.kernels import agg, blocks, fedpara_grad, ref
 from repro.kernels.fedpara_compose import fedpara_compose as _compose
 
 
@@ -87,9 +87,22 @@ def pfedpara_compose(x1, y1, x2, y2, *, interpret=None, **kw):
     return _compose(x1, y1, x2, y2, plus_one=True, interpret=interpret, **kw)
 
 
+def dequant_acc(acc, q, coeff, *, interpret=None, **kw):
+    """acc += coeff @ dequant(q): fused streaming-aggregation reduction
+    (interpret resolved like the matmul kernels)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return agg.dequant_acc(acc, q, coeff, interpret=interpret, **kw)
+
+
+tree_dequant_acc = agg.tree_dequant_acc
+sharded_tree_dequant_acc = agg.sharded_tree_dequant_acc
+
 # Re-export oracles for convenience.
 fedpara_matmul_ref = ref.fedpara_matmul_ref
 fedpara_compose_ref = ref.fedpara_compose_ref
 pfedpara_compose_ref = ref.pfedpara_compose_ref
 fedpara_matmul_vjp_ref = ref.fedpara_matmul_vjp_ref
+dequant_acc_ref = ref.dequant_acc_ref
+tree_dequant_acc_ref = ref.tree_dequant_acc_ref
 select_blocks = blocks.select_blocks
+select_agg_blocks = blocks.select_agg_blocks

@@ -64,6 +64,40 @@ def pfedpara_compose_ref(
                                out_dtype=out_dtype)
 
 
+def dequant_acc_ref(acc: jax.Array, q: jax.Array, coeff: jax.Array) -> jax.Array:
+    """Dense oracle for the fused dequant-accumulate kernel:
+    acc (L,) + coeff (C,) @ q (C, L) — the decode-then-reduce path the
+    kernel must match bit-for-bit up to fp32 accumulation order."""
+    return acc + jnp.tensordot(coeff.astype(jnp.float32),
+                               q.astype(jnp.float32), axes=1)
+
+
+def tree_dequant_acc_ref(acc_tree, wire, weights: jax.Array):
+    """Tree-level oracle: dequantize every client's wire payload densely
+    (``{"q", "scale"}`` nodes to fp32) and weighted-sum over the client
+    axis into the accumulator."""
+    def is_q(n):
+        return isinstance(n, dict) and set(n) == {"q", "scale"}
+
+    w = weights.astype(jnp.float32)
+
+    def walk(acc, n):
+        if is_q(n):
+            C = n["q"].shape[0]
+            deq = (n["q"].astype(jnp.float32).reshape(C, -1)
+                   * n["scale"].reshape(C, 1).astype(jnp.float32))
+            return acc + jnp.tensordot(w, deq, axes=1).reshape(acc.shape)
+        if isinstance(n, dict):
+            return {k: walk(acc[k], v) for k, v in n.items()}
+        if isinstance(n, (list, tuple)):
+            return type(n)(walk(a, v) for a, v in zip(acc, n))
+        C = n.shape[0]
+        return acc + jnp.tensordot(
+            w, n.astype(jnp.float32).reshape(C, -1), axes=1).reshape(acc.shape)
+
+    return walk(acc_tree, wire)
+
+
 def fedpara_matmul_vjp_ref(
     x: jax.Array,
     x1: jax.Array,

@@ -174,7 +174,7 @@ def train_fl(args):
 
     parts = dirichlet_partition(tr["y"], args.clients, 0.5, seed=args.seed)
     mesh = None
-    if args.engine == "batched" and len(jax.devices()) > 1:
+    if args.engine in ("batched", "streaming") and len(jax.devices()) > 1:
         mesh = Mesh(np.array(jax.devices()), ("clients",))
     srv = FLServer(loss_fn, params, tr, parts, make_strategy(args.strategy),
                    ClientConfig(lr=args.lr, batch=64, epochs=args.local_epochs),
@@ -183,7 +183,8 @@ def train_fl(args):
                                 personalization=args.personalization,
                                 uplink_codec=args.uplink_codec,
                                 downlink_codec=args.downlink_codec,
-                                engine=args.engine),
+                                engine=args.engine,
+                                client_chunk=args.client_chunk),
                    eval_fn=eval_fn, mesh=mesh)
     hist = srv.run(log_every=1)
     hist[-1]["comm_up_mb"] = srv.comm_log.up_bytes / 1e6
@@ -229,9 +230,14 @@ def main():
                     help="downlink codec spec (same grammar); applied to "
                          "the payload clients actually train on")
     ap.add_argument("--engine", default="batched",
-                    choices=["sequential", "batched"],
-                    help="FL round engine: sequential reference loop or "
-                         "the client-batched vmap/shard_map program")
+                    choices=["sequential", "batched", "streaming"],
+                    help="FL round engine: sequential reference loop, the "
+                         "client-batched vmap/shard_map program, or the "
+                         "streaming chunked scan (O(chunk) round memory — "
+                         "use for cohorts the stacked engine cannot hold)")
+    ap.add_argument("--client-chunk", type=int, default=16,
+                    help="streaming engine: clients per scan step; round "
+                         "memory peaks at O(client_chunk * model)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route every FedPara dense() through the fused "
                          "differentiable Pallas kernels: local training "

@@ -196,6 +196,95 @@ def test_vmap_path_matches_per_client(payload):
         assert _maxdiff(jax.tree.map(lambda x: x[i], ef_v), ef_i) < 1e-6
 
 
+# ------------------------------------------------- approx top-k backend
+
+def test_approx_topk_flag_parity(payload):
+    """Routing _topk through jax.lax.approx_max_k (flag-forced) must
+    stay within the EF-codec's tolerance of the exact lax.top_k path:
+    approx selection with recall_target r keeps ≥ r·k of the true
+    top-k mass, so the decoded payload error is bounded by the mass of
+    the (1-r)·k swapped coordinates. On CPU the lowering is exact, so
+    the two paths coincide; the bound below holds on every backend."""
+    codec = make_codec("topk0.25")
+    try:
+        codecs.set_approx_topk(False)
+        exact, _ = codec.encode_decode(payload)
+        codecs.set_approx_topk(True)
+        approx, _ = codec.encode_decode(payload)
+    finally:
+        codecs.set_approx_topk(None)
+    # identical support size either way
+    for e, a in zip(jax.tree.leaves(exact), jax.tree.leaves(approx)):
+        assert int((e != 0).sum()) == int((a != 0).sum())
+    # decoded mass within the recall bound of the exact path
+    num = sum(float(jnp.sum(jnp.abs(e - a)))
+              for e, a in zip(jax.tree.leaves(exact),
+                              jax.tree.leaves(approx)))
+    den = sum(float(jnp.sum(jnp.abs(e))) for e in jax.tree.leaves(exact))
+    assert num <= 2 * (1 - codecs._APPROX_RECALL) * den + 1e-6
+
+
+def test_approx_topk_flag_resolution(monkeypatch):
+    codecs.set_approx_topk(True)
+    assert codecs.use_approx_topk()
+    codecs.set_approx_topk(False)
+    assert not codecs.use_approx_topk()
+    codecs.set_approx_topk(None)
+    monkeypatch.setenv("REPRO_APPROX_TOPK", "1")
+    assert codecs.use_approx_topk()
+    monkeypatch.setenv("REPRO_APPROX_TOPK", "0")
+    assert not codecs.use_approx_topk()
+    monkeypatch.delenv("REPRO_APPROX_TOPK")
+    # auto: accelerator backends only
+    assert codecs.use_approx_topk() == (
+        jax.default_backend() in ("tpu", "gpu"))
+
+
+# --------------------------------------------- encoded-form aggregation
+
+def test_encode_for_agg_linear_codecs(payload):
+    """decode(wire) == linear(agg_wire) + delta-ref for every
+    non-lowrank codec: the streaming accumulator can weighted-sum
+    agg wires and add the reference once at the end."""
+    ref = jax.tree.map(lambda x: 0.3 * x, payload)
+    key = jax.random.PRNGKey(9)
+    for spec in ("int8", "fp16", "delta|int8", "delta|topk0.3|int8",
+                 "topk0.5"):
+        codec = make_codec(spec)
+        assert codec.agg_linear
+        ef = codec.ef_init(payload)
+        wire, _ = codec.encode_for_agg(payload, ref=ref, ef=ef, key=key)
+        dec, _ = codec.encode_decode(payload, ref=ref, ef=ef, key=key)
+        if "int8" in spec:
+            lin = comm.dequantize_int8(wire)
+        elif "fp16" in spec:
+            lin = comm.dequantize_fp16(wire)
+        else:
+            lin = wire
+        lin = codec.agg_finalize(lin, ref=ref)
+        assert _maxdiff(lin, dec) < 1e-5, spec
+
+
+def test_encode_for_agg_lowrank_composes_per_client(payload):
+    """Bilinear stages are composed back per client by encode_for_agg;
+    only the delta offset is left to the aggregator."""
+    ref = tree_zeros(payload)
+    codec = make_codec("delta|lowrank2|int8")
+    assert not codec.agg_linear
+    wire, _ = codec.encode_for_agg(payload, ref=ref,
+                                   key=jax.random.PRNGKey(1))
+    # dense leaves only — no {"lr_u","lr_v"} or {"q","scale"} nodes left
+    def no_nodes(n):
+        if isinstance(n, dict):
+            assert set(n) not in ({"q", "scale"}, {"lr_u", "lr_v"})
+            for v in n.values():
+                no_nodes(v)
+    no_nodes(wire)
+    dec, _ = codec.encode_decode(payload, ref=ref,
+                                 key=jax.random.PRNGKey(1))
+    assert _maxdiff(codec.agg_finalize(wire, ref=ref), dec) < 1e-5
+
+
 # ------------------------------------- split/merge placeholder alignment
 
 def test_split_merge_preserves_sequence_placeholders():
