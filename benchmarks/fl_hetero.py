@@ -1,0 +1,138 @@
+"""Bytes/accuracy frontier for heterogeneous-capacity rank tiers.
+
+Runs the MLP-FedPara synthetic FL task under several tier mixes
+(uniform full-rank baseline, two- and three-tier fleets), recording
+final eval accuracy against exact cumulative wire bytes (per-tier
+sliced payload pricing — see docs/hetero.md) plus each mix's per-tier
+uplink bytes. Lower-gamma tiers upload strictly fewer bytes by shape
+algebra; the frontier shows what that buys in accuracy.
+
+Writes ``BENCH_hetero.json`` via ``benchmarks.common.write_artifact``.
+
+Run: PYTHONPATH=src python -m benchmarks.fl_hetero [--rounds 8]
+"""
+import argparse
+import json
+import time
+
+MODEL_GAMMA = 0.3
+
+TIER_MIXES = [
+    ("uniform_0.3", ()),                       # homogeneous baseline path
+    ("tiers_0.1_0.3", (0.1, 0.3)),
+    ("tiers_0.05_0.1_0.3", (0.05, 0.1, 0.3)),
+    ("tiers_0.05_0.3", (0.05, 0.3)),
+]
+
+
+def build_server(tiers, rounds: int, clients: int, seed: int = 0,
+                 assignment: str = "round_robin"):
+    import jax
+
+    from repro.configs.base import ParamCfg
+    from repro.data import dirichlet_partition, make_image_dataset, \
+        train_test_split
+    from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+    from repro.nn import recurrent as rec
+
+    ds = make_image_dataset(2400, 10, size=16, channels=1, noise=0.3,
+                            seed=seed)
+    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+    tr, te = train_test_split(data)
+    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=MODEL_GAMMA,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(seed), cfg)
+    parts = dirichlet_partition(tr["y"], clients, 0.5, seed=seed)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    def eval_fn(p):
+        return float(rec.mlp_accuracy(p, cfg, {"x": te["x"][:400],
+                                               "y": te["y"][:400]}))
+
+    return FLServer(loss_fn, params, tr, parts, make_strategy("fedavg"),
+                    ClientConfig(lr=0.1, batch=32, epochs=2),
+                    ServerConfig(clients=clients, participation=0.34,
+                                 rounds=rounds, engine="batched",
+                                 uplink_codec="int8", downlink_codec="int8",
+                                 gamma_tiers=tiers,
+                                 tier_assignment=assignment, seed=seed),
+                    eval_fn=eval_fn)
+
+
+def run_mix(name, tiers, rounds: int, clients: int):
+    srv = build_server(tiers, rounds, clients)
+    t0 = time.time()
+    hist = srv.run()
+    elapsed = time.time() - t0
+    rec = {
+        "mix": name,
+        "gamma_tiers": list(tiers),
+        "acc": hist[-1].get("eval"),
+        "up_bytes_total": srv.comm_log.up_bytes,
+        "down_bytes_total": srv.comm_log.down_bytes,
+        "wire_bytes_total": srv.comm_log.up_bytes + srv.comm_log.down_bytes,
+        "seconds": elapsed,
+    }
+    if tiers:
+        info = srv.tier_bytes()
+        rec["per_tier_up_bytes"] = [t["up_bytes"] for t in info]
+        rec["per_tier_down_bytes"] = [t["down_bytes"] for t in info]
+        rec["tier_counts"] = [t["clients"] for t in info]
+    return rec
+
+
+def run_all(rounds: int = 8, clients: int = 12):
+    mixes = [run_mix(name, tiers, rounds, clients)
+             for name, tiers in TIER_MIXES]
+    base = next(m for m in mixes if not m["gamma_tiers"])
+    frontier = [{
+        "mix": m["mix"],
+        "acc": m["acc"],
+        "acc_delta_vs_uniform": (None if m["acc"] is None or base["acc"] is None
+                                 else m["acc"] - base["acc"]),
+        "wire_bytes_total": m["wire_bytes_total"],
+        "bytes_ratio_vs_uniform": m["wire_bytes_total"]
+        / max(1, base["wire_bytes_total"]),
+    } for m in mixes]
+    return {
+        "benchmark": "fl_hetero",
+        "what": "bytes/accuracy frontier across heterogeneous rank-tier "
+                "mixes (batched engine, int8 both links, exact sliced-"
+                "payload byte accounting)",
+        "clients": clients,
+        "rounds": rounds,
+        "model_gamma": MODEL_GAMMA,
+        "mixes": mixes,
+        "frontier": frontier,
+    }
+
+
+def csv_rows(rounds: int = 4, clients: int = 12):
+    art = run_all(rounds=rounds, clients=clients)
+    rows = []
+    for m in art["mixes"]:
+        rows.append((f"fl_hetero_{m['mix']}", m["seconds"] * 1e6,
+                     f"acc={m['acc']:.3f};wire_mb="
+                     f"{m['wire_bytes_total'] / 1e6:.2f}"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=12)
+    args = ap.parse_args()
+    art = run_all(rounds=args.rounds, clients=args.clients)
+
+    from benchmarks.common import write_artifact
+
+    path = write_artifact("BENCH_hetero.json", art)
+    print(json.dumps(art["frontier"], indent=1))
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -65,6 +65,16 @@ def main() -> None:
             failures += 1
             print(f"fl_streaming,0,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if not args.only or "hetero" in args.only:
+        try:
+            from benchmarks import fl_hetero
+
+            for name, us, derived in fl_hetero.csv_rows():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"fl_hetero,0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
     if not args.skip_roofline:
         for name, us, derived in roofline.csv_rows():
             print(f"{name},{us:.1f},{derived}", flush=True)

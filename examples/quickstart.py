@@ -6,7 +6,14 @@ accuracy/communication trade-off against the dense original — the
 paper's core result in miniature.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+``--hetero`` runs the heterogeneous-capacity variant instead: 12
+clients in 3 rank tiers (gamma 0.05 / 0.1 / 0.3), each training and
+uploading only its tier's leading factor-column slice, with exact
+per-tier wire-byte accounting (see docs/hetero.md).
 """
+import sys
+
 import jax
 
 from repro.configs.base import ParamCfg
@@ -16,29 +23,60 @@ from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
 from repro.nn.vision import VGG_SMALL_PLAN, VGGConfig, init_vgg, vgg_accuracy, vgg_loss
 
 
-def run(kind: str, gamma: float, rounds: int = 4):
+def build_server(kind: str, gamma: float, rounds: int, clients: int = 10,
+                 **server_kw):
     ds = make_image_dataset(2000, 10, size=16, channels=3, noise=0.5, seed=0)
     tr, te = train_test_split(ds)
     cfg = VGGConfig(plan=VGG_SMALL_PLAN, fc_dims=(64,), image_size=16,
                     gn_groups=8, param=ParamCfg(kind=kind, gamma=gamma))
     params = init_vgg(jax.random.PRNGKey(0), cfg)
-    srv = FLServer(
+    return FLServer(
         loss_fn=lambda p, b: vgg_loss(p, cfg, b),
         global_params=params,
         data=tr,
-        partitions=iid_partition(len(tr["y"]), clients := 10),
+        partitions=iid_partition(len(tr["y"]), clients),
         strategy=make_strategy("fedavg"),
         client_cfg=ClientConfig(lr=0.05, batch=32, epochs=1),
         server_cfg=ServerConfig(clients=clients, participation=0.4,
-                                rounds=rounds, engine="batched"),
+                                rounds=rounds, engine="batched", **server_kw),
         eval_fn=lambda p: float(vgg_accuracy(p, cfg, {"x": te["x"][:300],
                                                       "y": te["y"][:300]})),
     )
+
+
+def run(kind: str, gamma: float, rounds: int = 4):
+    srv = build_server(kind, gamma, rounds)
     hist = srv.run(log_every=1)
-    return hist[-1]["eval"], srv.comm_log.total_gb, num_params(params)
+    return hist[-1]["eval"], srv.comm_log.total_gb, num_params(srv.global_params)
+
+
+def run_hetero(rounds: int = 4):
+    """12 clients across 3 capacity tiers: phones (gamma 0.05), tablets
+    (0.1) and workstations (0.3, the model's own gamma)."""
+    srv = build_server("fedpara", 0.3, rounds, clients=12,
+                       gamma_tiers=(0.05, 0.1, 0.3),
+                       tier_assignment="round_robin")
+    hist = srv.run(log_every=1)
+    tiers = srv.tier_bytes()
+    top = max(t["up_bytes"] for t in tiers)
+    print(f"\nHetero (3 tiers x 4 clients): acc={hist[-1]['eval']:.3f}  "
+          f"comm={srv.comm_log.total_gb * 1e3:.1f} MB")
+    for t, info in enumerate(tiers):
+        print(f"  tier {t} (gamma={info['gamma']}): uplink "
+              f"{info['up_bytes']:,} B/round "
+              f"({info['up_bytes'] / top:.2f}x of top tier)")
+    uniform = build_server("fedpara", 0.3, rounds, clients=12)
+    uniform.run()
+    print(f"Uniform full-rank: acc={uniform.history[-1]['eval']:.3f}  "
+          f"comm={uniform.comm_log.total_gb * 1e3:.1f} MB  "
+          f"--> tiers move {srv.comm_log.total_gb / uniform.comm_log.total_gb:.2f}x "
+          f"the bytes")
 
 
 if __name__ == "__main__":
+    if "--hetero" in sys.argv:
+        run_hetero()
+        sys.exit(0)
     print("== FedPara (gamma=0.3) ==")
     acc_fp, gb_fp, n_fp = run("fedpara", 0.3)
     print("== original (dense) ==")

@@ -157,6 +157,11 @@ class FedCfg:
     client_chunk: int = 16         # streaming engine: clients per
                                    # lax.scan step (the round's memory
                                    # high-water mark is O(chunk·model))
+    gamma_tiers: Tuple[float, ...] = ()   # heterogeneous capacity tiers:
+                                   # one rank-gamma per device tier;
+                                   # () = uniform full-rank clients
+    tier_assignment: str = "round_robin"  # client->tier rule:
+                                   # round_robin | random | size
 
 
 @dataclass(frozen=True)

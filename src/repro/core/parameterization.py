@@ -52,6 +52,7 @@ def lowrank_factor_std(fan_in: int, r: int, target_gain: float = 2.0) -> float:
 # ------------------------------------------------------------------ original
 
 def init_original(key: jax.Array, m: int, n: int, dtype=jnp.float32) -> ParamTree:
+    """He-initialized dense ``{"w": (m, n)}`` baseline (no factorization)."""
     w = jax.random.normal(key, (m, n), dtype) * jnp.asarray((2.0 / m) ** 0.5, dtype)
     return {"w": w}
 
@@ -59,6 +60,8 @@ def init_original(key: jax.Array, m: int, n: int, dtype=jnp.float32) -> ParamTre
 # ------------------------------------------------------------------ low-rank
 
 def init_lowrank(key: jax.Array, m: int, n: int, r: int, dtype=jnp.float32) -> ParamTree:
+    """Low-rank baseline ``{"x": (m, r), "y": (n, r)}`` with W = X Yᵀ,
+    factor std chosen so the composed W matches He variance."""
     kx, ky = jax.random.split(key)
     std = lowrank_factor_std(m, r)
     x = jax.random.normal(kx, (m, r), dtype) * std
@@ -71,6 +74,7 @@ def _cast(a, dtype):
 
 
 def compose_lowrank(params: ParamTree, dtype=None) -> jax.Array:
+    """W = X Yᵀ for ``{"x": (..., m, r), "y": (..., n, r)}`` -> (..., m, n)."""
     # Cast factors BEFORE the compose dot: a post-compose cast would be
     # folded into the dot by XLA, upcasting it (and any GSPMD psum of
     # its products) to fp32. '...' handles scan-stacked leading dims.
@@ -81,6 +85,8 @@ def compose_lowrank(params: ParamTree, dtype=None) -> jax.Array:
 # ------------------------------------------------------------------- fedpara
 
 def init_fedpara(key: jax.Array, m: int, n: int, r: int, dtype=jnp.float32) -> ParamTree:
+    """FedPara factors ``{"x1"/"x2": (m, r), "y1"/"y2": (n, r)}`` with
+    std set so the composed W = (X1Y1ᵀ)⊙(X2Y2ᵀ) matches He variance."""
     k1, k2, k3, k4 = jax.random.split(key, 4)
     std = fedpara_factor_std(m, r)
     return {
@@ -192,12 +198,187 @@ def materialize(params: ParamTree, kind: str, dtype=None) -> jax.Array:
     raise ValueError(f"unknown parameterization kind: {kind}")
 
 
+# ------------------------------------------- heterogeneous-rank tier helpers
+#
+# A "factor node" is any dict whose keys are exactly a FedPara/low-rank
+# factor set: {x1, y1[, x2, y2]} (matrix FedPara and its pFedPara split
+# halves), {x, y} (low-rank baseline), or the conv variants that add the
+# 4-D Tucker cores {t1, t2} / {t}. Heterogeneous-capacity clients keep
+# only the leading tier-rank columns of every factor leaf (and the
+# leading (r_t, r_t) block of conv cores); these helpers detect nodes,
+# build broadcastable column masks, and physically slice / zero-embed
+# trees. All shape decisions are static, so the mask path is jit/vmap
+# safe; detection runs on UNSTACKED trees (no leading client axis).
+
+# matrix nodes are the conv sets minus the Tucker cores, so two subset
+# checks cover all four node flavors (incl. pFedPara split halves)
+_CONV_FACTOR_KEYS = frozenset(("t1", "x1", "y1", "t2", "x2", "y2"))
+_CONV_LOWRANK_KEYS = frozenset(("t", "x", "y"))
+_FACTOR_PAIRS = (("x1", "y1"), ("x2", "y2"), ("x", "y"))
+
+
+def factor_spec(node: Any) -> Optional[Dict[str, Any]]:
+    """Recognize a factor node and return its layer dimensions.
+
+    Args:
+        node: candidate pytree node (unstacked — leaves carry no client
+            axis).
+
+    Returns:
+        ``{"kind": "matrix"|"conv", "m", "n", "r"[, "k1", "k2"]}`` when
+        ``node`` is a FedPara / low-rank factor dict, else ``None``.
+        ``m``/``n`` are the layer's outer dims, ``r`` the materialized
+        inner rank (factor column count).
+    """
+    if not isinstance(node, dict) or not node:
+        return None
+    keys = set(node)
+    if not (keys <= _CONV_FACTOR_KEYS or keys <= _CONV_LOWRANK_KEYS):
+        return None
+    for xk, yk in _FACTOR_PAIRS:
+        if xk in node and yk in node:
+            x, y = node[xk], node[yk]
+            break
+    else:
+        return None
+    if getattr(x, "ndim", 0) != 2 or getattr(y, "ndim", 0) != 2:
+        return None
+    if x.shape[-1] != y.shape[-1]:
+        return None
+    m, n, r = int(x.shape[0]), int(y.shape[0]), int(x.shape[-1])
+    core = next((node[k] for k in ("t", "t1", "t2") if k in node), None)
+    if core is None:
+        return {"kind": "matrix", "m": m, "n": n, "r": r}
+    if getattr(core, "ndim", 0) != 4 or int(core.shape[0]) != r \
+            or int(core.shape[1]) != r:
+        return None
+    return {"kind": "conv", "m": m, "n": n, "r": r,
+            "k1": int(core.shape[2]), "k2": int(core.shape[3])}
+
+
+def tier_node_rank(spec: Dict[str, Any], gamma: float) -> int:
+    """Effective tier rank for one factor node (see ``rank_policy``)."""
+    if spec["kind"] == "conv":
+        return rank_policy.conv_tier_rank(
+            spec["m"], spec["n"], spec["k1"], spec["k2"], spec["r"], gamma)
+    return rank_policy.matrix_tier_rank(spec["m"], spec["n"], spec["r"], gamma)
+
+
+def _is_core_key(k: str) -> bool:
+    return k in ("t", "t1", "t2")
+
+
+def rank_mask_tree(tree: Any, gamma: float, dtype=jnp.float32) -> Any:
+    """Broadcastable 0/1 column masks selecting a tier's factor slice.
+
+    Args:
+        tree: payload/param pytree (unstacked).
+        gamma: the tier's rank-interpolation knob.
+        dtype: mask dtype.
+
+    Returns:
+        A same-structure tree whose factor leaves carry ``(1, r)``
+        column masks (``(r, r, 1, 1)`` block masks for conv cores) with
+        ones on the leading tier-rank columns, and whose non-factor
+        leaves carry all-ones masks of broadcast shape ``(1,) * ndim``.
+        Masks multiply cleanly against unstacked, client-stacked
+        ``(C, ...)`` and tier-stacked leaves alike.
+    """
+    def node_masks(node, spec):
+        r_full = spec["r"]
+        col = (jnp.arange(r_full) < tier_node_rank(spec, gamma)).astype(dtype)
+        block = (col[:, None] * col[None, :])[..., None, None]
+        return {k: (block if _is_core_key(k) else col[None, :])
+                for k in node}
+
+    def walk(node):
+        spec = factor_spec(node)
+        if spec is not None:
+            return node_masks(node, spec)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return jnp.ones((1,) * getattr(node, "ndim", 0), dtype)
+
+    return walk(tree)
+
+
+def tier_rank_masks(tree: Any, gammas, dtype=jnp.float32) -> Any:
+    """Stack :func:`rank_mask_tree` over a tier schedule.
+
+    Returns a same-structure tree whose leaves gain a leading tier axis
+    ``(T, ...)``; gather per-client masks with
+    ``jax.tree.map(lambda m: jnp.take(m, tier_idx, axis=0), masks)``.
+    """
+    per_tier = [rank_mask_tree(tree, g, dtype) for g in gammas]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_tier)
+
+
+def apply_rank_mask(tree: Any, masks: Any) -> Any:
+    """Multiply a (broadcastable) mask tree into ``tree``, preserving
+    each leaf's dtype. Inverse-free: masked columns become exact zeros."""
+    return jax.tree.map(lambda x, m: (x * m).astype(x.dtype), tree, masks)
+
+
+def slice_factor_tree(tree: Any, gamma: float) -> Any:
+    """Physically slice every factor node to its tier rank.
+
+    The ragged twin of :func:`rank_mask_tree`: factor leaves come back
+    as ``x[..., :r_t]`` column prefixes (conv cores as
+    ``t[:r_t, :r_t]``), non-factor leaves unchanged. This is what a
+    tier's wire payload actually looks like — codecs price tier uplinks
+    from these shapes (``Codec.wire_bytes`` is shape-only, so the byte
+    algebra stays exact). Host-side only: slicing changes shapes, so it
+    cannot run under jit with traced ranks.
+    """
+    def walk(node):
+        spec = factor_spec(node)
+        if spec is not None:
+            r_t = tier_node_rank(spec, gamma)
+            return {k: (v[:r_t, :r_t] if _is_core_key(k) else v[..., :r_t])
+                    for k, v in node.items()}
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(tree)
+
+
+def embed_factor_tree(sliced: Any, like: Any) -> Any:
+    """Zero-embed a rank-sliced tree back into full-rank shapes.
+
+    Args:
+        sliced: output of :func:`slice_factor_tree`.
+        like: a full-rank tree with the target shapes.
+
+    Returns:
+        ``like``-shaped tree with the slice in the leading columns and
+        exact zeros beyond — the server-side inverse of slicing, so
+        ``embed(slice(p)) == mask * p`` leaf-wise.
+    """
+    def walk(s, l):
+        if isinstance(l, dict):
+            return {k: walk(s[k], v) for k, v in l.items()}
+        if isinstance(l, (list, tuple)):
+            return type(l)(walk(a, b) for a, b in zip(s, l))
+        if not hasattr(l, "shape"):
+            return s
+        pad = [(0, int(fd) - int(sd)) for sd, fd in zip(s.shape, l.shape)]
+        return jnp.pad(s, pad) if any(p for _, p in pad) else s
+
+    return walk(sliced, like)
+
+
 def num_params(tree: Any) -> int:
     """Total scalar count over a pytree."""
     return int(sum(x.size for x in jax.tree.leaves(tree) if hasattr(x, "size")))
 
 
 def tree_bytes(tree: Any) -> int:
+    """Total in-memory bytes over a pytree (dtype-aware: size × itemsize)."""
     return int(
         sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree) if hasattr(x, "size"))
     )

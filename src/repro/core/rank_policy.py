@@ -10,11 +10,23 @@ The paper controls the per-layer inner rank with a single scalar
   (Corollary 1).
 * ``r_max`` — the largest inner rank whose parameter count does not
   exceed the original layer (parameter parity).
+
+Heterogeneous-capacity federation extends the single knob to a **tier
+schedule** (:class:`TierSchedule`): a short list of gammas, one per
+device-capacity tier, plus a client→tier assignment rule. A tier's
+per-layer rank is the paper's policy rank for its gamma, floored at the
+layer's ``r_min`` (Corollary 1 — every tier keeps full-rank capability)
+and capped at the global model's materialized rank (a tier can only
+*slice* the global factors, never widen them): :func:`matrix_tier_rank`
+/ :func:`conv_tier_rank`.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
 
 
 def matrix_rmin(m: int, n: int) -> int:
@@ -76,6 +88,111 @@ def conv_param_count(out_ch: int, in_ch: int, k1: int, k2: int, r: int) -> int:
 def conv_reshape_param_count(out_ch: int, in_ch: int, k1: int, k2: int, r: int) -> int:
     """FedPara conv via reshape (Prop. 1 on O×(I·K1·K2)): 2R(O + I·K1·K2)."""
     return 2 * r * (out_ch + in_ch * k1 * k2)
+
+
+# ------------------------------------------------- heterogeneous rank tiers
+
+TIER_ASSIGNMENTS = ("round_robin", "random", "size")
+
+
+def tier_rank(r_full: int, r_min: int, policy_rank: int) -> int:
+    """Clamp a tier's policy rank into ``[min(r_min, r_full), r_full]``.
+
+    Args:
+        r_full: materialized rank of the global factors (the most a
+            client can receive — tiers slice, they never widen).
+        r_min: the layer's Corollary-1 full-rank floor.
+        policy_rank: the rank the tier's gamma resolves to under the
+            paper's interpolation.
+
+    Returns:
+        The tier's effective rank: floored at ``r_min`` so every tier
+        keeps full-rank capability (when the global factors themselves
+        have it), capped at ``r_full``.
+    """
+    floor = min(r_min, r_full)
+    return int(min(r_full, max(floor, policy_rank)))
+
+
+def matrix_tier_rank(m: int, n: int, r_full: int, gamma: float) -> int:
+    """Effective rank of a gamma tier on an (m, n) matrix layer whose
+    global factors have inner rank ``r_full`` (see :func:`tier_rank`)."""
+    return tier_rank(r_full, matrix_rmin(m, n),
+                     matrix_rank_for_gamma(m, n, gamma))
+
+
+def conv_tier_rank(out_ch: int, in_ch: int, k1: int, k2: int,
+                   r_full: int, gamma: float) -> int:
+    """Effective rank of a gamma tier on an (O, I, K1, K2) conv layer
+    whose global Prop.-3 factors have inner rank ``r_full``."""
+    return tier_rank(r_full, conv_rmin(out_ch, in_ch),
+                     conv_rank_for_gamma(out_ch, in_ch, k1, k2, gamma))
+
+
+@dataclass(frozen=True)
+class TierSchedule:
+    """A capacity-tier schedule for heterogeneous-rank federation.
+
+    Attributes:
+        gammas: one rank-interpolation gamma per tier (each in [0, 1]).
+            Tier ``t``'s clients train and upload only the leading
+            ``r_t`` columns of every FedPara factor, where ``r_t`` is
+            the gamma's policy rank per layer (see
+            :func:`matrix_tier_rank`).
+        assignment: client→tier rule — ``round_robin`` (cid mod T),
+            ``random`` (seeded uniform draw), or ``size`` (clients
+            ranked by local dataset size; larger datasets get
+            larger-gamma tiers).
+    """
+
+    gammas: Tuple[float, ...]
+    assignment: str = "round_robin"
+
+    def __post_init__(self):
+        if not self.gammas:
+            raise ValueError("TierSchedule needs at least one gamma tier")
+        for g in self.gammas:
+            if not 0.0 <= float(g) <= 1.0:
+                raise ValueError(f"tier gamma must be in [0, 1]: {g!r}")
+        if self.assignment not in TIER_ASSIGNMENTS:
+            raise ValueError(
+                f"unknown tier assignment {self.assignment!r} "
+                f"(expected one of {TIER_ASSIGNMENTS})")
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.gammas)
+
+    def assign(self, n_clients: int, sizes: Optional[Sequence[int]] = None,
+               seed: int = 0) -> np.ndarray:
+        """Deterministic client→tier index assignment.
+
+        Args:
+            n_clients: fleet size.
+            sizes: per-client local dataset sizes — required for the
+                ``size`` rule, ignored otherwise.
+            seed: RNG seed for the ``random`` rule.
+
+        Returns:
+            ``(n_clients,)`` int array of tier indices into ``gammas``.
+        """
+        T = self.n_tiers
+        if self.assignment == "round_robin":
+            return np.arange(n_clients, dtype=np.int64) % T
+        if self.assignment == "random":
+            return np.random.RandomState(seed).randint(T, size=n_clients)
+        if sizes is None:
+            raise ValueError("tier assignment 'size' needs per-client sizes")
+        if len(sizes) != n_clients:
+            raise ValueError("sizes length must equal n_clients")
+        # clients sorted by dataset size; equal blocks map onto tiers
+        # ordered by ascending gamma (more data -> more capacity)
+        order = np.argsort(np.asarray(sizes), kind="stable")
+        gamma_order = np.argsort(np.asarray(self.gammas), kind="stable")
+        out = np.zeros(n_clients, dtype=np.int64)
+        for pos, cid in enumerate(order):
+            out[cid] = gamma_order[min(pos * T // n_clients, T - 1)]
+        return out
 
 
 @dataclass(frozen=True)

@@ -93,6 +93,8 @@ def init_conv_original(
 
 
 def materialize_conv(params: ParamTree, kind: str, dtype=None) -> jax.Array:
+    """Compose the dense OIHW conv kernel for the given parameterization
+    kind (original | lowrank | fedpara | fedpara_tanh)."""
     if kind == "original":
         w = params["w"]
         return w.astype(dtype) if dtype is not None else w
@@ -117,6 +119,9 @@ def init_conv(
     rank: Optional[int] = None,
     dtype=jnp.float32,
 ) -> ParamTree:
+    """Initialize one parameterized (out_ch, in_ch, k1, k2) conv kernel;
+    ``rank=None`` resolves the inner rank from ``gamma`` via the Prop.-3
+    policy (the low-rank baseline gets ``2r`` for parameter parity)."""
     if kind == "original":
         return init_conv_original(key, out_ch, in_ch, k1, k2, dtype)
     if kind == "lowrank":

@@ -1,3 +1,10 @@
+"""Federated learning: server/simulator, client, strategies, wire
+codecs, byte accounting, and the batched/streaming round engines.
+
+Start at :class:`FLServer` + :class:`ServerConfig`; see docs/engines.md
+for the engine decision table, docs/codecs.md for the codec grammar and
+docs/hetero.md for heterogeneous-capacity rank tiers.
+"""
 from repro.fl import (
     batch_engine,
     client,
@@ -18,7 +25,12 @@ from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.codecs import Codec, make_codec
 from repro.fl.comm import CommLog, merge_pfedpara, split_pfedpara
 from repro.fl.server import FLServer, ServerConfig
-from repro.fl.strategies import Strategy, make_strategy
+from repro.fl.strategies import (
+    Strategy,
+    make_strategy,
+    tree_hetero_wmean_stacked,
+    tree_wmean_stacked,
+)
 from repro.fl.stream_engine import StreamingRound
 
 __all__ = [
@@ -28,4 +40,5 @@ __all__ = [
     "ClientConfig", "init_client_state", "local_update", "Codec",
     "make_codec", "CommLog", "merge_pfedpara", "split_pfedpara", "FLServer",
     "ServerConfig", "Strategy", "make_strategy", "StreamingRound",
+    "tree_hetero_wmean_stacked", "tree_wmean_stacked",
 ]

@@ -49,11 +49,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.parameterization import apply_rank_mask
 from repro.fl import comm
 from repro.fl.codecs import Codec, make_codec
 from repro.fl.client import ClientConfig, _step_math, strategy_post
 from repro.fl.strategies import (
     Strategy,
+    tree_hetero_wmean_stacked,
     tree_index,
     tree_stack,
     tree_wmean_stacked,
@@ -188,6 +190,7 @@ def chunk_round_program(
     mesh: Optional[Mesh] = None,
     axis: str = "clients",
     encoded_upload: bool = False,
+    col_masks: Any = None,
 ):
     """One chunk of clients: local epochs, payload selection, per-client
     uplink encoding. The shared core of the batched engine's round
@@ -201,7 +204,18 @@ def chunk_round_program(
     linear carriers, delta offset left to the aggregator) so the
     streaming accumulator can fold them in with the fused
     dequant-accumulate kernel without ever materializing the dense
-    stack. Returns ``(new_params, new_state, upload, local, last_loss,
+    stack.
+
+    ``col_masks`` (heterogeneous rank tiers): a client-stacked
+    payload-structure tree of broadcastable 0/1 rank masks. When given,
+    each client's upload is column-masked to its tier rank BEFORE the
+    codec sees it, and the codec's delta reference becomes the
+    equally-masked broadcast — exactly what a client that only ever
+    received the leading tier-rank factor columns would transmit. With
+    ``col_masks=None`` the homogeneous path below is byte-identical to
+    before.
+
+    Returns ``(new_params, new_state, upload, local, last_loss,
     n_steps)``, all stacked along the chunk's client axis.
     """
     new_p, new_state, last_loss, n_steps = batched_local_update(
@@ -210,12 +224,29 @@ def chunk_round_program(
 
     upload, local = select_upload(new_p, personalization, fedper_local_keys)
     codec = uplink_codec
+    if upload is not None and col_masks is not None:
+        # tier-sliced uplink: zero columns stand in for absent ones
+        # (they carry zero aggregation WEIGHT downstream, not zero value)
+        upload = apply_rank_mask(upload, col_masks)
     if upload is not None and not codec.is_identity:
         # per-client encode: delta against the round's decoded broadcast
         # (closure => broadcast under vmap), error feedback threaded
         # through the stacked client state
         enc = codec.encode_for_agg if encoded_upload else codec.encode_decode
-        if codec.has_ef:
+        if col_masks is not None:
+            def enc_masked(u, m, e, k):
+                return enc(u, ref=apply_rank_mask(down_payload, m),
+                           ef=e, key=k)
+
+            if codec.has_ef:
+                upload, new_ef = jax.vmap(enc_masked)(
+                    upload, col_masks, new_state["_ef_up"], quant_keys)
+                new_state = {**new_state, "_ef_up": new_ef}
+            else:
+                upload, _ = jax.vmap(
+                    lambda u, m, k: enc_masked(u, m, None, k)
+                )(upload, col_masks, quant_keys)
+        elif codec.has_ef:
             upload, new_ef = jax.vmap(
                 lambda u, e, k: enc(u, ref=down_payload, ef=e, key=k)
             )(upload, new_state["_ef_up"], quant_keys)
@@ -254,7 +285,13 @@ class ClientBatch:
     # ------------------------------------------------------- the program
     def _round_program(self, stacked_params, stacked_state, batches,
                        step_mask, arrived_mask, sizes, lr, quant_keys,
-                       server_state, agg_target, down_payload):
+                       server_state, agg_target, down_payload,
+                       tier_idx, tier_masks):
+        col_masks = None
+        if tier_masks is not None:
+            # per-client rank masks gathered from the (T, ...) tier table
+            col_masks = jax.tree.map(
+                lambda m: jnp.take(m, tier_idx, axis=0), tier_masks)
         new_p, new_state, upload, local, last_loss, n_steps = \
             chunk_round_program(
                 stacked_params, stacked_state, batches, step_mask,
@@ -264,11 +301,19 @@ class ClientBatch:
                 personalization=self.personalization,
                 fedper_local_keys=self.fedper_local_keys,
                 uplink_codec=self.uplink_codec, lr=lr,
-                mesh=self.mesh, axis=self.mesh_axis)
+                mesh=self.mesh, axis=self.mesh_axis,
+                col_masks=col_masks)
 
         if upload is not None:
             w = arrived_mask * sizes
-            mean_w = tree_wmean_stacked(upload, w)
+            if col_masks is not None:
+                # per-column arrival weighting: a column only averages
+                # over clients whose tier covers it; columns nobody
+                # covers keep the current global value (agg_target)
+                mean_w = tree_hetero_wmean_stacked(upload, w, col_masks,
+                                                   agg_target)
+            else:
+                mean_w = tree_wmean_stacked(upload, w)
             new_global, new_server_state = self.strategy.server_update(
                 server_state, agg_target, mean_w)
         else:
@@ -278,11 +323,17 @@ class ClientBatch:
 
     def run(self, stacked_params, stacked_state, batches, step_mask,
             arrived_mask, sizes, lr, quant_keys, server_state, agg_target,
-            down_payload):
+            down_payload, tier_idx=None, tier_masks=None):
+        """Execute one round. ``tier_idx`` (``(C,)`` int) and
+        ``tier_masks`` (``(T, ...)``-leading payload-structure mask tree)
+        switch on heterogeneous-rank aggregation; both ``None`` (the
+        default) runs the homogeneous program unchanged."""
         return self._program(
             stacked_params, stacked_state,
             jax.tree.map(jnp.asarray, batches), jnp.asarray(step_mask),
             jnp.asarray(arrived_mask, jnp.float32),
             jnp.asarray(sizes, jnp.float32),
             jnp.asarray(lr, jnp.float32), quant_keys,
-            server_state, agg_target, down_payload)
+            server_state, agg_target, down_payload,
+            None if tier_idx is None else jnp.asarray(tier_idx, jnp.int32),
+            tier_masks)

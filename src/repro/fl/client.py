@@ -28,6 +28,11 @@ from repro.optim import apply_updates, sgd
 
 @dataclass
 class ClientConfig:
+    """Local-SGD settings shared by every simulated client: base
+    learning rate (decayed per round by ``ServerConfig.lr_decay``),
+    SGD momentum, minibatch size, local epochs per round, and weight
+    decay."""
+
     lr: float = 0.1
     momentum: float = 0.0
     batch: int = 64

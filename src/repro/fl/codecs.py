@@ -212,6 +212,19 @@ class Codec:
         return x, new_ef
 
     def decode(self, wire: Any, *, ref: Any = None) -> Any:
+        """Invert :meth:`encode`: map a wire tree back to payload space.
+
+        Args:
+            wire: the encoded tree (``{"q", "scale"}`` int8 nodes,
+                ``{"lr_u", "lr_v"}`` factor nodes, dense carriers).
+            ref: reference tree for the delta stage (required iff the
+                spec contains ``delta``).
+
+        Returns:
+            The decoded payload tree — exactly what a receiver would
+            reconstruct (top-k carriers are already dense, so that
+            stage decodes as identity). jit/vmap-safe.
+        """
         x = wire
         for st in reversed(self.stages):
             if st.kind == "int8":
@@ -288,10 +301,16 @@ class Codec:
     # ---------------------------------------------------------- accounting
     def wire_bytes(self, payload: Any) -> int:
         """Exact wire size of ``payload`` under this codec, from leaf
-        shapes alone (data-independent, so both engines charge the same
+        shapes alone (data-independent, so every engine charges the same
         integers). Per original leaf the stage algebra tracks a list of
         value chunks ``(count, bytes_per_value)`` plus an index/scale
-        overhead in plain bytes."""
+        overhead in plain bytes.
+
+        Heterogeneous rank tiers price each tier by passing the
+        PHYSICALLY SLICED payload
+        (``repro.core.parameterization.slice_factor_tree``) — smaller
+        factor column counts flow through the same exact algebra, so
+        per-tier bytes need no special cases here."""
         total = 0
         for leaf in jax.tree.leaves(payload):
             if not hasattr(leaf, "shape"):

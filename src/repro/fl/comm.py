@@ -191,6 +191,8 @@ class CommLog:
         self.rounds = 0
 
     def log_round(self, down_bytes: int, up_bytes: int):
+        """Accumulate one round's exact wire bytes (already summed over
+        the round's arrived participants, per link)."""
         self.down_bytes += int(down_bytes)
         self.up_bytes += int(up_bytes)
         self.rounds += 1

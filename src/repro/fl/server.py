@@ -61,6 +61,22 @@ accumulators threaded through ``client_states["_ef_up"]``. The legacy
 ``uplink_quant`` / ``downlink_quant`` fields map to single-stage
 quantizer codecs when no codec spec is given. ``CommLog`` charges the
 codecs' exact ``wire_bytes``.
+
+Heterogeneous capacity tiers (``ServerConfig.gamma_tiers`` /
+``tier_assignment`` — see ``docs/hetero.md``): each client belongs to a
+capacity tier with its own rank gamma; it receives, trains and uploads
+only the leading tier-rank columns of every FedPara factor. The
+sequential engine masks host-side per client; the batched/streaming
+engines keep ONE compiled program by gathering per-client column masks
+from a ``(T, ...)`` tier table instead of using ragged shapes. The
+server aggregates rank-sliced uploads into the full-rank global factors
+with per-column arrival-weighted averaging: columns beyond a client's
+tier contribute zero WEIGHT (not zero value), and columns no arrived
+client covers keep their current global value. Wire bytes are priced at
+each tier's physically sliced payload shapes on both links, including
+the straggler latency model. ``gamma_tiers=()`` (default) is exactly
+the homogeneous path; a single tier at the model's own gamma reproduces
+it to fp32 tolerance with bitwise-identical arrival masks.
 """
 from __future__ import annotations
 
@@ -72,11 +88,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import parameterization as param_lib
+from repro.core import rank_policy
 from repro.data.loader import client_epochs, stack_client_epochs
 from repro.fl import codecs, comm
 from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.strategies import (
     Strategy,
+    tree_hetero_wmean_stacked,
     tree_index,
     tree_mean,
     tree_stack,
@@ -100,6 +119,19 @@ def arrival_mask(ok: np.ndarray, lat: np.ndarray, n_target: int) -> np.ndarray:
 
 @dataclass
 class ServerConfig:
+    """Round/selection/wire/engine settings for :class:`FLServer`.
+
+    Groups: fleet + participation (``clients``, ``participation``,
+    ``rounds``, ``lr_decay``); personalization mode; wire codecs
+    (``uplink_codec``/``downlink_codec`` specs — see docs/codecs.md —
+    with the legacy ``*_quant`` single-stage fields as fallback);
+    straggler/fault model (``oversample``, ``deadline_quantile``,
+    ``straggler_sigma``, ``bandwidth_mbps``, ``dropout_prob``,
+    ``staleness_mix``); execution engine (``engine``, ``client_chunk``
+    — see docs/engines.md); heterogeneous capacity tiers
+    (``gamma_tiers``, ``tier_assignment`` — see docs/hetero.md).
+    """
+
     clients: int = 100
     participation: float = 0.16
     rounds: int = 20
@@ -117,10 +149,39 @@ class ServerConfig:
     staleness_mix: float = 0.0         # >0: async staleness-weighted mixing
     engine: str = "sequential"         # sequential | batched | streaming
     client_chunk: int = 16             # streaming: clients per scan step
+    gamma_tiers: tuple = ()            # heterogeneous capacity tiers: one
+                                       # rank-gamma per tier; () = uniform
+                                       # full-rank clients (today's path)
+    tier_assignment: str = "round_robin"   # round_robin | random | size
     seed: int = 0
 
 
 class FLServer:
+    """The federated-learning server/simulator (see module docstring).
+
+    Args:
+        loss_fn: ``loss_fn(params, batch) -> scalar`` traced inside each
+            client's local step.
+        global_params: initial global model pytree (FedPara factors are
+            just leaves of this tree).
+        data: dataset dict of arrays; clients index it via
+            ``partitions``.
+        partitions: per-client index arrays into ``data``.
+        strategy: a ``repro.fl.strategies.Strategy``.
+        client_cfg: local-SGD settings (lr, batch, epochs, ...).
+        server_cfg: round/selection/codec/engine/tier settings.
+        eval_fn: optional ``eval_fn(global_params) -> metric`` recorded
+            per round in ``history[i]["eval"]``.
+        mesh / mesh_axis: optional jax mesh for the batched/streaming
+            engines' shard_map path.
+
+    After ``run()``: ``global_params`` holds the trained model,
+    ``history`` the per-round records (participants, ``arrived_mask``,
+    mean loss, exact ``down_bytes``/``up_bytes``), ``comm_log`` the
+    cumulative wire-byte totals, ``client_states``/``local_trees`` the
+    per-client strategy state and personalization residents.
+    """
+
     def __init__(
         self,
         loss_fn: Callable,
@@ -156,6 +217,17 @@ class FLServer:
             server_cfg.downlink_codec or server_cfg.downlink_quant)
         self._down_ref: Any = None   # last decoded broadcast (delta ref)
         self._down_ef: Any = None    # server-side downlink error feedback
+        self.tiers: Optional[rank_policy.TierSchedule] = None
+        self.tier_of: Optional[np.ndarray] = None
+        self._tier_cache: Optional[Dict] = None
+        if server_cfg.gamma_tiers:
+            self.tiers = rank_policy.TierSchedule(
+                tuple(float(g) for g in server_cfg.gamma_tiers),
+                server_cfg.tier_assignment)
+            self.tier_of = self.tiers.assign(
+                server_cfg.clients,
+                sizes=[len(p) for p in partitions],
+                seed=server_cfg.seed)
         self._engine = None
         self._stream = None
         if server_cfg.engine == "batched":
@@ -249,8 +321,78 @@ class FLServer:
         else:
             self.global_params = {**self.global_params, **new_global_part}
 
+    # ------------------------------------------------ heterogeneous tiers
+    def _tier_state(self, probe: Any) -> Dict:
+        """Round-invariant tier tables, built once from the downlink
+        payload structure (lazily, since the payload structure depends
+        on the personalization mode):
+
+          payload_masks  (T, ...)-leading rank-mask tree over the
+                         payload structure (uploads + aggregation),
+          full_masks     same over the full global-param structure
+                         (client assembly + strategy state),
+          down_bytes /   exact per-tier wire bytes, priced by each link's
+          up_bytes       codec on the PHYSICALLY SLICED payload shapes —
+                         the shape algebra of ``Codec.wire_bytes`` stays
+                         exact, it just sees tier-rank column counts.
+        """
+        if self._tier_cache is None:
+            gammas = self.tiers.gammas
+            sliced = [param_lib.slice_factor_tree(probe, g) for g in gammas]
+            self._tier_cache = {
+                "payload_masks": param_lib.tier_rank_masks(probe, gammas),
+                "full_masks": param_lib.tier_rank_masks(
+                    self.global_params, gammas),
+                "down_bytes": tuple(
+                    self.downlink_codec.wire_bytes(s) for s in sliced),
+                "up_bytes": tuple(
+                    self.uplink_codec.wire_bytes(s) for s in sliced),
+            }
+        return self._tier_cache
+
+    def tier_bytes(self) -> List[Dict]:
+        """Public per-tier wire pricing (heterogeneous mode only).
+
+        Returns one dict per tier, in ``gamma_tiers`` order:
+        ``{"gamma", "up_bytes", "down_bytes", "clients"}`` — the exact
+        per-round per-client wire bytes of the tier's sliced payload on
+        each link, and how many clients the assignment mapped to it.
+        Raises if ``gamma_tiers`` is unset or no round has run yet (the
+        payload structure, hence the pricing, is known after the first
+        round's broadcast).
+        """
+        if self.tiers is None:
+            raise ValueError("tier_bytes() requires ServerConfig.gamma_tiers")
+        if self._tier_cache is None:
+            raise ValueError("tier_bytes() is available after the first "
+                             "round (run_round() fixes the payload shapes)")
+        tc = self._tier_cache
+        return [{"gamma": g,
+                 "up_bytes": tc["up_bytes"][t],
+                 "down_bytes": tc["down_bytes"][t],
+                 "clients": int((self.tier_of == t).sum())}
+                for t, g in enumerate(self.tiers.gammas)]
+
+    def _round_bytes(self, sampled, mask, down_bytes: int, down_dec: Any
+                     ) -> tuple:
+        """Exact (down, up) wire bytes for the round's arrived clients.
+        Homogeneous: participants × full payload bytes (as before).
+        Heterogeneous: each arrived client is charged its TIER's sliced
+        payload bytes on both links."""
+        n_arrived = int(mask.sum())
+        local = self.scfg.personalization == "local"
+        if self.tier_of is None:
+            up = 0 if local else self.uplink_codec.wire_bytes(down_dec)
+            return n_arrived * down_bytes, n_arrived * up
+        tc = self._tier_cache
+        tiers = [int(self.tier_of[int(c)])
+                 for c, m in zip(sampled, mask) if m]
+        down = sum(tc["down_bytes"][t] for t in tiers)
+        up = 0 if local else sum(tc["up_bytes"][t] for t in tiers)
+        return down, up
+
     # ------------------------------------------------------------- round
-    def _simulate_latency(self, payload_bytes: int, n: int) -> np.ndarray:
+    def _simulate_latency(self, payload_bytes, n: int) -> np.ndarray:
         comp = self.rng.lognormal(mean=0.0, sigma=self.scfg.straggler_sigma, size=n)
         comm_s = 8.0 * payload_bytes / (self.scfg.bandwidth_mbps * 1e6)
         return comp + comm_s
@@ -272,7 +414,15 @@ class FLServer:
         lr = self.ccfg.lr * (scfg.lr_decay ** self.round_idx)
 
         probe_payload = self._download_payload(int(sampled[0]))
-        payload_bytes = self.downlink_codec.wire_bytes(probe_payload)
+        if self.tier_of is not None:
+            # per-tier sliced broadcast: each sampled client's download
+            # latency is priced at ITS tier's wire bytes
+            tc = self._tier_state(probe_payload)
+            payload_bytes = np.array(
+                [tc["down_bytes"][int(self.tier_of[int(c)])]
+                 for c in sampled])
+        else:
+            payload_bytes = self.downlink_codec.wire_bytes(probe_payload)
         lat = self._simulate_latency(payload_bytes, len(sampled))
         alive = self.rng.rand(len(sampled)) >= scfg.dropout_prob
         deadline = (np.quantile(lat, scfg.deadline_quantile)
@@ -310,6 +460,9 @@ class FLServer:
         return decoded, codec.wire_bytes(payload)
 
     def run_round(self) -> Dict:
+        """Execute one federated round end-to-end (selection, broadcast
+        encode, the configured engine, aggregation, bookkeeping) and
+        return (and append to ``history``) its record dict."""
         sampled, mask, seeds, lr, probe = self._select_round()
         if not mask.any():   # everyone failed: skip round (fault tolerance)
             self.round_idx += 1
@@ -345,16 +498,20 @@ class FLServer:
         scfg = self.scfg
         up_codec = self.uplink_codec
         quant_keys = self._quant_keys(len(sampled))
-        # per-client wire bytes are shape-only, hence identical across
-        # clients: the upload payload has the downlink payload's structure
-        up_bytes = (0 if scfg.personalization == "local"
-                    else up_codec.wire_bytes(down_dec))
-        uploads, weights, losses = [], [], []
+        hetero = self.tier_of is not None
+        tc = self._tier_state(down_dec) if hetero else None
+        uploads, up_masks, weights, losses = [], [], [], []
         for i, cid in enumerate(int(c) for c in sampled):
             if not mask[i]:
                 continue
+            tier = int(self.tier_of[cid]) if hetero else -1
             params = self._client_full_params(cid, down_dec)
-            state = self._prep_client_state(cid, params, down_dec)
+            if hetero:
+                # the client only receives (and trains) the leading
+                # tier-rank factor columns of the broadcast
+                params = param_lib.apply_rank_mask(
+                    params, tree_index(tc["full_masks"], tier))
+            state = self._prep_client_state(cid, params, down_dec, tier=tier)
             batches = client_epochs(self.data, self.partitions[cid],
                                     self.ccfg.batch, self.ccfg.epochs,
                                     seed=int(seeds[i]))
@@ -363,8 +520,14 @@ class FLServer:
                 client_state=state, lr=lr)
             up = self._split_upload(cid, trained)
             if up is not None:
+                ref = down_dec
+                if hetero:
+                    pmask = tree_index(tc["payload_masks"], tier)
+                    up = param_lib.apply_rank_mask(up, pmask)
+                    ref = param_lib.apply_rank_mask(down_dec, pmask)
+                    up_masks.append(pmask)
                 up, new_ef = up_codec.encode_decode(
-                    up, ref=down_dec, ef=state.get("_ef_up"),
+                    up, ref=ref, ef=state.get("_ef_up"),
                     key=quant_keys[i])
                 if new_ef is not None:
                     state = {**state, "_ef_up": new_ef}
@@ -372,15 +535,21 @@ class FLServer:
                 weights.append(float(len(self.partitions[cid])))
             self.client_states[cid] = state
             losses.append(m["loss"])
-        n_arrived = int(mask.sum())
-        self.comm_log.log_round(n_arrived * down_bytes, n_arrived * up_bytes)
+        rd, ru = self._round_bytes(sampled, mask, down_bytes, down_dec)
+        self.comm_log.log_round(rd, ru)
 
         # ---------------------------------------------------- aggregation
         if uploads and scfg.personalization != "local":
             agg_target = (self.global_params if scfg.personalization == "none"
                           else self._download_payload(-1))
+            if hetero:
+                mean_w = tree_hetero_wmean_stacked(
+                    tree_stack(uploads), jnp.asarray(weights, jnp.float32),
+                    tree_stack(up_masks), agg_target)
+            else:
+                mean_w = tree_mean(uploads, weights)
             new_global_part, self.server_state = self.strategy.server_update(
-                self.server_state, agg_target, tree_mean(uploads, weights))
+                self.server_state, agg_target, mean_w)
             self._apply_aggregated(new_global_part, agg_target)
 
         return {
@@ -388,14 +557,20 @@ class FLServer:
             "sampled": len(sampled),
             "mean_loss": float(np.mean(losses)) if losses else float("nan"),
             "comm_gb": self.comm_log.total_gb,
+            "down_bytes": rd,
+            "up_bytes": ru,
             "lr": lr,
         }
 
-    def _prep_client_state(self, cid: int, params: Any, down_dec: Any) -> Dict:
+    def _prep_client_state(self, cid: int, params: Any, down_dec: Any,
+                           tier: int = -1) -> Dict:
         """Round-start client state: stored state or strategy init, with
         the uplink EF accumulator (payload structure) attached and the
-        SCAFFOLD server control variate broadcast in. Shared by the
-        batched and streaming engines."""
+        SCAFFOLD server control variate broadcast in. Shared by all
+        three engines. ``tier >= 0`` (heterogeneous mode) column-masks
+        every payload/param-structured state tree to the client's tier
+        rank, so masked factor columns see exactly-zero strategy signals
+        and stay zero through local training."""
         state = self.client_states.get(cid)
         if state is None:
             state = init_client_state(self.strategy, params)
@@ -406,6 +581,17 @@ class FLServer:
                  if not self.server_state else self.server_state.get(
                      "c", jax.tree.map(jnp.zeros_like, params)))
             state = {**state, "c": c}
+        if tier >= 0:
+            tc = self._tier_cache
+            fmask = tree_index(tc["full_masks"], tier)
+            pmask = tree_index(tc["payload_masks"], tier)
+            state = dict(state)
+            for k in ("c", "c_i", "lambda_i"):
+                if k in state:
+                    state[k] = param_lib.apply_rank_mask(state[k], fmask)
+            if "_ef_up" in state:
+                state["_ef_up"] = param_lib.apply_rank_mask(
+                    state["_ef_up"], pmask)
         return state
 
     # ------------------------------------------------ batched engine
@@ -414,12 +600,21 @@ class FLServer:
         scfg = self.scfg
         cids = [int(c) for c in sampled]
         C = len(cids)
+        hetero = self.tier_of is not None
+        tc = self._tier_state(down_dec) if hetero else None
+        tier_idx = (np.array([self.tier_of[c] for c in cids], np.int32)
+                    if hetero else None)
 
         full, states = [], []
         for cid in cids:
             params = self._client_full_params(cid, down_dec)
+            tier = int(self.tier_of[cid]) if hetero else -1
+            if hetero:
+                params = param_lib.apply_rank_mask(
+                    params, tree_index(tc["full_masks"], tier))
             full.append(params)
-            states.append(self._prep_client_state(cid, params, down_dec))
+            states.append(self._prep_client_state(cid, params, down_dec,
+                                                  tier=tier))
         stacked_params = tree_stack(full)
         stacked_state = tree_stack(states) if states and states[0] else {}
 
@@ -434,7 +629,9 @@ class FLServer:
          new_server_state) = self._engine.run(
             stacked_params, stacked_state, batches, step_mask,
             mask, sizes, lr, self._quant_keys(C),
-            self.server_state, agg_target, down_dec)
+            self.server_state, agg_target, down_dec,
+            tier_idx=tier_idx,
+            tier_masks=tc["payload_masks"] if hetero else None)
 
         arrived = np.nonzero(mask)[0]
         for pos in arrived:
@@ -450,16 +647,16 @@ class FLServer:
             self._apply_aggregated(new_global, agg_target)
 
         losses = np.asarray(last_loss)[arrived]
-        n_arrived = int(mask.sum())
-        up_bytes = (0 if scfg.personalization == "local"
-                    else self.uplink_codec.wire_bytes(down_dec))
-        self.comm_log.log_round(n_arrived * down_bytes, n_arrived * up_bytes)
+        rd, ru = self._round_bytes(sampled, mask, down_bytes, down_dec)
+        self.comm_log.log_round(rd, ru)
 
         return {
             "participants": int(mask.sum()),
             "sampled": len(sampled),
             "mean_loss": float(np.mean(losses)) if len(losses) else float("nan"),
             "comm_gb": self.comm_log.total_gb,
+            "down_bytes": rd,
+            "up_bytes": ru,
             "lr": lr,
         }
 
@@ -480,11 +677,17 @@ class FLServer:
         chunk, n_chunks, pad = chunk_layout(C, scfg.client_chunk)
         cids_pad = cids + cids[:1] * pad   # pad slots reuse client 0's
         # (small) state/resident trees; their batches are zeros below
+        hetero = self.tier_of is not None
+        tc = self._tier_state(down_dec) if hetero else None
+        tier_pad = (np.array([self.tier_of[c] for c in cids_pad], np.int32)
+                    if hetero else None)
 
         states, residents = [], []
         for cid in cids_pad:
             params = self._client_full_params(cid, down_dec)
-            states.append(self._prep_client_state(cid, params, down_dec))
+            states.append(self._prep_client_state(
+                cid, params, down_dec,
+                tier=int(self.tier_of[cid]) if hetero else -1))
             if mode == "pfedpara":
                 residents.append(comm.split_pfedpara(params)[1])
             elif mode == "fedper":
@@ -527,7 +730,11 @@ class FLServer:
             to_chunks(jnp.asarray(mask_pad), n_chunks, chunk),
             to_chunks(jnp.asarray(sizes_pad), n_chunks, chunk),
             to_chunks(self._quant_keys(C + pad), n_chunks, chunk),
-            lr, self.server_state, agg_target, down_dec)
+            lr, self.server_state, agg_target, down_dec,
+            tier_xs=(to_chunks(jnp.asarray(tier_pad), n_chunks, chunk)
+                     if hetero else None),
+            tier_payload_masks=tc["payload_masks"] if hetero else None,
+            tier_full_masks=tc["full_masks"] if hetero else None)
 
         new_state = from_chunks(state_ys) if state_ys else {}
         local = from_chunks(local_ys) if local_ys is not None else None
@@ -544,9 +751,8 @@ class FLServer:
 
         losses = np.asarray(from_chunks(loss_ys))[arrived]
         n_arrived = int(mask.sum())
-        up_bytes = (0 if mode == "local"
-                    else self.uplink_codec.wire_bytes(down_dec))
-        self.comm_log.log_round(n_arrived * down_bytes, n_arrived * up_bytes)
+        rd, ru = self._round_bytes(sampled, mask, down_bytes, down_dec)
+        self.comm_log.log_round(rd, ru)
 
         return {
             "participants": n_arrived,
@@ -555,10 +761,14 @@ class FLServer:
             "client_chunk": chunk,
             "mean_loss": float(np.mean(losses)) if len(losses) else float("nan"),
             "comm_gb": self.comm_log.total_gb,
+            "down_bytes": rd,
+            "up_bytes": ru,
             "lr": lr,
         }
 
     def run(self, rounds: Optional[int] = None, log_every: int = 0) -> List[Dict]:
+        """Run ``rounds`` federated rounds (default:
+        ``ServerConfig.rounds``) and return the full ``history`` list."""
         for r in range(rounds or self.scfg.rounds):
             rec = self.run_round()
             if log_every and (r % log_every == 0):

@@ -60,6 +60,43 @@ def tree_wmean_stacked(stacked: Any, weights: jax.Array) -> Any:
         stacked)
 
 
+def tree_hetero_wmean_stacked(stacked: Any, weights: jax.Array,
+                              col_masks: Any, fallback: Any) -> Any:
+    """Per-element arrival-weighted mean over the client axis with
+    per-client rank masks (heterogeneous-capacity aggregation).
+
+    Args:
+        stacked: client-stacked upload tree, leaves ``(C, ...)``.
+        weights: ``(C,)`` mask·weight vector (dropped clients carry 0).
+        col_masks: per-client broadcastable 0/1 masks (leaves
+            ``(C, 1, r)`` / ``(C, r, r, 1, 1)`` / ``(C, 1, ...)`` — see
+            ``repro.core.parameterization.rank_mask_tree``): a client's
+            columns beyond its tier rank get zero WEIGHT, not zero
+            value.
+        fallback: unstacked payload-structure tree supplying the value
+            for elements no arrived client covers (the current global
+            slice, so uncovered trailing columns simply persist).
+
+    Returns:
+        The element-wise weighted mean ``Σ_c w_c·m_c·x_c / Σ_c w_c·m_c``
+        where covered, ``fallback`` elsewhere; leaf dtypes preserved.
+        With all-ones masks this reduces to :func:`tree_wmean_stacked`
+        to fp32 round-off.
+    """
+    wf = weights.astype(jnp.float32)
+
+    def one(x, m, tgt):
+        w = wf.reshape((-1,) + (1,) * (x.ndim - 1))
+        mf = m.astype(jnp.float32)
+        num = jnp.sum(w * mf * x.astype(jnp.float32), axis=0)
+        den = jnp.sum(w * mf, axis=0)
+        mean = jnp.where(den > 0, num / jnp.maximum(den, 1e-12),
+                         tgt.astype(jnp.float32))
+        return mean.astype(x.dtype)
+
+    return jax.tree.map(one, stacked, col_masks, fallback)
+
+
 def tree_sub(a: Any, b: Any) -> Any:
     return jax.tree.map(lambda x, y: x - y, a, b)
 
@@ -178,6 +215,9 @@ def fedadam(eta_g: float = 0.01, b1: float = 0.9, b2: float = 0.99,
 
 
 def make_strategy(name: str, **kw) -> Strategy:
+    """Build a named strategy: ``fedavg`` | ``fedprox`` (``mu``) |
+    ``scaffold`` | ``feddyn`` (``alpha``) | ``fedadam`` (``eta_g``,
+    ``b1``, ``b2``, ``tau``); ``kw`` forwards to its constructor."""
     return {
         "fedavg": fedavg,
         "fedprox": fedprox,

@@ -44,9 +44,21 @@ state exactly as in the batched engine; the delta reference is a
 constant the mean absorbs, added back by ``Codec.agg_finalize``).
 Aggregation itself is chunk-size invariant: chunking only reassociates
 the fp32 weighted sum.
+
+Heterogeneous rank tiers (``ServerConfig.gamma_tiers``, docs/hetero.md)
+keep the fused kernel's scalar per-client coefficients by running ONE
+accumulator per tier: within a tier every client shares a column mask,
+so the per-column weighting factors out of the contraction and is
+applied once at finalize (num = Σ_t M_t ⊙ acc_t, den = Σ_t M_t·wtot_t,
+uncovered columns fall back to the current global). Round memory gains
+an O(T · model) term, T = number of tiers, and each chunk's wire tiles
+are re-read once per tier (T× the homogeneous kernel's single-pass wire
+traffic — the coefficients differ per tier, the data does not; a
+multi-row-coefficient kernel variant would restore the single read).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Optional, Tuple
 
@@ -54,6 +66,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
+from repro.core.parameterization import apply_rank_mask
 from repro.fl import comm
 from repro.fl.batch_engine import chunk_round_program
 from repro.fl.client import ClientConfig
@@ -119,18 +132,33 @@ class StreamingRound:
     # ------------------------------------------------------- the program
     def _round_program(self, state_xs, resident_xs, batches_xs, step_mask_xs,
                        mask_xs, sizes_xs, quant_keys_xs, lr, server_state,
-                       agg_target, down_payload):
+                       agg_target, down_payload, tier_xs, tier_payload_masks,
+                       tier_full_masks):
         codec = self.uplink_codec
         mode = self.personalization
         mesh, axis = self.mesh, self.mesh_axis
         chunk = step_mask_xs.shape[1]   # actual width (≤ configured)
         two_level = (mesh is not None and axis in mesh.axis_names
                      and chunk % mesh.shape[axis] == 0)
+        hetero = tier_payload_masks is not None
+        n_tiers = (jax.tree.leaves(tier_payload_masks)[0].shape[0]
+                   if hetero else 1)
 
         def chunk_step(carry, xs):
-            acc, wtot = carry
-            state_c, resident_c, batches_c, smask_c, mask_c, sizes_c, keys_c = xs
+            accs, wtots = carry
+            (state_c, resident_c, batches_c, smask_c, mask_c, sizes_c,
+             keys_c, tier_c) = xs
             params_c = self._assemble(resident_c, down_payload, chunk)
+            col_masks = None
+            if hetero:
+                # mask assembled params to each client's tier slice (the
+                # broadcast carries only the leading tier-rank columns)
+                full_m = jax.tree.map(
+                    lambda m: jnp.take(m, tier_c, axis=0), tier_full_masks)
+                params_c = apply_rank_mask(params_c, full_m)
+                col_masks = jax.tree.map(
+                    lambda m: jnp.take(m, tier_c, axis=0),
+                    tier_payload_masks)
             new_p, new_state, upload, local, last_loss, n_steps = \
                 chunk_round_program(
                     params_c, state_c, batches_c, smask_c, keys_c,
@@ -139,31 +167,65 @@ class StreamingRound:
                     strategy_name=self.strategy.name, personalization=mode,
                     fedper_local_keys=self.fedper_local_keys,
                     uplink_codec=codec, lr=lr, mesh=mesh, axis=axis,
-                    encoded_upload=True)
+                    encoded_upload=True, col_masks=col_masks)
             if upload is not None:
                 w = mask_c * sizes_c
-                if two_level:
-                    part = agg_kernels.sharded_tree_dequant_acc(
-                        upload, w, mesh, axis,
-                        use_pallas=self.use_pallas_agg)
-                    acc = jax.tree.map(jnp.add, acc, part)
-                else:
-                    acc = agg_kernels.tree_dequant_acc(
-                        acc, upload, w, use_pallas=self.use_pallas_agg)
-                wtot = wtot + w.sum()
+                # one fused accumulator per tier: within a tier every
+                # client shares the same column mask, so the per-column
+                # weighting factors out of the kernel contraction as
+                # mask_t * (Σ_{c∈t} w_c · deq(wire_c))
+                new_accs, new_wtots = [], []
+                for t in range(n_tiers):
+                    wt = (w * (tier_c == t).astype(w.dtype)) if hetero else w
+                    if two_level:
+                        part = agg_kernels.sharded_tree_dequant_acc(
+                            upload, wt, mesh, axis,
+                            use_pallas=self.use_pallas_agg)
+                        new_accs.append(jax.tree.map(jnp.add, accs[t], part))
+                    else:
+                        new_accs.append(agg_kernels.tree_dequant_acc(
+                            accs[t], upload, wt,
+                            use_pallas=self.use_pallas_agg))
+                    new_wtots.append(wtots[t] + wt.sum())
+                accs, wtots = tuple(new_accs), tuple(new_wtots)
             del new_p  # reassembled from the broadcast next round
-            return (acc, wtot), (new_state, local, last_loss, n_steps)
+            return (accs, wtots), (new_state, local, last_loss, n_steps)
 
-        acc0 = jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.float32),
-                            down_payload)
+        acc0 = tuple(
+            jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.float32),
+                         down_payload) for _ in range(n_tiers))
+        wtot0 = tuple(jnp.zeros((), jnp.float32) for _ in range(n_tiers))
         xs = (state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
-              sizes_xs, quant_keys_xs)
-        (acc, wtot), (state_ys, local_ys, loss_ys, steps_ys) = jax.lax.scan(
-            chunk_step, (acc0, jnp.zeros((), jnp.float32)), xs)
+              sizes_xs, quant_keys_xs, tier_xs)
+        ((accs, wtots),
+         (state_ys, local_ys, loss_ys, steps_ys)) = jax.lax.scan(
+            chunk_step, (acc0, wtot0), xs)
 
         if mode != "local":
-            mean = jax.tree.map(lambda a: a / jnp.maximum(wtot, 1e-12), acc)
-            mean = codec.agg_finalize(mean, ref=down_payload)
+            if hetero:
+                masks_t = [jax.tree.map(lambda m: m[t], tier_payload_masks)
+                           for t in range(n_tiers)]
+                num = functools.reduce(
+                    lambda a, b: jax.tree.map(jnp.add, a, b),
+                    [jax.tree.map(lambda m, a: m * a, masks_t[t], accs[t])
+                     for t in range(n_tiers)])
+                den = functools.reduce(
+                    lambda a, b: jax.tree.map(jnp.add, a, b),
+                    [jax.tree.map(lambda m: m * wtots[t], masks_t[t])
+                     for t in range(n_tiers)])
+                mean = jax.tree.map(
+                    lambda nm, d: nm / jnp.maximum(d, 1e-12), num, den)
+                mean = codec.agg_finalize(mean, ref=down_payload)
+                # columns no arrived client covers keep the global value
+                mean = jax.tree.map(
+                    lambda d, mn, tgt: jnp.where(d > 0, mn,
+                                                 tgt.astype(mn.dtype)),
+                    den, mean, agg_target)
+            else:
+                acc, wtot = accs[0], wtots[0]
+                mean = jax.tree.map(lambda a: a / jnp.maximum(wtot, 1e-12),
+                                    acc)
+                mean = codec.agg_finalize(mean, ref=down_payload)
             new_global, new_server_state = self.strategy.server_update(
                 server_state, agg_target, mean)
         else:
@@ -173,7 +235,14 @@ class StreamingRound:
 
     def run(self, state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
             sizes_xs, quant_keys_xs, lr, server_state, agg_target,
-            down_payload):
+            down_payload, tier_xs=None, tier_payload_masks=None,
+            tier_full_masks=None):
+        """Execute one streaming round. The ``tier_*`` arguments switch
+        on heterogeneous-rank mode: ``tier_xs`` is the chunked
+        ``(n_chunks, chunk)`` int tier index, ``tier_payload_masks`` /
+        ``tier_full_masks`` are ``(T, ...)``-leading rank-mask trees
+        over the payload / full-param structures. All ``None`` (the
+        default) runs the homogeneous single-accumulator program."""
         return self._program(
             state_xs, resident_xs,
             jax.tree.map(jnp.asarray, batches_xs),
@@ -181,7 +250,9 @@ class StreamingRound:
             jnp.asarray(mask_xs, jnp.float32),
             jnp.asarray(sizes_xs, jnp.float32),
             quant_keys_xs, jnp.asarray(lr, jnp.float32),
-            server_state, agg_target, down_payload)
+            server_state, agg_target, down_payload,
+            None if tier_xs is None else jnp.asarray(tier_xs, jnp.int32),
+            tier_payload_masks, tier_full_masks)
 
 
 def chunk_layout(n_clients: int, chunk: int) -> Tuple[int, int, int]:

@@ -29,6 +29,9 @@ def _default_interpret() -> bool:
 
 
 def resolve_kind(kind=None, use_tanh: bool = False) -> str:
+    """Normalize a fused-matmul variant name: ``kind`` wins when given
+    (validated against fedpara | fedpara_tanh | pfedpara), else the
+    legacy ``use_tanh`` flag selects fedpara vs fedpara_tanh."""
     if kind is None:
         return "fedpara_tanh" if use_tanh else "fedpara"
     if kind not in ("fedpara", "fedpara_tanh", "pfedpara"):
@@ -48,7 +51,24 @@ def fedpara_matmul(x, x1, y1, x2, y2, *, kind=None, use_tanh=False,
                    interpret=None, block_b=None, block_m=None, block_n=None,
                    out_dtype=None):
     """y = x @ (f1(X1Y1ᵀ)⊙f2(X2Y2ᵀ)) — fused AND differentiable; W never
-    materialized in HBM on forward or backward."""
+    materialized in HBM on forward or backward.
+
+    Args:
+        x: activations ``(..., B, m)``.
+        x1, x2: row factors ``(..., m, r)``.
+        y1, y2: column factors ``(..., n, r)``.
+        kind: ``fedpara`` (f = identity) | ``fedpara_tanh`` | ``pfedpara``
+            (f2 adds the "+1 switch"); see :func:`resolve_kind`.
+        interpret: force Pallas interpret mode (default: auto — compiled
+            on TPU, interpret elsewhere).
+        block_b/block_m/block_n: tile overrides (default: the shared
+            ``repro.kernels.blocks`` table keyed on (m, n, r)).
+        out_dtype: output dtype (default: x's dtype).
+
+    Returns:
+        ``(..., B, n)``. Leading batch dims (e.g. a client axis) fold
+        into the kernel grid — one launch per layer even under vmap.
+    """
     kind, interpret, bb, bm, bn = _resolve_cfg(
         x1, y1, kind, use_tanh, interpret, block_b, block_m, block_n)
     f = fedpara_grad.differentiable_matmul(

@@ -176,6 +176,8 @@ def train_fl(args):
     mesh = None
     if args.engine in ("batched", "streaming") and len(jax.devices()) > 1:
         mesh = Mesh(np.array(jax.devices()), ("clients",))
+    gamma_tiers = tuple(float(g) for g in args.gamma_tiers.split(",")
+                        if g.strip()) if args.gamma_tiers else ()
     srv = FLServer(loss_fn, params, tr, parts, make_strategy(args.strategy),
                    ClientConfig(lr=args.lr, batch=64, epochs=args.local_epochs),
                    ServerConfig(clients=args.clients, participation=0.16,
@@ -184,7 +186,9 @@ def train_fl(args):
                                 uplink_codec=args.uplink_codec,
                                 downlink_codec=args.downlink_codec,
                                 engine=args.engine,
-                                client_chunk=args.client_chunk),
+                                client_chunk=args.client_chunk,
+                                gamma_tiers=gamma_tiers,
+                                tier_assignment=args.tier_assignment),
                    eval_fn=eval_fn, mesh=mesh)
     hist = srv.run(log_every=1)
     hist[-1]["comm_up_mb"] = srv.comm_log.up_bytes / 1e6
@@ -238,6 +242,18 @@ def main():
     ap.add_argument("--client-chunk", type=int, default=16,
                     help="streaming engine: clients per scan step; round "
                          "memory peaks at O(client_chunk * model)")
+    ap.add_argument("--gamma-tiers", default="",
+                    help="heterogeneous capacity tiers: comma-separated "
+                         "rank gammas, one per device tier (e.g. "
+                         "'0.05,0.1,0.3'); each client trains/uploads "
+                         "only the leading tier-rank factor columns and "
+                         "is charged the sliced wire bytes. Empty = "
+                         "uniform full-rank clients")
+    ap.add_argument("--tier-assignment", default="round_robin",
+                    choices=["round_robin", "random", "size"],
+                    help="client->tier rule for --gamma-tiers: cid mod T, "
+                         "seeded uniform draw, or by local dataset size "
+                         "(more data -> larger-gamma tier)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route every FedPara dense() through the fused "
                          "differentiable Pallas kernels: local training "
