@@ -1,0 +1,283 @@
+"""Heterogeneous-capacity federation: per-client rank tiers.
+
+Contracts under test (see docs/hetero.md):
+  * uniform tiers at the model's own gamma reproduce the homogeneous
+    engines exactly — bitwise arrival masks, fp32-tolerance params,
+    identical wire bytes — across sequential/batched/streaming and
+    non-identity codecs;
+  * heterogeneous runs agree across all three engines on the same
+    round selections;
+  * per-tier uplink wire bytes are strictly lower for lower-gamma
+    tiers (exact shape algebra, both links);
+  * aggregation is per-column arrival-weighted: columns beyond a
+    client's tier contribute zero WEIGHT (not zero value), and columns
+    no arrived client covers keep the current global value;
+  * slice/mask/embed helpers agree: embed(slice(p)) == mask * p.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ParamCfg
+from repro.core import parameterization as P
+from repro.core import rank_policy
+from repro.data import dirichlet_partition, make_image_dataset, train_test_split
+from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+from repro.fl.strategies import tree_hetero_wmean_stacked, tree_wmean_stacked
+from repro.nn import recurrent as rec
+
+ATOL = 1e-4
+N_CLIENTS = 8
+TIERS = (0.0, 0.1, 0.3)
+MODEL_GAMMA = 0.3
+
+_TASK = {}
+
+
+def _get_task():
+    if not _TASK:
+        ds = make_image_dataset(1000, 10, size=16, channels=1, noise=0.3)
+        data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+        tr, te = train_test_split(data)
+        _TASK.update(tr=tr, te=te,
+                     parts=dirichlet_partition(tr["y"], N_CLIENTS, 0.5))
+    return _TASK
+
+
+@pytest.fixture(scope="module")
+def task():
+    return _get_task()
+
+
+def _make(kind="fedpara"):
+    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                        param=ParamCfg(kind=kind, gamma=MODEL_GAMMA,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    return cfg, params, loss_fn
+
+
+def _run(task, engine, tiers, *, strategy="fedavg", personalization="none",
+         rounds=2, chunk=3, participation=0.5, **server_kw):
+    kind = "pfedpara" if personalization == "pfedpara" else "fedpara"
+    cfg, params, loss_fn = _make(kind)
+    srv = FLServer(loss_fn, params, task["tr"], task["parts"],
+                   make_strategy(strategy),
+                   ClientConfig(lr=0.1, batch=16, epochs=1),
+                   ServerConfig(clients=N_CLIENTS, participation=participation,
+                                rounds=rounds, engine=engine,
+                                client_chunk=chunk, gamma_tiers=tiers,
+                                personalization=personalization,
+                                **server_kw))
+    srv.run()
+    return srv
+
+
+def _maxdiff(a, b):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b))
+    return max(leaves) if leaves else 0.0
+
+
+def _assert_parity(ref, got):
+    assert ([r.get("arrived_mask") for r in ref.history]
+            == [r.get("arrived_mask") for r in got.history])
+    assert _maxdiff(ref.global_params, got.global_params) < ATOL
+    assert _maxdiff(ref.server_state, got.server_state) < ATOL
+    for cid in ref.client_states:
+        assert _maxdiff(ref.client_states[cid],
+                        got.client_states.get(cid, {})) < ATOL
+    for rr, rg in zip(ref.history, got.history):
+        assert rr["down_bytes"] == rg["down_bytes"]
+        assert rr["up_bytes"] == rg["up_bytes"]
+
+
+# ------------------------------------------------- helper-level contracts
+
+def test_slice_mask_embed_roundtrip():
+    _, params, _ = _make()
+    for g in (0.0, 0.05, 0.3, 1.0):
+        sliced = P.slice_factor_tree(params, g)
+        masks = P.rank_mask_tree(params, g)
+        emb = P.embed_factor_tree(sliced, params)
+        masked = P.apply_rank_mask(params, masks)
+        assert _maxdiff(emb, masked) == 0.0
+
+
+def test_factor_spec_detection():
+    _, params, _ = _make()
+    spec = P.factor_spec(params["fc1"])
+    assert spec["kind"] == "matrix"
+    assert (spec["m"], spec["n"]) == (256, 64)
+    assert spec["r"] == params["fc1"]["x1"].shape[1]
+    assert P.factor_spec({"w": params["b1"]}) is None
+    assert P.factor_spec(params) is None          # whole model: not a node
+    # pfedpara split halves are still recognized
+    assert P.factor_spec({k: params["fc1"][k] for k in ("x1", "y1")}) is not None
+    assert P.factor_spec({k: params["fc1"][k] for k in ("x2", "y2")}) is not None
+
+
+def test_conv_factor_masks():
+    from repro.core.tensor_fedpara import init_conv_fedpara
+
+    node = init_conv_fedpara(jax.random.PRNGKey(0), 32, 16, 3, 3, gamma=0.5)
+    spec = P.factor_spec(node)
+    assert spec["kind"] == "conv" and spec["k1"] == spec["k2"] == 3
+    r_full = spec["r"]
+    sliced = P.slice_factor_tree(node, 0.0)
+    r_t = sliced["x1"].shape[1]
+    assert r_t <= r_full
+    assert sliced["t1"].shape == (r_t, r_t, 3, 3)
+    emb = P.embed_factor_tree(sliced, node)
+    masked = P.apply_rank_mask(node, P.rank_mask_tree(node, 0.0))
+    assert _maxdiff(emb, masked) == 0.0
+
+
+def test_tier_rank_floor_and_cap():
+    # tiny layer where r_max < r_min: every tier floors at r_min
+    m = n = 4
+    assert rank_policy.matrix_rmax(m, n) < rank_policy.matrix_rmin(m, n)
+    for g in (0.0, 0.5, 1.0):
+        assert rank_policy.matrix_tier_rank(m, n, 2, g) == 2  # capped at r_full
+    # gamma=1 tier never exceeds the materialized rank
+    assert rank_policy.matrix_tier_rank(256, 64, 13, 1.0) == 13
+    # gamma=0 tier floors at r_min even when r_full is larger
+    assert (rank_policy.matrix_tier_rank(256, 64, 13, 0.0)
+            == rank_policy.matrix_rmin(256, 64))
+
+
+def test_tier_assignment_rules():
+    sched = rank_policy.TierSchedule((0.05, 0.1, 0.3), "round_robin")
+    assert list(sched.assign(6)) == [0, 1, 2, 0, 1, 2]
+    rand = rank_policy.TierSchedule((0.05, 0.1, 0.3), "random")
+    a1, a2 = rand.assign(50, seed=1), rand.assign(50, seed=1)
+    assert (a1 == a2).all() and set(a1) <= {0, 1, 2}
+    size = rank_policy.TierSchedule((0.3, 0.05), "size")  # unsorted gammas
+    tiers = size.assign(4, sizes=[10, 100, 20, 200])
+    # largest datasets land on the largest gamma (index 0 here)
+    assert tiers[3] == 0 and tiers[1] == 0 and tiers[0] == 1 and tiers[2] == 1
+    with pytest.raises(ValueError):
+        rank_policy.TierSchedule((), "round_robin")
+    with pytest.raises(ValueError):
+        rank_policy.TierSchedule((0.1,), "nope")
+
+
+def test_hetero_wmean_per_column_semantics():
+    # 3 clients, leaf (2, 4): client tiers cover 2, 3 and 0 columns
+    x = jnp.arange(24, dtype=jnp.float32).reshape(3, 2, 4)
+    col = lambda k: (jnp.arange(4) < k).astype(jnp.float32)[None, :]
+    masks = jnp.stack([col(2), col(3), col(0)])           # (3, 1, 4)
+    w = jnp.array([1.0, 3.0, 5.0])
+    tgt = jnp.full((2, 4), -7.0)
+    out = tree_hetero_wmean_stacked(x, w, masks, tgt)
+    # col 0-1: mean over clients 0, 1; col 2: client 1 only; col 3: nobody
+    expect01 = (1 * x[0, :, :2] + 3 * x[1, :, :2]) / 4.0
+    assert jnp.allclose(out[:, :2], expect01)
+    assert jnp.allclose(out[:, 2], x[1, :, 2])
+    assert jnp.allclose(out[:, 3], tgt[:, 3])             # uncovered: target
+    # all-ones masks reduce to the homogeneous weighted mean
+    ones = jnp.ones((3, 1, 4))
+    assert jnp.allclose(tree_hetero_wmean_stacked(x, w, ones, tgt),
+                        tree_wmean_stacked(x, w), atol=1e-6)
+
+
+# ------------------------------------------------------ engine contracts
+
+@pytest.mark.parametrize("engine", ["sequential", "batched", "streaming"])
+@pytest.mark.parametrize("codec", ["", "int8", "delta|topk0.2|int8"])
+def test_uniform_tier_reproduces_homogeneous(task, engine, codec):
+    base = _run(task, engine, (), uplink_codec=codec)
+    uni = _run(task, engine, (MODEL_GAMMA,), uplink_codec=codec)
+    assert ([r.get("arrived_mask") for r in base.history]
+            == [r.get("arrived_mask") for r in uni.history])
+    assert _maxdiff(base.global_params, uni.global_params) < ATOL
+    assert base.comm_log.up_bytes == uni.comm_log.up_bytes
+    assert base.comm_log.down_bytes == uni.comm_log.down_bytes
+
+
+@pytest.mark.parametrize("codec", ["", "int8", "delta|topk0.2|int8", "fp16"])
+def test_hetero_engine_parity_codecs(task, codec):
+    ref = _run(task, "sequential", TIERS, uplink_codec=codec)
+    for engine in ("batched", "streaming"):
+        got = _run(task, engine, TIERS, uplink_codec=codec)
+        _assert_parity(ref, got)
+
+
+@pytest.mark.parametrize("strategy", ["scaffold", "feddyn"])
+def test_hetero_engine_parity_strategies(task, strategy):
+    ref = _run(task, "sequential", TIERS, strategy=strategy)
+    for engine in ("batched", "streaming"):
+        _assert_parity(ref, _run(task, engine, TIERS, strategy=strategy))
+
+
+@pytest.mark.parametrize("mode", ["pfedpara", "fedper", "local"])
+def test_hetero_engine_parity_personalization(task, mode):
+    ref = _run(task, "sequential", TIERS, personalization=mode)
+    for engine in ("batched", "streaming"):
+        got = _run(task, engine, TIERS, personalization=mode)
+        _assert_parity(ref, got)
+        for cid in ref.local_trees:
+            assert _maxdiff(ref.local_trees[cid],
+                            got.local_trees[cid]) < ATOL
+
+
+def test_tier_bytes_strictly_lower(task):
+    """Exact shape algebra: lower-gamma tiers upload strictly fewer wire
+    bytes, and the hetero run charges strictly less than homogeneous."""
+    srv = _run(task, "batched", TIERS, uplink_codec="int8",
+               downlink_codec="int8")
+    info = srv.tier_bytes()
+    up = [t["up_bytes"] for t in info]
+    down = [t["down_bytes"] for t in info]
+    assert up[0] < up[1] < up[2]
+    assert down[0] < down[1] < down[2]
+    # exact: bytes equal the codec's pricing of the sliced payload
+    probe = srv._download_payload(0)
+    for t, g in enumerate(TIERS):
+        sliced = P.slice_factor_tree(probe, g)
+        assert up[t] == srv.uplink_codec.wire_bytes(sliced)
+    homog = _run(task, "batched", (), uplink_codec="int8",
+                 downlink_codec="int8")
+    assert srv.comm_log.up_bytes < homog.comm_log.up_bytes
+    assert srv.comm_log.down_bytes < homog.comm_log.down_bytes
+
+
+def test_masked_columns_stay_zero_through_training(task):
+    """A low-tier client's factor columns beyond its rank see only zero
+    signals (masked broadcast, masked strategy state) and remain exactly
+    zero through local SGD — the invariant that makes the masked program
+    equal to physically sliced training. Verified on the personalization
+    residents of a ``local``-mode run, which ARE the trained params."""
+    srv = _run(task, "sequential", TIERS, rounds=1, participation=1.0,
+               personalization="local")
+    masks = srv._tier_cache["full_masks"]
+    for cid, trained in srv.local_trees.items():
+        mask = jax.tree.map(lambda m: m[int(srv.tier_of[cid])], masks)
+        leftover = _maxdiff(trained, P.apply_rank_mask(trained, mask))
+        assert leftover == 0.0, (cid, leftover)
+
+
+def test_uncovered_columns_keep_global(task):
+    """With every tier below the model gamma, trailing factor columns
+    are covered by nobody and must keep their current global values."""
+    cfg, params, loss_fn = _make()
+    srv = FLServer(loss_fn, params, task["tr"], task["parts"],
+                   make_strategy("fedavg"),
+                   ClientConfig(lr=0.1, batch=16, epochs=1),
+                   ServerConfig(clients=N_CLIENTS, participation=1.0,
+                                rounds=1, engine="batched",
+                                gamma_tiers=(0.0,)))  # everyone at r_min
+    srv.run()
+    mask = jax.tree.map(lambda m: m[0], srv._tier_cache["payload_masks"])
+    for key in ("fc1", "fc2"):
+        m = np.asarray(mask[key]["x1"])[0]
+        covered = m > 0
+        new = np.asarray(srv.global_params[key]["x1"])
+        old = np.asarray(params[key]["x1"])
+        assert not np.allclose(new[:, covered], old[:, covered])
+        np.testing.assert_array_equal(new[:, ~covered], old[:, ~covered])

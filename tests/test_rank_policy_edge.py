@@ -1,0 +1,101 @@
+"""Edge-case/property coverage for ``repro.core.rank_policy``.
+
+* tiny layers where parameter parity sits below the full-rank point
+  (``r_max < r_min``): the policy degrades to ``r_min`` for every gamma;
+* the ``gamma ∈ {0, 1}`` endpoints hit ``r_min`` / ``max(r_min, r_max)``
+  exactly;
+* ``matrix_rank_for_gamma`` is monotone non-decreasing in gamma;
+* the parameter-parity bound ``2r(m+n) <= mn`` holds at ``r_max``
+  whenever parity is achievable at all;
+* tier clamping: ``tier_rank`` stays inside
+  ``[min(r_min, r_full), r_full]`` for every gamma.
+
+Hypothesis-gated like the other property suites.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rank_policy
+
+DIM = st.integers(min_value=2, max_value=512)
+TINY = st.integers(min_value=2, max_value=7)
+GAMMA = st.floats(min_value=0.0, max_value=1.0,
+                  allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=TINY, n=TINY, g=GAMMA)
+def test_tiny_layers_degrade_to_rmin(m, n, g):
+    """When 2r(m+n) > mn already at the full-rank floor, the policy
+    returns r_min for every gamma instead of an inverted interval."""
+    rmin, rmax = rank_policy.matrix_rmin(m, n), rank_policy.matrix_rmax(m, n)
+    r = rank_policy.matrix_rank_for_gamma(m, n, g)
+    if rmax < rmin:
+        assert r == rmin
+    assert r >= 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=DIM, n=DIM)
+def test_gamma_endpoints(m, n):
+    rmin, rmax = rank_policy.matrix_rmin(m, n), rank_policy.matrix_rmax(m, n)
+    assert rank_policy.matrix_rank_for_gamma(m, n, 0.0) == rmin
+    assert rank_policy.matrix_rank_for_gamma(m, n, 1.0) == max(rmin, rmax)
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=DIM, n=DIM, g1=GAMMA, g2=GAMMA)
+def test_rank_monotone_in_gamma(m, n, g1, g2):
+    lo, hi = sorted((g1, g2))
+    assert (rank_policy.matrix_rank_for_gamma(m, n, lo)
+            <= rank_policy.matrix_rank_for_gamma(m, n, hi))
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=DIM, n=DIM)
+def test_param_parity_bound_at_rmax(m, n):
+    """2r(m+n) <= mn at r_max — parameter parity with the dense layer —
+    whenever ANY rank satisfies parity (i.e. mn >= 2(m+n))."""
+    rmax = rank_policy.matrix_rmax(m, n)
+    if m * n >= 2 * (m + n):
+        assert rank_policy.matrix_param_count(m, n, rmax) <= m * n
+        # and rmax is maximal: one more rank unit breaks parity
+        assert rank_policy.matrix_param_count(m, n, rmax + 1) > m * n
+    else:
+        assert rmax == 1   # clamped floor for degenerate tiny layers
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=DIM, n=DIM, g=GAMMA, r_full=st.integers(1, 64))
+def test_tier_rank_clamped(m, n, g, r_full):
+    rmin = rank_policy.matrix_rmin(m, n)
+    r = rank_policy.matrix_tier_rank(m, n, r_full, g)
+    assert min(rmin, r_full) <= r <= r_full
+    # a tier at gamma=1 saturates the materialized rank whenever the
+    # policy rank reaches it
+    if rank_policy.matrix_rank_for_gamma(m, n, 1.0) >= r_full:
+        assert rank_policy.matrix_tier_rank(m, n, r_full, 1.0) == r_full
+
+
+@settings(max_examples=40, deadline=None)
+@given(o=st.integers(2, 128), i=st.integers(2, 128),
+       k=st.sampled_from([1, 3, 5]), g=GAMMA, r_full=st.integers(1, 32))
+def test_conv_tier_rank_clamped(o, i, k, g, r_full):
+    rmin = rank_policy.conv_rmin(o, i)
+    r = rank_policy.conv_tier_rank(o, i, k, k, r_full, g)
+    assert min(rmin, r_full) <= r <= r_full
+
+
+@settings(max_examples=40, deadline=None)
+@given(o=st.integers(4, 128), i=st.integers(4, 128),
+       k=st.sampled_from([1, 3, 5]))
+def test_conv_rmax_parity(o, i, k):
+    """Prop.-3 parity: 2R(O+I+R·K1K2) <= OIK1K2 at r_max (when
+    achievable), and r_max+1 breaks it."""
+    rmax = rank_policy.conv_rmax(o, i, k, k)
+    dense = o * i * k * k
+    if rank_policy.conv_param_count(o, i, k, k, 1) <= dense:
+        assert rank_policy.conv_param_count(o, i, k, k, rmax) <= dense
+        assert rank_policy.conv_param_count(o, i, k, k, rmax + 1) > dense
