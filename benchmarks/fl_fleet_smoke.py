@@ -1,0 +1,33 @@
+"""Fast fleet smoke: one 10k-client 1%-participation streaming round.
+
+The blocking-CI slice of ``benchmarks.fl_streaming``'s fleet section:
+arena client state + FleetTrace sampling + chunked batch streaming on a
+tiny MLP, two rounds, with a hard host-RSS budget. The full
+10k/100k/1M RSS-flatness sweep lives in ``fl_streaming.fleet_section``
+(non-blocking job / BENCH_streaming.json); this row exists so every PR
+pays the ~15 s to prove a fleet round still completes inside bounded
+host memory.
+
+Run: PYTHONPATH=src python -m benchmarks.fl_fleet_smoke
+  or python -m benchmarks.fl_streaming --fleet-smoke --rounds 2
+"""
+import json
+
+
+def csv_rows():
+    """Rows for benchmarks.run CSV: (name, us_per_call, derived)."""
+    from benchmarks.fl_streaming import fleet_smoke
+
+    row = fleet_smoke(clients=10_000, rounds=2)
+    if not row["ok"]:
+        raise RuntimeError(
+            f"fleet smoke failed: RSS {row['host_rss_mb']:.0f} MB, budget "
+            f"{row['rss_budget_mb']:.0f} MB, cohort {row['cohort']}")
+    return [(f"fl_fleet_smoke_{row['clients']}c", row["round_s"] * 1e6,
+             f"rss_mb={row['host_rss_mb']:.0f}")]
+
+
+if __name__ == "__main__":
+    for name, us, derived in csv_rows():
+        print(json.dumps({"name": name, "us_per_call": us,
+                          "derived": derived}, indent=1))

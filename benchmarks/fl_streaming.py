@@ -21,11 +21,17 @@ task (the paper's regime: model bytes >> one round's minibatches):
    analytic roofline. On CPU hosts the kernel runs in INTERPRET mode
    (grid emulation inflates its measured bytes); the analytic terms are
    the hardware-relevant story: C·L + 8·L vs 9·C·L bytes.
+5. ``fleet``: 10k / 100k / 1M-client fleets at 1% participation on the
+   fleet substrate (arena client state + FleetTrace sampling + chunked
+   batch streaming — docs/fleet.md): measured steady-state round
+   latency and per-size host RSS (``ru_maxrss``, one subprocess per
+   size), with the max/min RSS ratio pinned flat (≤ 1.5x acceptance).
 
 Writes ``BENCH_streaming.json`` (canonical under benchmarks/artifacts/,
 mirrored to the repo root for the perf-trajectory tooling).
 
 Run: PYTHONPATH=src python -m benchmarks.fl_streaming [--clients 256]
+     PYTHONPATH=src python -m benchmarks.fl_streaming --fleet-smoke
 """
 import argparse
 import json
@@ -218,7 +224,134 @@ def kernel_rows(C: int = 256, L: int = 1 << 16) -> dict:
     }
 
 
-def run_bench(clients: int = 256, chunk: int = 16, rounds: int = 3) -> dict:
+def build_fleet_server(clients: int, participation: float = 0.01,
+                       chunk: int = 64, seed: int = 0, rounds: int = 2):
+    """Fleet-scale configuration: the data pool, model and cohort stay
+    fixed while the FLEET size grows — virtual O(1) per-client
+    partition views over a shared pool, a FleetTrace for O(cohort)
+    sampling, the device-resident arena for client state, and chunked
+    batch streaming so no O(cohort·data) host stack ever exists."""
+    import jax
+
+    from repro.configs.base import ParamCfg
+    from repro.data import VirtualPartitions, make_image_dataset, \
+        train_test_split
+    from repro.fl import ClientConfig, FLServer, FleetTrace, ServerConfig, \
+        make_strategy
+    from repro.nn import recurrent as rec
+
+    ds = make_image_dataset(4096, 10, size=8, channels=1, noise=0.3,
+                            seed=seed)
+    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+    tr, _ = train_test_split(data)
+    cfg = rec.MLPConfig(in_dim=64, hidden=64, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=0.5,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(seed), cfg)
+    parts = VirtualPartitions(pool_size=len(tr["y"]), clients=clients,
+                              samples_per_client=32, seed=seed)
+    trace = FleetTrace(clients=clients, dropout=0.05,
+                       diurnal_amplitude=0.3, seed=seed)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    return FLServer(loss_fn, params, tr, parts, make_strategy("fedavg"),
+                    ClientConfig(lr=0.1, batch=16, epochs=1),
+                    ServerConfig(clients=clients, participation=participation,
+                                 rounds=rounds, engine="streaming",
+                                 client_chunk=chunk, uplink_codec="int8",
+                                 state_store="arena", data_stream="chunked",
+                                 trace=trace, seed=seed))
+
+
+def _host_rss_peak_kb() -> float:
+    """This process's host-RSS high-water mark, in KB. Prefers
+    ``/proc/self/status`` VmHWM, which resets on exec — ``ru_maxrss``
+    survives ``fork``+exec, so a subprocess forked from a large parent
+    would report the PARENT's footprint. Falls back to ``ru_maxrss``
+    off Linux."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return float(line.split()[1])
+    except OSError:
+        pass
+    import resource
+
+    return float(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss)
+
+
+def fleet_one(clients: int, rounds: int = 2, participation: float = 0.01,
+              chunk: int = 64) -> dict:
+    """One fleet config measured IN THIS PROCESS: run ``rounds`` real
+    streaming rounds and report median round latency plus the process
+    host-RSS high-water mark (monotonic per process, which is why the
+    parent launches one subprocess per fleet size)."""
+    srv = build_fleet_server(clients, participation, chunk, rounds=rounds)
+    times, participants = [], 0
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        rec = srv.run_round()
+        times.append(time.perf_counter() - t0)
+        participants = rec["participants"]
+    times.sort()
+    rss_kb = _host_rss_peak_kb()
+    return {
+        "clients": clients,
+        "participation": participation,
+        "cohort": len(rec["sampled"]),
+        "participants": participants,
+        "client_chunk": chunk,
+        "rounds": rounds,
+        "round_s": times[(len(times) - 1) // 2],   # steady-state median
+        "first_round_s": max(times),               # includes compile
+        "host_rss_mb": rss_kb / 1024.0,
+    }
+
+
+def fleet_section(sizes=(10_000, 100_000, 1_000_000), rounds: int = 2,
+                  participation: float = 0.01) -> dict:
+    """Acceptance: host RSS stays flat (within 1.5x) from 10k to 1M
+    clients at 1% participation. Each size runs in a fresh subprocess
+    so ``ru_maxrss`` measures that fleet alone."""
+    import os
+    import subprocess
+    import sys
+
+    rows = []
+    for n in sizes:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.fl_streaming",
+             "--fleet-one", str(n), "--rounds", str(rounds),
+             "--participation", str(participation)],
+            capture_output=True, text=True, check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            env={**os.environ, "PYTHONPATH": "src"})
+        rows.append(json.loads(proc.stdout.strip().splitlines()[-1]))
+    rss = [r["host_rss_mb"] for r in rows]
+    return {
+        "participation": participation,
+        "rounds": rounds,
+        "rows": rows,
+        "rss_max_over_min": max(rss) / min(rss),
+        "rss_flat_within_1p5x": max(rss) / min(rss) <= 1.5,
+    }
+
+
+def fleet_smoke(clients: int = 10_000, rounds: int = 2,
+                rss_budget_mb: float = 4096.0) -> dict:
+    """Fast blocking-CI gate: a 10k-client 1%-participation fleet round
+    must complete and the process must stay under the host-RSS budget."""
+    row = fleet_one(clients, rounds=rounds)
+    row["rss_budget_mb"] = rss_budget_mb
+    row["ok"] = row["host_rss_mb"] < rss_budget_mb and row["cohort"] > 0
+    return row
+
+
+def run_bench(clients: int = 256, chunk: int = 16, rounds: int = 3,
+              fleet_sizes=(10_000, 100_000, 1_000_000)) -> dict:
     rows = [
         engine_row("sequential", min(clients, 64), chunk, rounds=1),
         engine_row("batched", clients, chunk, rounds=rounds),
@@ -233,6 +366,7 @@ def run_bench(clients: int = 256, chunk: int = 16, rounds: int = 3) -> dict:
         "engines": rows,
         "scale_1024": scale_1024(chunk),
         "kernel": kernel_rows(),
+        "fleet": fleet_section(fleet_sizes),
     }
     if "peak_bytes" in bat and "peak_bytes" in stream:
         art["peak_reduction_at_%d" % clients] = (
@@ -260,6 +394,11 @@ def csv_rows(clients: int = 256, chunk: int = 16):
     s = art["scale_1024"]
     rows.append(("fl_streaming_1024c", s["streaming_round_s"] * 1e6,
                  f"batched_peak_est_x={s.get('batched_over_streaming_peak', 0):.1f}"))
+    f = art["fleet"]
+    biggest = f["rows"][-1]
+    rows.append((f"fl_fleet_{biggest['clients']}c",
+                 biggest["round_s"] * 1e6,
+                 f"rss_max_over_min={f['rss_max_over_min']:.2f}x"))
     return rows
 
 
@@ -268,7 +407,29 @@ def main():
     ap.add_argument("--clients", type=int, default=256)
     ap.add_argument("--chunk", type=int, default=16)
     ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--participation", type=float, default=0.01,
+                    help="fleet modes: cohort fraction of the fleet")
+    ap.add_argument("--fleet-one", type=int, default=0, metavar="N",
+                    help="measure ONE N-client fleet config in this "
+                         "process and print its JSON row (used by the "
+                         "parent, one subprocess per size so ru_maxrss "
+                         "is per-config)")
+    ap.add_argument("--fleet-smoke", action="store_true",
+                    help="fast CI gate: 10k-client fleet round under a "
+                         "host-RSS budget; exit 1 on failure")
     args = ap.parse_args()
+    if args.fleet_one:
+        print(json.dumps(fleet_one(args.fleet_one, rounds=args.rounds,
+                                   participation=args.participation)))
+        return
+    if args.fleet_smoke:
+        row = fleet_smoke(rounds=args.rounds)
+        print(json.dumps(row, indent=1))
+        if not row["ok"]:
+            raise SystemExit("fleet smoke failed: RSS "
+                             f"{row['host_rss_mb']:.0f} MB over budget "
+                             f"{row['rss_budget_mb']:.0f} MB")
+        return
     art = run_bench(args.clients, args.chunk, args.rounds)
     print(json.dumps(art, indent=1))
 

@@ -1,7 +1,24 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 import argparse
+import importlib
 import sys
 import traceback
+
+# benchmark-module registry: (module under benchmarks/, --only match
+# terms). A group runs when no --only filter is given or any term
+# contains/equals the filter substring.
+MODULES = (
+    ("fl_round", ("fl_round_sequential", "fl_round_batched")),
+    ("comm_codecs", ("comm", "comm_codecs")),
+    ("fedpara_grad", ("grad", "kernel")),
+    ("fl_streaming", ("stream",)),
+    ("fl_hetero", ("hetero",)),
+    ("fl_fleet_smoke", ("fleet",)),
+)
+
+
+def _selected(only, terms):
+    return only is None or any(only in t for t in terms)
 
 
 def main() -> None:
@@ -15,66 +32,26 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+
+    def emit(group, rows_fn):
+        nonlocal failures
+        try:
+            for name, us, derived in rows_fn():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{group},0,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
     for fn in tables.ALL_TABLES:
         if args.only and args.only not in fn.__name__:
             continue
-        try:
-            for name, us, derived in fn():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-        except Exception as e:
-            failures += 1
-            print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
-    if not args.only or args.only in "fl_round_sequential fl_round_batched":
-        try:
-            from benchmarks import fl_round
-
-            for name, us, derived in fl_round.csv_rows():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-        except Exception as e:
-            failures += 1
-            print(f"fl_round,0,ERROR:{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
-    if not args.only or "comm" in args.only or args.only in "comm_codecs":
-        try:
-            from benchmarks import comm_codecs
-
-            for name, us, derived in comm_codecs.csv_rows():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-        except Exception as e:
-            failures += 1
-            print(f"comm_codecs,0,ERROR:{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
-    if not args.only or "grad" in args.only or "kernel" in args.only:
-        try:
-            from benchmarks import fedpara_grad
-
-            for name, us, derived in fedpara_grad.csv_rows():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-        except Exception as e:
-            failures += 1
-            print(f"fedpara_grad,0,ERROR:{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
-    if not args.only or "stream" in args.only:
-        try:
-            from benchmarks import fl_streaming
-
-            for name, us, derived in fl_streaming.csv_rows():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-        except Exception as e:
-            failures += 1
-            print(f"fl_streaming,0,ERROR:{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
-    if not args.only or "hetero" in args.only:
-        try:
-            from benchmarks import fl_hetero
-
-            for name, us, derived in fl_hetero.csv_rows():
-                print(f"{name},{us:.1f},{derived}", flush=True)
-        except Exception as e:
-            failures += 1
-            print(f"fl_hetero,0,ERROR:{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
+        emit(fn.__name__, fn)
+    for modname, terms in MODULES:
+        if not _selected(args.only, terms):
+            continue
+        emit(modname,
+             importlib.import_module(f"benchmarks.{modname}").csv_rows)
     if not args.skip_roofline:
         for name, us, derived in roofline.csv_rows():
             print(f"{name},{us:.1f},{derived}", flush=True)

@@ -162,6 +162,15 @@ class FedCfg:
                                    # () = uniform full-rank clients
     tier_assignment: str = "round_robin"  # client->tier rule:
                                    # round_robin | random | size
+    state_store: str = "dict"      # per-client state residency: dict
+                                   # (host, O(participants) Python
+                                   # objects) | arena (device-resident
+                                   # stacked rows, one gather/scatter
+                                   # per round; see docs/fleet.md)
+    data_stream: str = "eager"     # cohort batch materialization:
+                                   # eager (full (C,S,B,...) host
+                                   # stack) | chunked (streaming only:
+                                   # per-scan-chunk host callback)
 
 
 @dataclass(frozen=True)

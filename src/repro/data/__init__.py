@@ -1,6 +1,16 @@
 from repro.data import loader, partition, synthetic
-from repro.data.loader import ShardedBatcher, client_epochs, stack_client_epochs
-from repro.data.partition import dirichlet_partition, iid_partition, two_class_partition
+from repro.data.loader import (
+    ChunkBatchSource,
+    ShardedBatcher,
+    client_epochs,
+    stack_client_epochs,
+)
+from repro.data.partition import (
+    VirtualPartitions,
+    dirichlet_partition,
+    iid_partition,
+    two_class_partition,
+)
 from repro.data.synthetic import (
     make_char_corpus,
     make_image_dataset,
@@ -9,8 +19,10 @@ from repro.data.synthetic import (
 )
 
 __all__ = [
-    "loader", "partition", "synthetic", "ShardedBatcher", "client_epochs", "stack_client_epochs",
-    "dirichlet_partition", "iid_partition", "two_class_partition",
+    "loader", "partition", "synthetic", "ChunkBatchSource", "ShardedBatcher",
+    "client_epochs", "stack_client_epochs",
+    "VirtualPartitions", "dirichlet_partition", "iid_partition",
+    "two_class_partition",
     "make_char_corpus", "make_image_dataset", "make_token_lm_dataset",
     "train_test_split",
 ]

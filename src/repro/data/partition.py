@@ -45,6 +45,57 @@ def two_class_partition(labels: np.ndarray, clients: int, seed: int = 0) -> List
     ]
 
 
+class VirtualPartitions:
+    """Fleet-scale partitions without a per-client index table.
+
+    Real partition lists store one index array per client — O(fleet)
+    host memory before a single round runs, which caps dict-based
+    simulations at maybe 10^5 clients. A :class:`VirtualPartitions`
+    instead views every client as ``samples_per_client`` indices into a
+    shared sample pool, computed on demand from a counter-based hash of
+    the client id: ``self[cid]`` costs O(samples_per_client) and NOTHING
+    is stored per client, so a 1M-client fleet costs the same host
+    memory as a 10-client one.
+
+    Deterministic: the same ``(seed, cid)`` always yields the same
+    index view, so engines that re-fetch a client's partition across
+    rounds (every engine) see a stable local dataset. Supports
+    ``len()`` and integer indexing — the two operations the FL server
+    and loaders use on partition lists.
+    """
+
+    def __init__(self, pool_size: int, clients: int,
+                 samples_per_client: int, seed: int = 0):
+        if samples_per_client > pool_size:
+            raise ValueError("samples_per_client exceeds the sample pool")
+        self.pool_size = int(pool_size)
+        self.clients = int(clients)
+        self.samples_per_client = int(samples_per_client)
+        self.seed = int(seed)
+
+    def __len__(self) -> int:
+        return self.clients
+
+    def __getitem__(self, cid: int) -> np.ndarray:
+        if isinstance(cid, (list, np.ndarray, slice)):
+            raise TypeError("VirtualPartitions supports scalar indexing only")
+        cid = int(cid)
+        if cid < 0:
+            cid += self.clients
+        if not 0 <= cid < self.clients:
+            raise IndexError(f"client {cid} out of range [0, {self.clients})")
+        rng = np.random.Generator(np.random.PCG64(
+            np.random.SeedSequence((self.seed, 0xFA571D, cid))))
+        return np.sort(rng.choice(self.pool_size, self.samples_per_client,
+                                  replace=False))
+
+    def sizes(self, cids) -> np.ndarray:
+        """Per-client sample counts for a cohort — constant by
+        construction, but kept as a method so callers never special-case
+        virtual vs list partitions."""
+        return np.full(len(cids), self.samples_per_client, np.int64)
+
+
 def partition_stats(labels: np.ndarray, parts: List[np.ndarray]) -> Dict:
     classes = int(labels.max()) + 1
     hist = np.stack([np.bincount(labels[p], minlength=classes) for p in parts])

@@ -1,11 +1,15 @@
 """Federated learning: server/simulator, client, strategies, wire
-codecs, byte accounting, and the batched/streaming round engines.
+codecs, byte accounting, the batched/streaming round engines, and the
+fleet-scale substrate (device-resident client-state arena + availability
+traces).
 
 Start at :class:`FLServer` + :class:`ServerConfig`; see docs/engines.md
-for the engine decision table, docs/codecs.md for the codec grammar and
-docs/hetero.md for heterogeneous-capacity rank tiers.
+for the engine decision table, docs/codecs.md for the codec grammar,
+docs/hetero.md for heterogeneous-capacity rank tiers and docs/fleet.md
+for the arena / trace / streamed-data fleet substrate.
 """
 from repro.fl import (
+    arena,
     batch_engine,
     client,
     codecs,
@@ -13,9 +17,12 @@ from repro.fl import (
     server,
     strategies,
     stream_engine,
+    trace,
 )
+from repro.fl.arena import ClientArena
 from repro.fl.batch_engine import (
     ClientBatch,
+    assemble_client_params,
     batched_local_update,
     batched_personalized_eval,
     chunk_round_program,
@@ -29,16 +36,20 @@ from repro.fl.strategies import (
     Strategy,
     make_strategy,
     tree_hetero_wmean_stacked,
+    tree_take,
     tree_wmean_stacked,
 )
 from repro.fl.stream_engine import StreamingRound
+from repro.fl.trace import FleetTrace, spawn_seeds
 
 __all__ = [
-    "batch_engine", "client", "codecs", "comm", "server", "strategies",
-    "stream_engine", "ClientBatch", "batched_local_update",
+    "arena", "batch_engine", "client", "codecs", "comm", "server",
+    "strategies", "stream_engine", "trace", "ClientArena", "ClientBatch",
+    "assemble_client_params", "batched_local_update",
     "batched_personalized_eval", "chunk_round_program", "select_upload",
     "ClientConfig", "init_client_state", "local_update", "Codec",
     "make_codec", "CommLog", "merge_pfedpara", "split_pfedpara", "FLServer",
-    "ServerConfig", "Strategy", "make_strategy", "StreamingRound",
-    "tree_hetero_wmean_stacked", "tree_wmean_stacked",
+    "ServerConfig", "Strategy", "make_strategy", "FleetTrace", "spawn_seeds",
+    "StreamingRound", "tree_hetero_wmean_stacked", "tree_take",
+    "tree_wmean_stacked",
 ]

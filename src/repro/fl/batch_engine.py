@@ -156,6 +156,31 @@ def batched_personalized_eval(stacked_params: Any, eval_data: Dict,
     return jax.vmap(metric_fn)(stacked_params, eval_data)
 
 
+def assemble_client_params(down_payload: Any, residents: Any, n: int,
+                           personalization: str,
+                           fedper_local_keys: Tuple[str, ...] = ()):
+    """Stacked ``(n, model)`` client params from the round's single
+    decoded broadcast plus client-stacked personalization residents —
+    the inverse of :func:`select_upload`, vectorized over the client
+    axis. Shared by the streaming scan step (chunk assembly) and the
+    arena server path (cohort assembly from gathered resident rows);
+    with ``personalization="none"`` it is a pure broadcast and the
+    residents argument is ignored."""
+    from repro.fl.strategies import tree_broadcast
+
+    if personalization == "none":
+        return tree_broadcast(down_payload, n)
+    if personalization == "pfedpara":
+        return comm.merge_pfedpara(tree_broadcast(down_payload, n),
+                                   residents)
+    if personalization == "fedper":
+        merged = dict(tree_broadcast(down_payload, n))
+        merged.update(residents)
+        return merged
+    # "local": residents are the full per-client params
+    return residents
+
+
 def select_upload(stacked_params: Any, personalization: str,
                   fedper_local_keys: Tuple[str, ...] = ()):
     """(upload, local) stacked trees per personalization mode."""

@@ -180,8 +180,23 @@ class Codec:
         return any(s.kind == "delta" for s in self.stages)
 
     def ef_init(self, payload: Any) -> Optional[Any]:
-        """Zero error-feedback accumulator (payload structure), or None."""
+        """Zero error-feedback accumulator (payload structure), or None.
+
+        The accumulator is PER-CLIENT residual state: dict engines keep
+        it under ``client_states[cid]["_ef_up"]``, the arena stores it
+        as one stacked ``(clients + 1, ..)`` row block (a fleet's whole
+        EF memory is ``clients * ef_nbytes(payload)`` on device)."""
         return tree_zeros(payload) if self.has_ef else None
+
+    def ef_nbytes(self, payload: Any) -> int:
+        """Bytes one client's error-feedback accumulator occupies (0
+        when the codec keeps none) — the per-row cost the arena pays to
+        make EF fleet-resident; see docs/fleet.md."""
+        if not self.has_ef:
+            return 0
+        return int(sum(np.prod(jnp.shape(x) or (1,))
+                       * np.dtype(jnp.asarray(x).dtype).itemsize
+                       for x in jax.tree.leaves(payload)))
 
     # -------------------------------------------------------------- encode
     def encode(self, payload: Any, *, ref: Any = None, ef: Any = None,

@@ -95,12 +95,14 @@ from repro.fl import codecs, comm
 from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.strategies import (
     Strategy,
+    tree_broadcast,
     tree_hetero_wmean_stacked,
     tree_index,
     tree_mean,
     tree_stack,
     tree_zeros,
 )
+from repro.fl.trace import spawn_seeds
 
 FEDPER_LOCAL_KEYS = ("head", "fc2", "b2")   # model-specific last layers
 
@@ -128,8 +130,10 @@ class ServerConfig:
     straggler/fault model (``oversample``, ``deadline_quantile``,
     ``straggler_sigma``, ``bandwidth_mbps``, ``dropout_prob``,
     ``staleness_mix``); execution engine (``engine``, ``client_chunk``
-    — see docs/engines.md); heterogeneous capacity tiers
-    (``gamma_tiers``, ``tier_assignment`` — see docs/hetero.md).
+    — see docs/engines.md); fleet substrate (``state_store``,
+    ``data_stream``, ``trace`` — see docs/fleet.md); heterogeneous
+    capacity tiers (``gamma_tiers``, ``tier_assignment`` — see
+    docs/hetero.md).
     """
 
     clients: int = 100
@@ -149,6 +153,17 @@ class ServerConfig:
     staleness_mix: float = 0.0         # >0: async staleness-weighted mixing
     engine: str = "sequential"         # sequential | batched | streaming
     client_chunk: int = 16             # streaming: clients per scan step
+    state_store: str = "dict"          # dict | arena: host dicts (the
+                                       # reference) or the device-resident
+                                       # index-addressed fleet arena
+                                       # (repro.fl.arena, docs/fleet.md)
+    data_stream: str = "eager"         # eager | chunked: cohort batch
+                                       # stack up front, or lazy per-chunk
+                                       # host-callback materialization
+                                       # (streaming engine only)
+    trace: Optional[Any] = None        # repro.fl.trace.FleetTrace: O(cohort)
+                                       # trace-driven sampling/availability;
+                                       # None = legacy O(fleet) RNG path
     gamma_tiers: tuple = ()            # heterogeneous capacity tiers: one
                                        # rank-gamma per tier; () = uniform
                                        # full-rank clients (today's path)
@@ -220,14 +235,45 @@ class FLServer:
         self.tiers: Optional[rank_policy.TierSchedule] = None
         self.tier_of: Optional[np.ndarray] = None
         self._tier_cache: Optional[Dict] = None
+        trace = server_cfg.trace
+        if trace is not None and int(trace.clients) != int(server_cfg.clients):
+            raise ValueError(
+                f"trace.clients={trace.clients} != "
+                f"ServerConfig.clients={server_cfg.clients}")
         if server_cfg.gamma_tiers:
             self.tiers = rank_policy.TierSchedule(
                 tuple(float(g) for g in server_cfg.gamma_tiers),
                 server_cfg.tier_assignment)
-            self.tier_of = self.tiers.assign(
-                server_cfg.clients,
-                sizes=[len(p) for p in partitions],
-                seed=server_cfg.seed)
+            if trace is not None and getattr(trace, "tier_mix", ()):
+                # trace-hashed tiers: no O(fleet) assignment table
+                if len(trace.tier_mix) != len(server_cfg.gamma_tiers):
+                    raise ValueError(
+                        "trace.tier_mix must pair one proportion with "
+                        "each gamma tier")
+            else:
+                self.tier_of = self.tiers.assign(
+                    server_cfg.clients,
+                    sizes=[len(p) for p in partitions],
+                    seed=server_cfg.seed)
+        if server_cfg.state_store not in ("dict", "arena"):
+            raise ValueError(
+                f"unknown state_store {server_cfg.state_store!r} "
+                "(expected dict | arena)")
+        if (server_cfg.state_store == "arena"
+                and server_cfg.engine == "sequential"):
+            raise ValueError(
+                "state_store='arena' requires the batched or streaming "
+                "engine (the sequential reference keeps host dicts)")
+        if server_cfg.data_stream not in ("eager", "chunked"):
+            raise ValueError(
+                f"unknown data_stream {server_cfg.data_stream!r} "
+                "(expected eager | chunked)")
+        if (server_cfg.data_stream == "chunked"
+                and server_cfg.engine != "streaming"):
+            raise ValueError(
+                "data_stream='chunked' requires the streaming engine")
+        self.arena = None   # created lazily at the first arena-mode round
+        self._mesh, self._mesh_axis = mesh, mesh_axis
         self._engine = None
         self._stream = None
         if server_cfg.engine == "batched":
@@ -273,7 +319,7 @@ class FLServer:
         mode = self.scfg.personalization
         if mode == "none":
             return download
-        resident = self.local_trees.get(cid)
+        resident = self.resident_of(cid)
         if mode == "pfedpara":
             if resident is None:
                 resident = comm.split_pfedpara(self.global_params)[1]
@@ -288,6 +334,37 @@ class FLServer:
         if mode == "local":
             return resident if resident is not None else download
         return download
+
+    def resident_of(self, cid: int) -> Any:
+        """One client's personalization resident, wherever it lives:
+        the arena row (``state_store='arena'``) or the ``local_trees``
+        dict (``None`` if the client never participated — callers fall
+        back to the global init, which is exactly what an arena row
+        still holds before its first scatter)."""
+        if self.arena is not None and self.arena.residents is not None:
+            return self.arena.client_resident(cid)
+        return self.local_trees.get(cid)
+
+    def client_state_of(self, cid: int) -> Dict:
+        """One client's strategy/EF state, wherever it lives: the arena
+        row (``state_store='arena'``) or the ``client_states`` dict
+        (``{}`` if the client never participated)."""
+        if self.arena is not None:
+            return self.arena.client_state(cid)
+        return self.client_states.get(cid, {})
+
+    def participation_counts(self) -> np.ndarray:
+        """(clients,) per-client arrival counts. Arena mode reads the
+        device-resident counter row (one masked ``.at[].add`` per
+        round); dict mode tallies the recorded per-round cohorts."""
+        if self.arena is not None:
+            return self.arena.participation_counts()
+        counts = np.zeros(self.scfg.clients, np.int64)
+        for r in self.history:
+            for cid, hit in zip(r.get("sampled", ()),
+                                r.get("arrived_mask", ())):
+                counts[cid] += int(hit)
+        return counts
 
     def _split_upload(self, cid: int, trained: Any):
         mode = self.scfg.personalization
@@ -367,11 +444,27 @@ class FLServer:
             raise ValueError("tier_bytes() is available after the first "
                              "round (run_round() fixes the payload shapes)")
         tc = self._tier_cache
+        if self.tier_of is not None:
+            counts = [int((self.tier_of == t).sum())
+                      for t in range(len(self.tiers.gammas))]
+        else:   # trace-hashed tiers: expected counts, fleet never walked
+            counts = [int(c) for c in self.scfg.trace.tier_counts()]
         return [{"gamma": g,
                  "up_bytes": tc["up_bytes"][t],
                  "down_bytes": tc["down_bytes"][t],
-                 "clients": int((self.tier_of == t).sum())}
+                 "clients": counts[t]}
                 for t, g in enumerate(self.tiers.gammas)]
+
+    def _cohort_tiers(self, cids) -> Optional[np.ndarray]:
+        """Tier index per cohort client: the assignment table when one
+        exists, otherwise the trace's O(cohort) id hash. ``None`` in
+        homogeneous mode."""
+        if self.tiers is None:
+            return None
+        cids = np.asarray(cids, np.int64)
+        if self.tier_of is not None:
+            return self.tier_of[cids].astype(np.int32)
+        return self.scfg.trace.tiers_of(cids)
 
     def _round_bytes(self, sampled, mask, down_bytes: int, down_dec: Any
                      ) -> tuple:
@@ -381,14 +474,13 @@ class FLServer:
         payload bytes on both links."""
         n_arrived = int(mask.sum())
         local = self.scfg.personalization == "local"
-        if self.tier_of is None:
+        if self.tiers is None:
             up = 0 if local else self.uplink_codec.wire_bytes(down_dec)
             return n_arrived * down_bytes, n_arrived * up
         tc = self._tier_cache
-        tiers = [int(self.tier_of[int(c)])
-                 for c, m in zip(sampled, mask) if m]
-        down = sum(tc["down_bytes"][t] for t in tiers)
-        up = 0 if local else sum(tc["up_bytes"][t] for t in tiers)
+        tiers = self._cohort_tiers(np.asarray(sampled)[mask.astype(bool)])
+        down = sum(tc["down_bytes"][int(t)] for t in tiers)
+        up = 0 if local else sum(tc["up_bytes"][int(t)] for t in tiers)
         return down, up
 
     # ------------------------------------------------------------- round
@@ -402,39 +494,63 @@ class FLServer:
         sample clients, simulate stragglers/dropout, derive the boolean
         arrived-mask over the sampled order (truncated to the first
         ``n_target`` ARRIVALS — earliest simulated latency first), and
-        draw every sampled client's data seed. The mask — not a
+        derive every sampled client's data seed. The mask — not a
         filtered list — is the round's participation record, so the two
         engines agree bitwise. Download latency is priced at the active
-        downlink codec's wire bytes, not the raw fp32 tree."""
+        downlink codec's wire bytes, not the raw fp32 tree.
+
+        With a :class:`repro.fl.trace.FleetTrace` configured, sampling,
+        availability and latency come from the trace's per-round
+        generator at O(cohort) cost — ``dropout_prob`` defers to the
+        trace's own dropout/diurnal model. Per-client data seeds are
+        ``SeedSequence.spawn``-derived 64-bit values on BOTH paths
+        (collision-free at fleet scale, unlike the legacy 2^30 draws).
+        """
         scfg = self.scfg
+        trace = scfg.trace
         n_target = max(1, int(round(scfg.participation * scfg.clients)))
         n_sample = max(n_target, int(round(n_target * (1 + scfg.oversample))))
-        sampled = self.rng.choice(scfg.clients, size=min(n_sample, scfg.clients),
-                                  replace=False)
+        n_sample = min(n_sample, scfg.clients)
+        if trace is not None:
+            trng = trace.round_rng(self.round_idx)
+            sampled = trace.sample_cohort(trng, n_sample)
+        else:
+            sampled = self.rng.choice(scfg.clients, size=n_sample,
+                                      replace=False)
         lr = self.ccfg.lr * (scfg.lr_decay ** self.round_idx)
 
         probe_payload = self._download_payload(int(sampled[0]))
-        if self.tier_of is not None:
+        if self.tiers is not None:
             # per-tier sliced broadcast: each sampled client's download
             # latency is priced at ITS tier's wire bytes
             tc = self._tier_state(probe_payload)
-            payload_bytes = np.array(
-                [tc["down_bytes"][int(self.tier_of[int(c)])]
-                 for c in sampled])
+            payload_bytes = np.asarray(tc["down_bytes"])[
+                self._cohort_tiers(sampled)]
         else:
             payload_bytes = self.downlink_codec.wire_bytes(probe_payload)
-        lat = self._simulate_latency(payload_bytes, len(sampled))
-        alive = self.rng.rand(len(sampled)) >= scfg.dropout_prob
+        if trace is not None:
+            lat = trace.latency(trng, payload_bytes, len(sampled),
+                                scfg.straggler_sigma, scfg.bandwidth_mbps)
+            alive = (trng.random(len(sampled))
+                     < trace.availability(sampled, self.round_idx))
+        else:
+            lat = self._simulate_latency(payload_bytes, len(sampled))
+            alive = self.rng.rand(len(sampled)) >= scfg.dropout_prob
         deadline = (np.quantile(lat, scfg.deadline_quantile)
                     if scfg.oversample else np.inf)
         ok = alive & (lat <= deadline)
         mask = arrival_mask(ok, lat, n_target)
-        seeds = self.rng.randint(1 << 30, size=len(sampled))
+        seeds = spawn_seeds(scfg.seed, self.round_idx, len(sampled))
         return sampled, mask, seeds, lr, probe_payload
 
     def _quant_keys(self, n: int) -> jax.Array:
+        """Per-client quantization keys: ``fold_in(key(round), i)`` for
+        every cohort position — vectorized with one ``vmap`` dispatch
+        (value-identical to the historical per-client fold_in loop,
+        which cost O(cohort) dispatches per round)."""
         base = jax.random.PRNGKey(self.round_idx)
-        return jnp.stack([jax.random.fold_in(base, i) for i in range(n)])
+        return jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.arange(n, dtype=jnp.uint32))
 
     def _encode_downlink(self, payload: Any):
         """One broadcast encode/decode per round (the downlink payload
@@ -480,6 +596,7 @@ class FLServer:
         self.round_idx += 1
         rec["round"] = self.round_idx
         rec["arrived_mask"] = mask.astype(int).tolist()
+        rec["sampled"] = [int(c) for c in sampled]
         if self.eval_fn is not None:
             rec["eval"] = self.eval_fn(self.global_params)
         self.history.append(rec)
@@ -498,13 +615,14 @@ class FLServer:
         scfg = self.scfg
         up_codec = self.uplink_codec
         quant_keys = self._quant_keys(len(sampled))
-        hetero = self.tier_of is not None
+        hetero = self.tiers is not None
         tc = self._tier_state(down_dec) if hetero else None
+        cohort_tiers = self._cohort_tiers(sampled) if hetero else None
         uploads, up_masks, weights, losses = [], [], [], []
         for i, cid in enumerate(int(c) for c in sampled):
             if not mask[i]:
                 continue
-            tier = int(self.tier_of[cid]) if hetero else -1
+            tier = int(cohort_tiers[i]) if hetero else -1
             params = self._client_full_params(cid, down_dec)
             if hetero:
                 # the client only receives (and trains) the leading
@@ -594,29 +712,108 @@ class FLServer:
                     state["_ef_up"], pmask)
         return state
 
+    # ------------------------------------------------- fleet arena
+    def _ensure_arena(self):
+        """Create the device-resident client arena on first use (its EF
+        template needs the payload structure, which depends on the
+        personalization mode — same laziness as ``_tier_cache``). Rows
+        replicate the strategy-init state / global-init residents, so a
+        never-sampled row equals what ``_prep_client_state`` would build
+        at first participation."""
+        if self.arena is not None or self.scfg.state_store != "arena":
+            return
+        from repro.fl.arena import ClientArena
+
+        scfg = self.scfg
+        tmpl = init_client_state(self.strategy, self.global_params)
+        if scfg.personalization != "local" and self.uplink_codec.has_ef:
+            tmpl = {**tmpl, "_ef_up": self.uplink_codec.ef_init(
+                self._download_payload(-1))}
+        mode = scfg.personalization
+        if mode == "pfedpara":
+            res = comm.split_pfedpara(self.global_params)[1]
+        elif mode == "fedper":
+            res = {k: v for k, v in self.global_params.items()
+                   if k in FEDPER_LOCAL_KEYS}
+        elif mode == "local":
+            res = self.global_params
+        else:
+            res = None
+        self.arena = ClientArena.create(scfg.clients, tmpl, res)
+        self.arena.shard_rows(self._mesh, self._mesh_axis)
+
+    def _stacked_state_fixups(self, state: Dict, n: int,
+                              tiers: Optional[np.ndarray]) -> Dict:
+        """Round-start fixups on arena-gathered stacked state — the
+        vectorized mirror of ``_prep_client_state``: broadcast the
+        SCAFFOLD server control variate into every row, column-mask
+        state trees to each client's tier rank in heterogeneous mode."""
+        if self.strategy.name == "scaffold" and "c" in state:
+            c = (self.server_state or {}).get("c")
+            if c is None:
+                c = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], x.dtype),
+                                 state["c"])
+            state = {**state, "c": tree_broadcast(c, n)}
+        if tiers is not None:
+            tc = self._tier_cache
+            ti = jnp.asarray(tiers, jnp.int32)
+            fmask = jax.tree.map(lambda m: jnp.take(m, ti, axis=0),
+                                 tc["full_masks"])
+            pmask = jax.tree.map(lambda m: jnp.take(m, ti, axis=0),
+                                 tc["payload_masks"])
+            state = dict(state)
+            for k in ("c", "c_i", "lambda_i"):
+                if k in state:
+                    state[k] = param_lib.apply_rank_mask(state[k], fmask)
+            if "_ef_up" in state:
+                state["_ef_up"] = param_lib.apply_rank_mask(
+                    state["_ef_up"], pmask)
+        return state
+
     # ------------------------------------------------ batched engine
     def _run_round_batched(self, sampled, mask, seeds, lr, down_dec,
                            down_bytes) -> Dict:
         scfg = self.scfg
         cids = [int(c) for c in sampled]
         C = len(cids)
-        hetero = self.tier_of is not None
+        hetero = self.tiers is not None
         tc = self._tier_state(down_dec) if hetero else None
-        tier_idx = (np.array([self.tier_of[c] for c in cids], np.int32)
-                    if hetero else None)
+        tier_idx = self._cohort_tiers(cids) if hetero else None
+        arena = scfg.state_store == "arena"
 
-        full, states = [], []
-        for cid in cids:
-            params = self._client_full_params(cid, down_dec)
-            tier = int(self.tier_of[cid]) if hetero else -1
+        if arena:
+            # ONE vectorized gather for the whole cohort: state and
+            # resident rows come off the device arena, params assemble
+            # from the broadcast — no per-client Python loop exists
+            self._ensure_arena()
+            rows = self.arena.rows_for(cids)
+            stacked_state, stacked_res = self.arena.gather(rows)
+            stacked_state = self._stacked_state_fixups(stacked_state, C,
+                                                       tier_idx)
+            from repro.fl.batch_engine import assemble_client_params
+
+            stacked_params = assemble_client_params(
+                down_dec, stacked_res, C, scfg.personalization,
+                FEDPER_LOCAL_KEYS)
             if hetero:
-                params = param_lib.apply_rank_mask(
-                    params, tree_index(tc["full_masks"], tier))
-            full.append(params)
-            states.append(self._prep_client_state(cid, params, down_dec,
-                                                  tier=tier))
-        stacked_params = tree_stack(full)
-        stacked_state = tree_stack(states) if states and states[0] else {}
+                fmask = jax.tree.map(
+                    lambda m: jnp.take(m, jnp.asarray(tier_idx, jnp.int32),
+                                       axis=0), tc["full_masks"])
+                stacked_params = param_lib.apply_rank_mask(stacked_params,
+                                                           fmask)
+        else:
+            full, states = [], []
+            for pos, cid in enumerate(cids):
+                params = self._client_full_params(cid, down_dec)
+                tier = int(tier_idx[pos]) if hetero else -1
+                if hetero:
+                    params = param_lib.apply_rank_mask(
+                        params, tree_index(tc["full_masks"], tier))
+                full.append(params)
+                states.append(self._prep_client_state(cid, params, down_dec,
+                                                      tier=tier))
+            stacked_params = tree_stack(full)
+            stacked_state = tree_stack(states) if states and states[0] else {}
 
         batches, step_mask = stack_client_epochs(
             self.data, self.partitions, cids, self.ccfg.batch,
@@ -634,14 +831,20 @@ class FLServer:
             tier_masks=tc["payload_masks"] if hetero else None)
 
         arrived = np.nonzero(mask)[0]
-        for pos in arrived:
-            cid = cids[pos]
-            if new_state:
-                self.client_states[cid] = tree_index(new_state, pos)
-            else:
-                self.client_states[cid] = {}
-            if local is not None:
-                self.local_trees[cid] = tree_index(local, pos)
+        if arena:
+            # ONE masked scatter writes the arrivals back; non-arrived
+            # rows keep their previous values bit-exactly
+            self.arena.scatter(rows, new_state if new_state else {},
+                               local, mask)
+        else:
+            for pos in arrived:
+                cid = cids[pos]
+                if new_state:
+                    self.client_states[cid] = tree_index(new_state, pos)
+                else:
+                    self.client_states[cid] = {}
+                if local is not None:
+                    self.local_trees[cid] = tree_index(local, pos)
         if upload is not None and scfg.personalization != "local":
             self.server_state = new_server_state
             self._apply_aggregated(new_global, agg_target)
@@ -667,7 +870,7 @@ class FLServer:
         batched engine, but clients are fed to the jitted scan program
         ``client_chunk`` at a time and the aggregate is a streamed fp32
         accumulator — no (C, model) tree is ever stacked."""
-        from repro.data.loader import client_step_count
+        from repro.data.loader import ChunkBatchSource, client_step_count
         from repro.fl.stream_engine import chunk_layout, from_chunks, to_chunks
 
         scfg = self.scfg
@@ -677,46 +880,66 @@ class FLServer:
         chunk, n_chunks, pad = chunk_layout(C, scfg.client_chunk)
         cids_pad = cids + cids[:1] * pad   # pad slots reuse client 0's
         # (small) state/resident trees; their batches are zeros below
-        hetero = self.tier_of is not None
+        # (arena mode maps pad slots to the scratch row instead)
+        hetero = self.tiers is not None
         tc = self._tier_state(down_dec) if hetero else None
-        tier_pad = (np.array([self.tier_of[c] for c in cids_pad], np.int32)
-                    if hetero else None)
+        tier_pad = self._cohort_tiers(cids_pad) if hetero else None
+        arena = scfg.state_store == "arena"
 
-        states, residents = [], []
-        for cid in cids_pad:
-            params = self._client_full_params(cid, down_dec)
-            states.append(self._prep_client_state(
-                cid, params, down_dec,
-                tier=int(self.tier_of[cid]) if hetero else -1))
-            if mode == "pfedpara":
-                residents.append(comm.split_pfedpara(params)[1])
-            elif mode == "fedper":
-                residents.append({k: params[k] for k in FEDPER_LOCAL_KEYS
-                                  if k in params})
-            elif mode == "local":
-                residents.append(params)
-        stacked_state = tree_stack(states) if states and states[0] else {}
-        stacked_res = tree_stack(residents) if residents else None
+        if arena:
+            # ONE vectorized cohort gather off the device arena (pad
+            # slots address the scratch row); params assemble inside
+            # the scan step from the broadcast + gathered residents
+            self._ensure_arena()
+            rows = self.arena.rows_for(cids, pad=pad)
+            stacked_state, stacked_res = self.arena.gather(rows)
+            stacked_state = self._stacked_state_fixups(
+                stacked_state, C + pad, tier_pad)
+        else:
+            states, residents = [], []
+            for pos, cid in enumerate(cids_pad):
+                params = self._client_full_params(cid, down_dec)
+                states.append(self._prep_client_state(
+                    cid, params, down_dec,
+                    tier=int(tier_pad[pos]) if hetero else -1))
+                if mode == "pfedpara":
+                    residents.append(comm.split_pfedpara(params)[1])
+                elif mode == "fedper":
+                    residents.append({k: params[k] for k in FEDPER_LOCAL_KEYS
+                                      if k in params})
+                elif mode == "local":
+                    residents.append(params)
+            stacked_state = tree_stack(states) if states and states[0] else {}
+            stacked_res = tree_stack(residents) if residents else None
 
         # one round-wide step axis so every chunk (and every later round
         # with the same cohort shape) shares a compiled program
         S = max(client_step_count(len(self.partitions[c]), self.ccfg.batch,
                                   self.ccfg.epochs) for c in cids)
-        batches, step_mask = stack_client_epochs(
-            self.data, self.partitions, cids, self.ccfg.batch,
-            self.ccfg.epochs, [int(s) for s in seeds], pad_steps=max(S, 1))
-        if pad:   # pad slots: zero batches, every step a masked no-op
-            batches = {k: np.concatenate(
-                [v, np.zeros((pad,) + v.shape[1:], v.dtype)]) for k, v in
-                batches.items()}
-            step_mask = np.concatenate(
-                [step_mask, np.zeros((pad,) + step_mask.shape[1:],
-                                     step_mask.dtype)])
-        mask_pad = np.concatenate([mask.astype(np.float32),
-                                   np.zeros(pad, np.float32)])
-        sizes_pad = np.concatenate(
-            [np.array([len(self.partitions[c]) for c in cids], np.float32),
-             np.zeros(pad, np.float32)])
+        data_source = None
+        if scfg.data_stream == "chunked":
+            # lazy per-chunk data: the scan step's host callback
+            # materializes one chunk's batches at a time — the cohort's
+            # (C, S, B, ...) stack never exists on the host
+            data_source = ChunkBatchSource(
+                self.data, self.partitions, cids, self.ccfg.batch,
+                self.ccfg.epochs, [int(s) for s in seeds],
+                chunk=chunk, n_chunks=n_chunks, pad_steps=max(S, 1))
+            batches_xs = None
+            step_mask = data_source.step_mask()
+        else:
+            # pad slots are pre-sized into the stacked allocation
+            # (zero batches, fully masked) — never concatenated in
+            batches, step_mask = stack_client_epochs(
+                self.data, self.partitions, cids, self.ccfg.batch,
+                self.ccfg.epochs, [int(s) for s in seeds],
+                pad_steps=max(S, 1), pad_clients=pad)
+            batches_xs = to_chunks(jax.tree.map(jnp.asarray, batches),
+                                   n_chunks, chunk)
+        mask_pad = np.zeros(C + pad, np.float32)
+        mask_pad[:C] = mask
+        sizes_pad = np.zeros(C + pad, np.float32)
+        sizes_pad[:C] = [len(self.partitions[c]) for c in cids]
         agg_target = (self.global_params if mode == "none"
                       else self._download_payload(-1))
 
@@ -725,7 +948,7 @@ class FLServer:
             to_chunks(stacked_state, n_chunks, chunk),
             to_chunks(stacked_res, n_chunks, chunk)
             if stacked_res is not None else None,
-            to_chunks(jax.tree.map(jnp.asarray, batches), n_chunks, chunk),
+            batches_xs,
             to_chunks(jnp.asarray(step_mask, jnp.float32), n_chunks, chunk),
             to_chunks(jnp.asarray(mask_pad), n_chunks, chunk),
             to_chunks(jnp.asarray(sizes_pad), n_chunks, chunk),
@@ -734,17 +957,23 @@ class FLServer:
             tier_xs=(to_chunks(jnp.asarray(tier_pad), n_chunks, chunk)
                      if hetero else None),
             tier_payload_masks=tc["payload_masks"] if hetero else None,
-            tier_full_masks=tc["full_masks"] if hetero else None)
+            tier_full_masks=tc["full_masks"] if hetero else None,
+            data_source=data_source)
 
         new_state = from_chunks(state_ys) if state_ys else {}
         local = from_chunks(local_ys) if local_ys is not None else None
         arrived = np.nonzero(mask)[0]
-        for pos in arrived:
-            cid = cids[pos]
-            self.client_states[cid] = (tree_index(new_state, int(pos))
-                                       if new_state else {})
-            if local is not None:
-                self.local_trees[cid] = tree_index(local, int(pos))
+        if arena:
+            # ONE masked scatter: arrivals land in their rows, the pad
+            # slots all write the scratch row's unchanged value
+            self.arena.scatter(rows, new_state, local, mask_pad)
+        else:
+            for pos in arrived:
+                cid = cids[pos]
+                self.client_states[cid] = (tree_index(new_state, int(pos))
+                                           if new_state else {})
+                if local is not None:
+                    self.local_trees[cid] = tree_index(local, int(pos))
         if mode != "local":
             self.server_state = new_server_state
             self._apply_aggregated(new_global, agg_target)

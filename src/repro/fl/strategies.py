@@ -41,6 +41,13 @@ def tree_index(tree: Any, i) -> Any:
     return jax.tree.map(lambda x: x[i], tree)
 
 
+def tree_take(tree: Any, idx) -> Any:
+    """Vectorized row gather out of a stacked tree: leaves ``(R, ..)``
+    -> ``(len(idx), ..)``. The arena's cohort-gather primitive — one
+    ``jnp.take`` per leaf instead of ``len(idx)`` ``tree_index`` calls."""
+    return jax.tree.map(lambda x: jnp.take(x, idx, axis=0), tree)
+
+
 def tree_broadcast(tree: Any, n: int) -> Any:
     """Replicate a tree along a new leading client axis of size ``n``."""
     return jax.tree.map(

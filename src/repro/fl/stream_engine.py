@@ -64,14 +64,14 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.parameterization import apply_rank_mask
-from repro.fl import comm
-from repro.fl.batch_engine import chunk_round_program
+from repro.fl.batch_engine import assemble_client_params, chunk_round_program
 from repro.fl.client import ClientConfig
 from repro.fl.codecs import Codec, make_codec
-from repro.fl.strategies import Strategy, tree_broadcast
+from repro.fl.strategies import Strategy
 from repro.kernels import agg as agg_kernels
 
 
@@ -109,6 +109,8 @@ class StreamingRound:
         # matching-shape output) — donating them would only warn.
         self._program = jax.jit(self._round_program,
                                 donate_argnums=(0, 1))
+        self._data_source = None      # lazy per-chunk batch provider
+        self._data_shapes = None      # its pure_callback result struct
 
     # --------------------------------------------------- param assembly
     def _assemble(self, resident_chunk, down_payload, chunk: int):
@@ -116,18 +118,15 @@ class StreamingRound:
         (chunk, model) tree exists only inside the scan step. ``chunk``
         is the actual chunk width (small cohorts clamp it below the
         configured size)."""
-        mode = self.personalization
-        if mode == "none":
-            return tree_broadcast(down_payload, chunk)
-        if mode == "pfedpara":
-            return comm.merge_pfedpara(
-                tree_broadcast(down_payload, chunk), resident_chunk)
-        if mode == "fedper":
-            merged = dict(tree_broadcast(down_payload, chunk))
-            merged.update(resident_chunk)
-            return merged
-        # mode == "local": residents are the full per-client params
-        return resident_chunk
+        return assemble_client_params(down_payload, resident_chunk, chunk,
+                                      self.personalization,
+                                      self.fedper_local_keys)
+
+    def _fetch_chunk(self, chunk_idx):
+        """Host callback: materialize one chunk's batches from the lazy
+        source (``jax.pure_callback`` target — stable identity, so the
+        jitted program is traced once per shape signature)."""
+        return self._data_source.fetch(int(np.asarray(chunk_idx)))
 
     # ------------------------------------------------------- the program
     def _round_program(self, state_xs, resident_xs, batches_xs, step_mask_xs,
@@ -147,7 +146,13 @@ class StreamingRound:
         def chunk_step(carry, xs):
             accs, wtots = carry
             (state_c, resident_c, batches_c, smask_c, mask_c, sizes_c,
-             keys_c, tier_c) = xs
+             keys_c, tier_c, chunk_i) = xs
+            if batches_c is None:
+                # lazy data: the chunk's batches materialize host-side
+                # inside the scan step — the cohort-wide (C, S, B, ...)
+                # stack never exists anywhere
+                batches_c = jax.pure_callback(
+                    self._fetch_chunk, self._data_shapes, chunk_i)
             params_c = self._assemble(resident_c, down_payload, chunk)
             col_masks = None
             if hetero:
@@ -195,8 +200,10 @@ class StreamingRound:
             jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.float32),
                          down_payload) for _ in range(n_tiers))
         wtot0 = tuple(jnp.zeros((), jnp.float32) for _ in range(n_tiers))
+        n_chunks = step_mask_xs.shape[0]
         xs = (state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
-              sizes_xs, quant_keys_xs, tier_xs)
+              sizes_xs, quant_keys_xs, tier_xs,
+              jnp.arange(n_chunks, dtype=jnp.int32))
         ((accs, wtots),
          (state_ys, local_ys, loss_ys, steps_ys)) = jax.lax.scan(
             chunk_step, (acc0, wtot0), xs)
@@ -236,16 +243,29 @@ class StreamingRound:
     def run(self, state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
             sizes_xs, quant_keys_xs, lr, server_state, agg_target,
             down_payload, tier_xs=None, tier_payload_masks=None,
-            tier_full_masks=None):
+            tier_full_masks=None, data_source=None):
         """Execute one streaming round. The ``tier_*`` arguments switch
         on heterogeneous-rank mode: ``tier_xs`` is the chunked
         ``(n_chunks, chunk)`` int tier index, ``tier_payload_masks`` /
         ``tier_full_masks`` are ``(T, ...)``-leading rank-mask trees
         over the payload / full-param structures. All ``None`` (the
-        default) runs the homogeneous single-accumulator program."""
+        default) runs the homogeneous single-accumulator program.
+
+        ``data_source`` (a ``repro.data.loader.ChunkBatchSource``)
+        switches on lazy per-chunk data: pass ``batches_xs=None`` and
+        each scan step fetches its own chunk's batches through a host
+        callback — the cohort-wide batch stack is never materialized,
+        host data memory stays O(chunk)."""
+        if data_source is not None:
+            if batches_xs is not None:
+                raise ValueError(
+                    "pass batches_xs=None when a data_source is given")
+            self._data_source = data_source
+            self._data_shapes = data_source.chunk_struct()
         return self._program(
             state_xs, resident_xs,
-            jax.tree.map(jnp.asarray, batches_xs),
+            None if batches_xs is None
+            else jax.tree.map(jnp.asarray, batches_xs),
             jnp.asarray(step_mask_xs, jnp.float32),
             jnp.asarray(mask_xs, jnp.float32),
             jnp.asarray(sizes_xs, jnp.float32),

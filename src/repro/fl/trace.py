@@ -1,0 +1,194 @@
+"""Fleet availability traces: O(cohort) client sampling at any scale.
+
+``FLServer._select_round`` historically drew the round cohort with
+``np.random.RandomState.choice`` over the whole fleet plus a lognormal
+latency draw per sampled client — both O(C) in the *fleet* size, which
+is exactly the host-side cost ROADMAP item 5 calls out as the blocker
+for million-client rounds. :class:`FleetTrace` replaces that path with
+a streamed availability service whose per-round cost is proportional to
+the **cohort**, never the fleet:
+
+  * **Sampling** — rejection-sampling of distinct client ids from
+    ``[0, clients)`` (O(k) expected for k ≪ C, falling back to a
+    permutation when the cohort is a large fraction of the fleet), so a
+    1%-participation round over 1M clients touches ~10k ids, not 1M.
+  * **Seeding** — every round gets its own ``np.random.SeedSequence``
+    keyed on ``(trace seed, round)``; per-client local-epoch seeds are
+    ``SeedSequence.spawn``-derived 64-bit values (see
+    :func:`spawn_seeds`), so distinct clients cannot birthday-collide
+    into identical data shuffles the way 2^30-range draws do at fleet
+    scale.
+  * **Availability** — a diurnal participation curve: client ``i`` is
+    up with probability ``(1 - dropout) * (1 + amplitude * sin(2π(t /
+    period + phase_i)))`` clipped to [0, 1], where ``phase_i`` is a
+    deterministic low-discrepancy hash of the client id scaled by
+    ``phase_spread`` (0 = the whole fleet shares one day/night cycle,
+    1 = time zones spread uniformly around the clock).
+  * **Tier mix** — ``tiers_of`` hashes ids onto capacity tiers with
+    fixed proportions (``tier_mix``), replacing the O(C)
+    ``TierSchedule.assign`` table for fleets too large to enumerate.
+
+Everything is a pure function of ``(seed, round, client id)`` — no
+per-client host state exists anywhere, which is what lets the arena
+engine (``repro.fl.arena``) keep the *device* as the only O(C) store.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+# low-discrepancy multipliers for the id hashes: the golden ratio
+# conjugate for diurnal phases, sqrt(2)-1 for tier assignment — two
+# irrationals whose Weyl sequences are equidistributed and mutually
+# uncorrelated, so a client's time zone says nothing about its tier
+_PHI = 0.6180339887498949
+_SQRT2M1 = 0.41421356237309515
+
+# domain-separation tag mixed into every SeedSequence entropy tuple so
+# trace streams never collide with other RandomState(seed) consumers
+_TRACE_TAG = 0x5EEDF1EE
+
+
+def spawn_seeds(seed: int, round_idx: int, n: int) -> np.ndarray:
+    """``n`` collision-free 64-bit data seeds for one round.
+
+    One ``np.random.SeedSequence`` keyed on ``(seed, round)`` is spawned
+    into ``n`` children (the documented fork-safe derivation) and each
+    child contributes one ``uint64`` word. Replaces the legacy
+    ``rng.randint(1 << 30, size=n)`` draw whose 2^30 space
+    birthday-collides near ~32k clients — two colliding clients would
+    shuffle their local epochs identically every round.
+    """
+    root = np.random.SeedSequence((int(seed), _TRACE_TAG, int(round_idx)))
+    return np.array(
+        [child.generate_state(1, np.uint64)[0] for child in root.spawn(n)],
+        dtype=np.uint64)
+
+
+def _id_hash(cids: np.ndarray, mult: float, seed: int) -> np.ndarray:
+    """Deterministic uniform-ish hash of client ids into [0, 1): the Weyl
+    sequence ``frac((cid + seed·offset) · mult)`` — O(cohort), no table."""
+    c = np.asarray(cids, np.float64)
+    return np.mod((c + 1.0 + 977.0 * seed) * mult, 1.0)
+
+
+@dataclass
+class FleetTrace:
+    """Deterministic fleet availability model (see module docstring).
+
+    Attributes:
+        clients: fleet size C (ids are ``[0, C)``).
+        tier_mix: capacity-tier proportions, e.g. ``(0.5, 0.3, 0.2)``;
+            pairs positionally with ``ServerConfig.gamma_tiers``. Empty
+            = homogeneous fleet, ``tiers_of`` returns all zeros.
+        dropout: baseline per-round unavailability (peak-hour failure
+            rate); the diurnal curve modulates around ``1 - dropout``.
+        diurnal_amplitude: participation swing in [0, 1); 0 disables
+            the day/night cycle.
+        diurnal_period: rounds per simulated day.
+        phase_spread: how far client time zones spread around the clock
+            (0 = one global cycle, 1 = uniform around the full day).
+        seed: trace seed; every derived stream is keyed on it.
+    """
+
+    clients: int
+    tier_mix: Tuple[float, ...] = ()
+    dropout: float = 0.0
+    diurnal_amplitude: float = 0.0
+    diurnal_period: int = 24
+    phase_spread: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.clients <= 0:
+            raise ValueError("FleetTrace.clients must be positive")
+        if self.tier_mix:
+            s = float(sum(self.tier_mix))
+            if not np.isclose(s, 1.0, atol=1e-6):
+                raise ValueError(
+                    f"tier_mix must sum to 1, got {self.tier_mix} (sum {s})")
+
+    # ------------------------------------------------------------ streams
+    def round_rng(self, round_idx: int) -> np.random.Generator:
+        """The round's private generator — every round re-keys from the
+        trace seed, so round r's draws never depend on how many draws
+        earlier rounds made (replayable at any round in isolation)."""
+        return np.random.Generator(np.random.PCG64(
+            np.random.SeedSequence((int(self.seed), _TRACE_TAG,
+                                    int(round_idx)))))
+
+    def local_seeds(self, round_idx: int, n: int) -> np.ndarray:
+        """Per-client 64-bit local-epoch data seeds for the round's
+        cohort (``spawn_seeds`` keyed on the trace seed)."""
+        return spawn_seeds(self.seed, round_idx, n)
+
+    # ----------------------------------------------------------- sampling
+    def sample_cohort(self, rng: np.random.Generator, k: int) -> np.ndarray:
+        """``k`` distinct client ids, cost O(k) expected — not O(C).
+
+        For cohorts up to half the fleet, rejection-sample batches of
+        ids until ``k`` distinct ones accumulate (expected < 2 batches
+        at 1% participation); larger cohorts fall back to a fleet
+        permutation, where O(C) is within a constant of the answer size.
+        """
+        n, k = int(self.clients), int(k)
+        if k >= n:
+            return rng.permutation(n)
+        if k > n // 2:   # dense cohort: rejection would thrash
+            return rng.permutation(n)[:k]
+        got = np.unique(rng.integers(0, n, size=int(k * 1.25) + 16))
+        while len(got) < k:
+            got = np.unique(np.concatenate(
+                [got, rng.integers(0, n, size=k)]))
+        # np.unique sorts — shuffle so cohort order carries no id bias
+        rng.shuffle(got)
+        return got[:k].astype(np.int64)
+
+    # ------------------------------------------------------- availability
+    def client_phase(self, cids: np.ndarray) -> np.ndarray:
+        """Each client's diurnal phase offset in [0, 1): a deterministic
+        low-discrepancy hash of the id, scaled by ``phase_spread``."""
+        return self.phase_spread * _id_hash(cids, _PHI, self.seed)
+
+    def availability(self, cids: np.ndarray, round_idx: int) -> np.ndarray:
+        """Per-client up-probability at round ``round_idx`` (the diurnal
+        participation curve; O(cohort))."""
+        base = 1.0 - float(self.dropout)
+        cids = np.asarray(cids)
+        if self.diurnal_amplitude <= 0:
+            return np.full(len(cids), base)
+        t = float(round_idx) / max(1, int(self.diurnal_period))
+        wave = np.sin(2.0 * np.pi * (t + self.client_phase(cids)))
+        return np.clip(base * (1.0 + self.diurnal_amplitude * wave), 0.0, 1.0)
+
+    # --------------------------------------------------------------- tiers
+    def tiers_of(self, cids: np.ndarray) -> np.ndarray:
+        """Capacity-tier index per client (O(cohort) hash, proportions
+        ``tier_mix``); all zeros when no mix is configured."""
+        cids = np.asarray(cids)
+        if not self.tier_mix:
+            return np.zeros(len(cids), np.int32)
+        edges = np.cumsum(np.asarray(self.tier_mix, np.float64))[:-1]
+        u = _id_hash(cids, _SQRT2M1, self.seed)
+        return np.searchsorted(edges, u, side="right").astype(np.int32)
+
+    def tier_counts(self) -> np.ndarray:
+        """Expected clients per tier (``round(mix * C)``) — the fleet is
+        never enumerated, so exact counts would cost O(C) on purpose."""
+        if not self.tier_mix:
+            return np.array([self.clients], np.int64)
+        return np.round(np.asarray(self.tier_mix, np.float64)
+                        * self.clients).astype(np.int64)
+
+    # ------------------------------------------------------------ latency
+    def latency(self, rng: np.random.Generator, payload_bytes,
+                n: int, sigma: float, bandwidth_mbps: float) -> np.ndarray:
+        """Simulated arrival latency for ``n`` cohort clients: lognormal
+        compute plus payload/bandwidth transfer — the server's straggler
+        model, drawn from the round's private generator."""
+        comp = rng.lognormal(mean=0.0, sigma=sigma, size=n)
+        comm_s = 8.0 * np.asarray(payload_bytes, np.float64) / (
+            bandwidth_mbps * 1e6)
+        return comp + comm_s

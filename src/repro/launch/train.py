@@ -188,7 +188,9 @@ def train_fl(args):
                                 engine=args.engine,
                                 client_chunk=args.client_chunk,
                                 gamma_tiers=gamma_tiers,
-                                tier_assignment=args.tier_assignment),
+                                tier_assignment=args.tier_assignment,
+                                state_store=args.state_store,
+                                data_stream=args.data_stream),
                    eval_fn=eval_fn, mesh=mesh)
     hist = srv.run(log_every=1)
     hist[-1]["comm_up_mb"] = srv.comm_log.up_bytes / 1e6
@@ -242,6 +244,18 @@ def main():
     ap.add_argument("--client-chunk", type=int, default=16,
                     help="streaming engine: clients per scan step; round "
                          "memory peaks at O(client_chunk * model)")
+    ap.add_argument("--state-store", default="dict",
+                    choices=["dict", "arena"],
+                    help="per-client state residency: host dicts, or the "
+                         "device-resident index-addressed arena (one "
+                         "vectorized gather/scatter per round; batched "
+                         "and streaming engines only)")
+    ap.add_argument("--data-stream", default="eager",
+                    choices=["eager", "chunked"],
+                    help="cohort batch materialization: eager full-cohort "
+                         "host stack, or chunked per-scan-step host "
+                         "callbacks (streaming engine only; host memory "
+                         "stays O(client_chunk))")
     ap.add_argument("--gamma-tiers", default="",
                     help="heterogeneous capacity tiers: comma-separated "
                          "rank gammas, one per device tier (e.g. "

@@ -1,0 +1,276 @@
+"""Arena-vs-dict client-state parity + fleet data-path invariants.
+
+The device-resident arena (``repro.fl.arena``) must be an invisible
+substrate swap: gather → local-update → scatter round-trips have to
+reproduce the dict-based engines bitwise-masked and fp32-tol in params
+for every strategy × personalization mode × codec (error feedback
+threaded through the stacked rows), with identical wire bytes. The
+streamed data path (``ChunkBatchSource``) must materialize bit-identical
+batches to the eager full-cohort stack, and the pre-sized pad slots must
+equal what the old concatenate path produced.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ParamCfg
+from repro.data import (
+    ChunkBatchSource,
+    VirtualPartitions,
+    dirichlet_partition,
+    make_image_dataset,
+    stack_client_epochs,
+    train_test_split,
+)
+from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+from repro.nn import recurrent as rec
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # only the property test needs hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):          # no-op decorators so the module still loads
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    settings = given
+
+    class st:  # noqa: N801
+        sampled_from = staticmethod(lambda *a: None)
+
+ATOL = 1e-4
+
+N_CLIENTS = 8
+
+
+_TASK = {}
+
+
+def _get_task():
+    if not _TASK:
+        ds = make_image_dataset(1200, 10, size=16, channels=1, noise=0.3)
+        data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+        tr, te = train_test_split(data)
+        _TASK.update(tr=tr, te=te,
+                     parts=dirichlet_partition(tr["y"], N_CLIENTS, 0.5))
+    return _TASK
+
+
+@pytest.fixture(scope="module")
+def task():
+    return _get_task()
+
+
+def _make(kind):
+    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                        param=ParamCfg(kind=kind, gamma=0.3,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    return cfg, params, loss_fn
+
+
+def _run(task, engine, *, chunk=3, strategy="fedavg", personalization="none",
+         rounds=2, **server_kw):
+    kind = "pfedpara" if personalization == "pfedpara" else "fedpara"
+    cfg, params, loss_fn = _make(kind)
+    srv = FLServer(loss_fn, params, task["tr"], task["parts"],
+                   make_strategy(strategy),
+                   ClientConfig(lr=0.1, batch=16, epochs=1),
+                   ServerConfig(clients=N_CLIENTS, participation=0.5,
+                                rounds=rounds, engine=engine,
+                                client_chunk=chunk,
+                                personalization=personalization,
+                                **server_kw))
+    srv.run()
+    return srv
+
+
+def _maxdiff(a, b):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b))
+    return max(leaves) if leaves else 0.0
+
+
+def _assert_substrate_parity(ref, got):
+    """ref = dict-store engine, got = same engine on the arena."""
+    assert ([r.get("arrived_mask") for r in ref.history]
+            == [r.get("arrived_mask") for r in got.history])
+    assert _maxdiff(ref.global_params, got.global_params) < ATOL
+    assert _maxdiff(ref.server_state, got.server_state) < ATOL
+    for cid in ref.client_states:
+        assert _maxdiff(ref.client_states[cid],
+                        got.client_state_of(cid)) < ATOL, cid
+    for cid in ref.local_trees:
+        assert _maxdiff(ref.local_trees[cid], got.resident_of(cid)) < ATOL
+    for rr, rg in zip(ref.history, got.history):
+        assert abs(rr["mean_loss"] - rg["mean_loss"]) < 1e-4
+        assert abs(rr["comm_gb"] - rg["comm_gb"]) < 1e-12
+
+
+# ------------------------------------------------------------------ tentpole
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=8, deadline=None)
+@given(engine=st.sampled_from(["batched", "streaming"]),
+       strategy=st.sampled_from(["fedavg", "fedprox", "scaffold", "feddyn"]),
+       mode=st.sampled_from(["none", "pfedpara", "fedper", "local"]),
+       codec=st.sampled_from(["", "int8", "delta|topk0.1|int8"]))
+def test_arena_roundtrip_property(engine, strategy, mode, codec):
+    """Acceptance: gather → local-update → scatter equals the dict path
+    for random strategy × personalization × codec draws, EF accumulators
+    threaded through the stacked arena rows."""
+    task = _get_task()
+    kw = dict(strategy=strategy, personalization=mode, uplink_codec=codec)
+    ref = _run(task, engine, **kw)
+    got = _run(task, engine, state_store="arena", **kw)
+    _assert_substrate_parity(ref, got)
+
+
+@pytest.mark.parametrize("engine,strategy,mode,codec", [
+    ("batched", "feddyn", "none", "int8"),
+    ("streaming", "scaffold", "pfedpara", ""),
+    ("streaming", "fedprox", "fedper", "delta|topk0.1|int8"),
+    ("batched", "scaffold", "local", "int8"),
+])
+def test_arena_roundtrip_matrix(task, engine, strategy, mode, codec):
+    """Pinned strategy × mode × codec cells (runs with or without
+    hypothesis — the property test above widens the same check)."""
+    kw = dict(strategy=strategy, personalization=mode, uplink_codec=codec)
+    ref = _run(task, engine, **kw)
+    got = _run(task, engine, state_store="arena", **kw)
+    _assert_substrate_parity(ref, got)
+
+
+@pytest.mark.parametrize("engine", ["batched", "streaming"])
+def test_arena_parity_ef_both_links(task, engine):
+    """Non-identity codecs on BOTH links, multi-round, EF threaded."""
+    kw = dict(uplink_codec="delta|topk0.1|int8",
+              downlink_codec="delta|topk0.1|int8", rounds=3)
+    ref = _run(task, engine, **kw)
+    got = _run(task, engine, state_store="arena", **kw)
+    _assert_substrate_parity(ref, got)
+
+
+def test_arena_parity_hetero_tiers(task):
+    """Rank tiers price and mask identically off the arena."""
+    kw = dict(gamma_tiers=(0.1, 0.2, 0.3), strategy="scaffold")
+    for engine in ("batched", "streaming"):
+        ref = _run(task, engine, **kw)
+        got = _run(task, engine, state_store="arena", **kw)
+        _assert_substrate_parity(ref, got)
+
+
+def test_arena_participation_counters(task):
+    """The int32 counter row equals a host tally of the arrival masks."""
+    srv = _run(task, "streaming", state_store="arena", rounds=3,
+               strategy="scaffold")
+    tally = np.zeros(N_CLIENTS, np.int64)
+    for r in srv.history:
+        for cid, hit in zip(r["sampled"], r["arrived_mask"]):
+            tally[cid] += hit
+    np.testing.assert_array_equal(srv.participation_counts(), tally)
+    # the scratch row absorbs pad-slot scatters but never a real arrival
+    assert int(np.asarray(srv.arena.participation)[-1]) == 0
+
+
+def test_arena_scratch_row_stays_pristine(task):
+    """chunk=3 over cohorts of 4 forces pad slots every round; the
+    scratch row they all address must keep its template value."""
+    srv = _run(task, "streaming", state_store="arena", chunk=3,
+               strategy="scaffold", rounds=3)
+    tmpl = srv.arena.client_state(0)  # row 0 mutated; compare structure
+    scratch = srv.arena.client_state(srv.arena.scratch_row)
+    for leaf in jax.tree.leaves(scratch):   # scaffold init = all zeros
+        assert not np.asarray(leaf).any()
+    assert set(scratch) == set(tmpl)
+
+
+# ---------------------------------------------------------------- data path
+def test_chunked_data_stream_bitwise(task):
+    """Lazy per-chunk materialization is bit-identical to the eager
+    full-cohort stack (shared row-fill helper), dict and arena stores."""
+    ref = _run(task, "streaming", rounds=3)
+    for kw in (dict(data_stream="chunked"),
+               dict(data_stream="chunked", state_store="arena")):
+        got = _run(task, "streaming", rounds=3, **kw)
+        assert ([r.get("arrived_mask") for r in ref.history]
+                == [r.get("arrived_mask") for r in got.history])
+        assert _maxdiff(ref.global_params, got.global_params) == 0.0
+
+
+def test_chunk_batch_source_matches_eager_stack(task):
+    """fetch(i) rows == the eager stack's rows, bitwise, pads included."""
+    tr, parts = task["tr"], task["parts"]
+    cids = [1, 3, 4, 6, 7]
+    seeds = [11, 22, 33, 44, 55]
+    chunk, n_chunks, pad = 2, 3, 1
+    batches, step_mask = stack_client_epochs(
+        tr, parts, cids, batch=16, epochs=1, seeds=seeds,
+        pad_steps=None, pad_clients=pad)
+    S = step_mask.shape[1]
+    src = ChunkBatchSource(tr, parts, cids, batch=16, epochs=1, seeds=seeds,
+                           chunk=chunk, n_chunks=n_chunks, pad_steps=S)
+    np.testing.assert_array_equal(src.step_mask(), step_mask)
+    for ci in range(n_chunks):
+        got = src.fetch(ci)
+        for k in batches:
+            np.testing.assert_array_equal(
+                got[k], batches[k][ci * chunk:(ci + 1) * chunk])
+    struct = src.chunk_struct()
+    for k in batches:
+        assert struct[k].shape == (chunk,) + batches[k].shape[1:]
+        assert struct[k].dtype == batches[k].dtype
+
+
+def test_stack_pad_clients_presized(task):
+    """pad_clients pre-sizes the allocation: leading rows match the
+    unpadded stack bitwise, pad rows are zero batches + zero mask."""
+    tr, parts = task["tr"], task["parts"]
+    cids, seeds = [0, 2, 5], [7, 8, 9]
+    plain, mask = stack_client_epochs(tr, parts, cids, 16, 1, seeds)
+    padded, pmask = stack_client_epochs(tr, parts, cids, 16, 1, seeds,
+                                        pad_clients=2)
+    for k in plain:
+        np.testing.assert_array_equal(plain[k], padded[k][:3])
+        assert not padded[k][3:].any()
+    np.testing.assert_array_equal(mask, pmask[:3])
+    assert not pmask[3:].any()
+
+
+def test_virtual_partitions_deterministic():
+    """O(1)-per-client views: stable across instances, distinct sorted
+    sample ids in range, scalar indexing only."""
+    a = VirtualPartitions(pool_size=10_000, clients=1_000_000,
+                          samples_per_client=32, seed=3)
+    b = VirtualPartitions(pool_size=10_000, clients=1_000_000,
+                          samples_per_client=32, seed=3)
+    assert len(a) == 1_000_000
+    for cid in (0, 999_999, 123_456):
+        idx = a[cid]
+        np.testing.assert_array_equal(idx, b[cid])
+        assert len(idx) == 32 == len(set(int(i) for i in idx))
+        assert idx.min() >= 0 and idx.max() < 10_000
+        assert np.all(np.diff(idx) > 0)
+    assert not np.array_equal(a[0], a[1])
+    assert np.array_equal(a[-1], a[999_999])
+    np.testing.assert_array_equal(a.sizes([4, 5]), [32, 32])
+    with pytest.raises(TypeError):
+        a[[0, 1]]
+    with pytest.raises(IndexError):
+        a[1_000_000]
+
+
+# ----------------------------------------------------------------- seeding
+def test_quant_keys_vmap_matches_fold_in_loop(task):
+    """The vectorized per-client quantization keys are value-identical
+    to the historical per-client fold_in loop."""
+    srv = _run(task, "batched", rounds=1)
+    got = srv._quant_keys(7)
+    base = jax.random.PRNGKey(srv.round_idx)
+    want = jnp.stack([jax.random.fold_in(base, i) for i in range(7)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,200 @@
+"""Fleet availability-trace model: pinned statistics + server wiring.
+
+``FleetTrace`` is the O(cohort) replacement for the server's O(fleet)
+sampling path, so its statistics have to be pinned: tier proportions
+must track ``tier_mix`` to within a percent at fleet scale, the diurnal
+participation curve must modulate around ``1 - dropout`` with the
+configured amplitude/phase spread, cohorts must be distinct in-range ids
+reproducible from the round seed alone, and ``spawn_seeds`` must never
+collide. The integration tests drive a real trace-configured server and
+check the realized participation statistics.
+"""
+import numpy as np
+import pytest
+
+from repro.fl import FleetTrace, spawn_seeds
+from repro.fl.trace import _id_hash
+
+
+# ---------------------------------------------------------------- tier mix
+def test_tier_mix_proportions_at_scale():
+    mix = (0.5, 0.3, 0.2)
+    trace = FleetTrace(clients=100_000, tier_mix=mix, seed=4)
+    tiers = trace.tiers_of(np.arange(100_000))
+    frac = np.bincount(tiers, minlength=3) / 100_000.0
+    np.testing.assert_allclose(frac, mix, atol=0.01)
+    np.testing.assert_array_equal(trace.tier_counts(), [50_000, 30_000,
+                                                        20_000])
+
+
+def test_tier_assignment_deterministic_and_seed_sensitive():
+    cids = np.arange(1000)
+    a = FleetTrace(clients=1000, tier_mix=(0.5, 0.5), seed=1)
+    b = FleetTrace(clients=1000, tier_mix=(0.5, 0.5), seed=1)
+    c = FleetTrace(clients=1000, tier_mix=(0.5, 0.5), seed=2)
+    np.testing.assert_array_equal(a.tiers_of(cids), b.tiers_of(cids))
+    assert (a.tiers_of(cids) != c.tiers_of(cids)).any()
+
+
+def test_tiers_uncorrelated_with_phase():
+    """The two id hashes use different irrational multipliers: a
+    client's time zone must say nothing about its capacity tier."""
+    trace = FleetTrace(clients=50_000, tier_mix=(0.5, 0.5), seed=0)
+    cids = np.arange(50_000)
+    phase = trace.client_phase(cids)
+    tiers = trace.tiers_of(cids)
+    # mean phase per tier both ~0.5 (independent uniforms)
+    for t in (0, 1):
+        assert abs(phase[tiers == t].mean() - 0.5) < 0.01
+
+
+def test_homogeneous_trace_tiers_are_zero():
+    trace = FleetTrace(clients=100)
+    np.testing.assert_array_equal(trace.tiers_of(np.arange(5)), 0)
+    np.testing.assert_array_equal(trace.tier_counts(), [100])
+
+
+# ------------------------------------------------------------- availability
+def test_availability_flat_without_diurnal():
+    trace = FleetTrace(clients=1000, dropout=0.25)
+    av = trace.availability(np.arange(100), round_idx=7)
+    np.testing.assert_allclose(av, 0.75)
+
+
+def test_availability_diurnal_pinned():
+    """phase_spread=0 puts the whole fleet on one cycle: at a quarter
+    period the sine peaks, availability = base * (1 + amplitude)."""
+    trace = FleetTrace(clients=1000, dropout=0.2, diurnal_amplitude=0.2,
+                       diurnal_period=24, phase_spread=0.0, seed=0)
+    cids = np.arange(10)
+    peak = trace.availability(cids, round_idx=6)    # t = 6/24 -> sin = 1
+    trough = trace.availability(cids, round_idx=18)  # sin = -1
+    np.testing.assert_allclose(peak, 0.8 * 1.2, atol=1e-9)
+    np.testing.assert_allclose(trough, 0.8 * 0.8, atol=1e-9)
+
+
+def test_availability_bounded_and_mean_reverting():
+    trace = FleetTrace(clients=10_000, dropout=0.3, diurnal_amplitude=0.4,
+                       diurnal_period=24, phase_spread=1.0, seed=3)
+    cids = np.arange(10_000)
+    means = []
+    for r in range(24):
+        av = trace.availability(cids, r)
+        assert av.min() >= 0.0 and av.max() <= 1.0
+        means.append(av.mean())
+    # across a full simulated day the (unclipped) wave averages out
+    assert abs(np.mean(means) - 0.7) < 0.02
+
+
+def test_id_hash_equidistributed():
+    u = _id_hash(np.arange(100_000), 0.6180339887498949, seed=5)
+    hist, _ = np.histogram(u, bins=10, range=(0, 1))
+    np.testing.assert_allclose(hist / 100_000.0, 0.1, atol=0.01)
+
+
+# ------------------------------------------------------------------ cohorts
+def test_sample_cohort_distinct_in_range_deterministic():
+    trace = FleetTrace(clients=1_000_000, seed=11)
+    a = trace.sample_cohort(trace.round_rng(3), 10_000)
+    b = trace.sample_cohort(trace.round_rng(3), 10_000)
+    c = trace.sample_cohort(trace.round_rng(4), 10_000)
+    np.testing.assert_array_equal(a, b)        # replayable per round
+    assert (a != c).any()                      # re-keyed per round
+    assert len(a) == 10_000 == len(np.unique(a))
+    assert a.min() >= 0 and a.max() < 1_000_000
+
+
+@pytest.mark.parametrize("k", [1, 5, 8, 10])  # rejection / dense / full
+def test_sample_cohort_small_fleet_paths(k):
+    trace = FleetTrace(clients=10, seed=0)
+    got = trace.sample_cohort(trace.round_rng(0), k)
+    assert len(got) == k == len(np.unique(got))
+    assert got.min() >= 0 and got.max() < 10
+
+
+# ------------------------------------------------------------------ seeding
+def test_spawn_seeds_unique_and_keyed():
+    a = spawn_seeds(0, 0, 50_000)
+    assert a.dtype == np.uint64
+    assert len(np.unique(a)) == 50_000          # no birthday collisions
+    np.testing.assert_array_equal(a, spawn_seeds(0, 0, 50_000))
+    assert (a != spawn_seeds(0, 1, 50_000)).any()
+    assert (a != spawn_seeds(1, 0, 50_000)).any()
+    np.testing.assert_array_equal(
+        FleetTrace(clients=10, seed=9).local_seeds(2, 8),
+        spawn_seeds(9, 2, 8))
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        FleetTrace(clients=0)
+    with pytest.raises(ValueError):
+        FleetTrace(clients=10, tier_mix=(0.5, 0.4))
+
+
+# -------------------------------------------------------------- integration
+N_CLIENTS = 64
+
+
+def _trace_server(trace, rounds=4, **server_kw):
+    import jax
+
+    from repro.configs.base import ParamCfg
+    from repro.data import (dirichlet_partition, make_image_dataset,
+                            train_test_split)
+    from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+    from repro.nn import recurrent as rec
+
+    ds = make_image_dataset(500, 10, size=8, channels=1, noise=0.3)
+    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+    tr, _ = train_test_split(data)
+    parts = dirichlet_partition(tr["y"], N_CLIENTS, 0.5)
+    cfg = rec.MLPConfig(in_dim=64, hidden=32, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=0.3,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
+    srv = FLServer(lambda p, b: rec.mlp_loss(p, cfg, b), params, tr, parts,
+                   make_strategy("fedavg"),
+                   ClientConfig(lr=0.1, batch=16, epochs=1),
+                   ServerConfig(clients=N_CLIENTS, participation=0.25,
+                                rounds=rounds, engine="streaming",
+                                client_chunk=4, trace=trace, **server_kw))
+    srv.run()
+    return srv
+
+
+def test_trace_server_participation_statistics():
+    """A dropout-0.3 trace realizes ~70% arrivals of each sampled
+    cohort, reproducibly (all randomness keyed on the trace seed)."""
+    trace = FleetTrace(clients=N_CLIENTS, dropout=0.3, seed=21)
+    srv = _trace_server(trace, rounds=6, state_store="arena",
+                        data_stream="chunked")
+    sampled = sum(len(r["sampled"]) for r in srv.history)
+    arrived = sum(sum(r["arrived_mask"]) for r in srv.history)
+    assert sampled == 6 * 16
+    assert 0.45 < arrived / sampled < 0.95     # ~0.7 ± binomial noise
+    assert arrived == srv.participation_counts().sum()
+    # same trace seed -> bitwise-identical cohorts and masks
+    rerun = _trace_server(FleetTrace(clients=N_CLIENTS, dropout=0.3,
+                                     seed=21),
+                          rounds=6, state_store="arena",
+                          data_stream="chunked")
+    assert ([r["sampled"] for r in srv.history]
+            == [r["sampled"] for r in rerun.history])
+    assert ([r["arrived_mask"] for r in srv.history]
+            == [r["arrived_mask"] for r in rerun.history])
+
+
+def test_trace_tier_mix_drives_hetero_pricing():
+    """tier_mix pairs positionally with gamma_tiers: the run works with
+    NO O(fleet) tier table (server.tier_of stays None) and still prices
+    per-tier wire bytes."""
+    trace = FleetTrace(clients=N_CLIENTS, tier_mix=(0.5, 0.3, 0.2), seed=5)
+    srv = _trace_server(trace, rounds=2, gamma_tiers=(0.1, 0.2, 0.3),
+                        state_store="arena")
+    assert srv.tier_of is None
+    assert srv.history[-1]["comm_gb"] > 0
+    with pytest.raises(ValueError):
+        _trace_server(FleetTrace(clients=N_CLIENTS, tier_mix=(0.5, 0.5),
+                                 seed=5),
+                      rounds=1, gamma_tiers=(0.1, 0.2, 0.3))
