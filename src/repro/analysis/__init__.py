@@ -1,3 +1,17 @@
-from repro.analysis import hlo, roofline
+"""Analysis tools: HLO collective accounting, rooflines, and the
+fedlint static/compiled-program contract checkers.
 
-__all__ = ["hlo", "roofline"]
+Submodules load lazily: ``lint`` is pure-stdlib AST analysis and must
+stay importable in milliseconds (the CI lint job and editor hooks run
+it constantly), while ``hlo``/``roofline``/``program_check``/
+``kernel_check`` pull in jax and, transitively, the FL engines.
+"""
+import importlib
+
+__all__ = ["hlo", "lint", "roofline", "program_check", "kernel_check"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

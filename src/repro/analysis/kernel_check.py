@@ -1,0 +1,291 @@
+"""Static kernel-contract checker (fedlint Layer 2, Pallas side).
+
+Validates the shared block tables (``repro.kernels.blocks``) against
+every layer shape every shipped config actually produces — WITHOUT
+allocating a single parameter: each model is enumerated with
+``jax.eval_shape`` (llama3-405B's 126×(16384, 53248) FFN costs nothing
+abstract) and every FedPara factor node ``{"x1","y1","x2","y2"}`` is
+resolved to its ``(m, n, r)`` kernel problem.
+
+Per layer, per kernel body (forward matmul, dx, dX/dY-factor backward)
+the checker asserts:
+
+  * **alignment** — the selected ``(block_b, block_m, block_n)`` tile
+    respects TPU tiling minima (sublane multiple of 8, lane multiple
+    of 128);
+  * **grid coverage** — the pad-to-multiple grid covers the full
+    operand (and reports the padding-waste fraction);
+  * **VMEM footprint** — the kernel body's working set (streamed
+    input/output blocks at 2× for double-buffering, plus scratch)
+    fits the v5e per-core budget (16 MiB).
+
+A shape whose tiles are valid but whose VMEM estimate exceeds budget is
+an **uncovered** entry: it is reported (xfail-style, with the estimate)
+rather than silently accepted — the block table needs a new regime row
+before that config can run fused on real hardware. Alignment/coverage
+failures are hard errors.
+
+The fused dequant-accumulate aggregation tiles
+(``blocks.select_agg_blocks``) are checked the same way against every
+payload leaf's flat wire length.
+
+Run locally::
+
+    python -m repro.analysis.kernel_check             # report
+    python -m repro.analysis.kernel_check --strict    # fail on uncovered
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Tuple
+
+VMEM_BUDGET = 16 * 1024 * 1024     # v5e per-core VMEM, bytes
+SUBLANE, LANE = 8, 128             # fp32 tiling minima
+DOUBLE_BUFFER = 2                  # streamed blocks are double-buffered
+ITEMSIZE = 4                       # worst case: fp32 operands
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+# ------------------------------------------------------- VMEM estimates
+
+def kernel_vmem(kind: str, bb: int, bm: int, bn: int, r: int) -> int:
+    """Working-set bytes of one grid step of the named kernel body.
+
+    Streamed blocks (in_specs + out_specs) count 2× (double-buffered:
+    the next block loads while the current computes); VMEM scratch
+    counts once. Mirrors the BlockSpecs in kernels/fedpara_matmul.py /
+    fedpara_grad.py — change those, change this.
+    """
+    if kind == "fwd":          # x(bb,bm) + 4 factor slices -> y(bb,bn)
+        stream = bb * bm + 2 * (bm * r + bn * r) + bb * bn
+        scratch = bb * bn
+    elif kind == "dx":         # dy(bb,bn) + 4 factor slices -> dx(bb,bm)
+        stream = bb * bn + 2 * (bm * r + bn * r) + bb * bm
+        scratch = bb * bm
+    elif kind in ("dfx", "dfy"):   # x, dy, 4 slices -> two (ob, r) grads
+        ob = bm if kind == "dfx" else bn
+        stream = bb * bm + bb * bn + 2 * (bm * r + bn * r) + 2 * ob * r
+        scratch = bm * bn + 2 * ob * r
+    else:
+        raise ValueError(f"unknown kernel body {kind!r}")
+    return (DOUBLE_BUFFER * stream + scratch) * ITEMSIZE
+
+
+def agg_vmem(bc: int, bl: int, wire_itemsize: int = 1) -> int:
+    """Dequant-accumulate body: one (bc, bl) wire tile at wire itemsize,
+    the (1, bc) coeff row, (1, bl) acc in/out, (1, bl) fp32 scratch."""
+    stream = bc * bl * wire_itemsize + (bc + 2 * bl) * 4
+    return DOUBLE_BUFFER * stream + bl * 4
+
+
+# ----------------------------------------------------------- shape enum
+
+@dataclass
+class LayerCheck:
+    """One (config, layer, kernel body) verdict."""
+
+    config: str
+    path: str
+    m: int
+    n: int
+    r: int
+    body: str
+    blocks: Tuple[int, int, int]
+    vmem: int
+    valid: bool = True            # alignment + grid coverage
+    notes: List[str] = field(default_factory=list)
+
+    @property
+    def fits(self) -> bool:
+        return self.vmem <= VMEM_BUDGET
+
+    def render(self) -> str:
+        mb = self.vmem / (1 << 20)
+        tag = "ok" if (self.valid and self.fits) else (
+            "INVALID" if not self.valid else "OVER-VMEM")
+        note = f" [{'; '.join(self.notes)}]" if self.notes else ""
+        return (f"{self.config}:{self.path} ({self.m}x{self.n} r={self.r}) "
+                f"{self.body} blocks={self.blocks} vmem={mb:.1f}MiB "
+                f"{tag}{note}")
+
+
+def factor_shapes(params_shapes: Any) -> List[Tuple[str, int, int, int]]:
+    """(path, m, n, r) for every matrix FedPara factor node in an
+    eval_shape'd param tree. Scan-stacked leading layer dims are
+    dropped (the kernels tile the trailing (m|n, r) axes)."""
+    out = []
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "x1" in node and "y1" in node:
+                x1, y1 = node["x1"], node["y1"]
+                out.append((path or "<root>", int(x1.shape[-2]),
+                            int(y1.shape[-2]), int(x1.shape[-1])))
+                return
+            for k in sorted(node):
+                walk(node[k], f"{path}/{k}" if path else k)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}[{i}]")
+
+    walk(params_shapes, "")
+    return out
+
+
+def payload_lengths(params_shapes: Any) -> List[Tuple[str, int]]:
+    """(path, flat length) of every leaf — the aggregation kernel's
+    (C, L) problem sizes."""
+    import numpy as np
+    import jax
+
+    out = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(params_shapes)[0]:
+        path = jax.tree_util.keystr(kp)
+        out.append((path, int(np.prod(leaf.shape)) if leaf.shape else 1))
+    return out
+
+
+def enumerate_config(name: str):
+    """eval_shape a registered config's model init — zero allocation."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.nn.transformer import build_model
+
+    model = build_model(get_arch(name))
+    return jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------- checks
+
+MATMUL_BODIES = ("fwd", "dx", "dfx", "dfy")
+# Paper FL regime batch per local step; the kernels clamp block_b to the
+# actual batch so this only caps the estimate from above.
+ASSUMED_BATCH = 128
+
+
+def check_layer(config: str, path: str, m: int, n: int, r: int
+                ) -> List[LayerCheck]:
+    from repro.kernels import blocks
+
+    bb, bm, bn = blocks.select_blocks(m, n, r)
+    bb = min(bb, _ceil_mult(ASSUMED_BATCH, SUBLANE))
+    out = []
+    for body in MATMUL_BODIES:
+        lc = LayerCheck(config, path, m, n, r, body, (bb, bm, bn),
+                        kernel_vmem(body, bb, bm, bn, r))
+        if bb % SUBLANE or bm % SUBLANE or bn % LANE:
+            lc.valid = False
+            lc.notes.append(
+                f"tile misaligned: need bb%{SUBLANE}==0, bm%{SUBLANE}==0, "
+                f"bn%{LANE}==0")
+        mp, np_ = _ceil_mult(m, bm), _ceil_mult(n, bn)
+        if mp // bm < 1 or np_ // bn < 1:
+            lc.valid = False
+            lc.notes.append("grid does not cover the operand")
+        waste = (mp * np_) / (m * n) - 1.0
+        if waste > 1.0:
+            lc.notes.append(f"padding waste {waste:.0%} (>100%)")
+        if not lc.fits:
+            lc.notes.append(
+                f"exceeds v5e VMEM budget by "
+                f"{(lc.vmem - VMEM_BUDGET) / (1 << 20):.1f}MiB")
+        out.append(lc)
+    return out
+
+
+def check_agg_leaf(config: str, path: str, length: int,
+                   clients: int = 64) -> LayerCheck:
+    from repro.kernels import blocks
+
+    bc, bl = blocks.select_agg_blocks(clients, length)
+    lc = LayerCheck(config, path, clients, length, 0, "agg", (bc, bl, 0),
+                    agg_vmem(bc, bl))
+    if bc % 32:    # int8 sublane minimum
+        lc.valid = False
+        lc.notes.append("block_c must be a multiple of the int8 sublane (32)")
+    if bl % LANE:
+        lc.valid = False
+        lc.notes.append(f"block_l must be a multiple of the lane dim ({LANE})")
+    if not lc.fits:
+        lc.notes.append("aggregation tile exceeds VMEM budget")
+    return lc
+
+
+def check_config(name: str, *, agg_leaves: bool = True) -> List[LayerCheck]:
+    shapes = enumerate_config(name)
+    out = []
+    for path, m, n, r in factor_shapes(shapes):
+        out += check_layer(name, path, m, n, r)
+    if agg_leaves:
+        seen = set()
+        for path, length in payload_lengths(shapes):
+            if length in seen:   # agg tiling depends only on the length
+                continue
+            seen.add(length)
+            out.append(check_agg_leaf(name, path, length))
+    return out
+
+
+def check_all(configs: Optional[List[str]] = None) -> List[LayerCheck]:
+    import repro.configs as cfgs
+
+    results = []
+    for name in (configs or cfgs.ASSIGNED):
+        results += check_config(name)
+    return results
+
+
+def uncovered(results: List[LayerCheck]) -> List[LayerCheck]:
+    """Valid but over-VMEM entries: the xfail report — each needs a new
+    block-table regime before its config runs fused on hardware."""
+    return [r for r in results if r.valid and not r.fits]
+
+
+def invalid(results: List[LayerCheck]) -> List[LayerCheck]:
+    return [r for r in results if not r.valid]
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.kernel_check",
+        description="Static Pallas block-table checks over all configs.")
+    ap.add_argument("configs", nargs="*", help="config names (default: all)")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on over-VMEM (uncovered) shapes")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every entry, not just problems")
+    args = ap.parse_args(argv)
+
+    results = check_all(args.configs or None)
+    bad, over = invalid(results), uncovered(results)
+    if args.verbose:
+        for r in results:
+            print(r.render())
+    else:
+        for r in bad + over:
+            print(r.render())
+    print(f"kernel_check: {len(results)} entries over "
+          f"{len(set(r.config for r in results))} config(s); "
+          f"{len(bad)} invalid, {len(over)} uncovered (over-VMEM)")
+    if over:
+        print("uncovered shapes (xfail — block table needs a new regime):")
+        for r in over:
+            print(f"  {r.config}:{r.path} {r.m}x{r.n} r={r.r} "
+                  f"{r.body} {r.vmem / (1 << 20):.1f}MiB")
+    if bad:
+        return 1
+    if args.strict and over:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -1,0 +1,182 @@
+"""fedlint — repo-specific static analysis for the FedPara codebase.
+
+Layer 1 of the two-layer contract checker (see ``docs/analysis.md``):
+an AST rule engine (``repro.analysis.lint.rules``) guarding the
+tracing/donation/callback/tree-order invariants every FL engine depends
+on, plus a markdown doc-link rule. Layer 2 — the compiled-program and
+kernel contract checkers — lives in ``repro.analysis.program_check``
+and ``repro.analysis.kernel_check``.
+
+Usage::
+
+    python -m repro.analysis.lint            # report findings
+    python -m repro.analysis.lint --check    # exit 1 on unsuppressed ones
+    python -m repro.analysis.lint --docs     # include FED007 doc links
+    python -m repro.analysis.lint --write-baseline   # accept current set
+
+Suppression, two mechanisms:
+
+  * inline: ``# fedlint: disable=FED002`` on the finding's line;
+  * the committed baseline (``fedlint_baseline.json`` at the repo
+    root): line-number-independent keys with a one-line justification
+    each. ``--check`` fails on any finding not covered by either, and
+    reports (without failing) baseline entries that no longer match —
+    delete them when the code they excused is gone.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.lint.rules import RULES, Finding, Project
+
+REPO_ROOT = Path(__file__).resolve().parents[4]
+DEFAULT_BASELINE = REPO_ROOT / "fedlint_baseline.json"
+
+_DISABLE_RX = re.compile(r"#\s*fedlint:\s*disable=([A-Z0-9,\s]+)")
+_MD_LINK_RX = re.compile(r"\[([^\]]*)\]\(([^)\s]+)\)")
+
+
+@dataclass
+class LintResult:
+    findings: List[Finding] = field(default_factory=list)   # unsuppressed
+    suppressed: List[Finding] = field(default_factory=list)
+    stale_baseline: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def discover(paths: Sequence[Path]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files += [f for f in sorted(p.rglob("*.py"))
+                      if "__pycache__" not in f.parts]
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def load_baseline(path: Path) -> Dict[str, str]:
+    """{finding key -> justification} from the committed baseline."""
+    if not Path(path).exists():
+        return {}
+    data = json.loads(Path(path).read_text())
+    out = {}
+    for entry in data.get("suppressions", []):
+        key = "::".join((entry["rule"], entry["path"], entry["symbol"],
+                         " ".join(entry["snippet"].split())))
+        out[key] = entry.get("justification", "")
+    return out
+
+
+def write_baseline(path: Path, findings: Sequence[Finding],
+                   justifications: Optional[Dict[str, str]] = None):
+    justifications = justifications or {}
+    entries = [{
+        "rule": f.rule,
+        "path": f.path,
+        "symbol": f.symbol,
+        "snippet": " ".join(f.snippet.split()),
+        "justification": justifications.get(f.key, "TODO: justify"),
+    } for f in findings]
+    Path(path).write_text(json.dumps(
+        {"version": 1, "suppressions": entries}, indent=2) + "\n")
+
+
+def _inline_disabled(finding: Finding, repo_root: Path) -> bool:
+    try:
+        line = (repo_root / finding.path).read_text().splitlines()[
+            finding.line - 1]
+    except (OSError, IndexError):
+        return False
+    m = _DISABLE_RX.search(line)
+    if not m:
+        return False
+    rules = {r.strip() for r in m.group(1).split(",")}
+    return finding.rule in rules
+
+
+def check_doc_links(md_files: Sequence[Path], repo_root: Path
+                    ) -> List[Finding]:
+    """FED007: every relative markdown link must resolve to a file."""
+    out: List[Finding] = []
+    for md in md_files:
+        md = Path(md)
+        try:
+            lines = md.read_text().splitlines()
+        except OSError:
+            continue
+        try:
+            rel = md.resolve().relative_to(repo_root.resolve()).as_posix()
+        except ValueError:
+            rel = md.as_posix()
+        for i, line in enumerate(lines, 1):
+            for m in _MD_LINK_RX.finditer(line):
+                target = m.group(2)
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#", "data:")):
+                    continue
+                tpath = target.split("#")[0]
+                if not tpath:
+                    continue
+                if not (md.parent / tpath).exists():
+                    out.append(Finding(
+                        "FED007", rel, i, m.start(), "<doc>",
+                        f"dead relative link `{target}` "
+                        f"(resolved against {md.parent.name}/)",
+                        line.strip()))
+    return out
+
+
+def run_lint(paths: Optional[Sequence[Path]] = None,
+             baseline_path: Optional[Path] = None,
+             select: Optional[Set[str]] = None,
+             include_docs: bool = False,
+             docs_only: bool = False,
+             repo_root: Optional[Path] = None) -> LintResult:
+    """Run the rule engine; split findings into live / suppressed."""
+    repo_root = Path(repo_root) if repo_root else REPO_ROOT
+    baseline = load_baseline(
+        baseline_path if baseline_path is not None
+        else repo_root / "fedlint_baseline.json")
+
+    findings: List[Finding] = []
+    if not docs_only:
+        src_paths = [Path(p) for p in paths] if paths else [repo_root / "src"]
+        project = Project(discover(src_paths), repo_root,
+                          src_root=repo_root / "src")
+        findings += project.run(select)
+    if include_docs or docs_only:
+        md = sorted((repo_root / "docs").glob("*.md"))
+        readme = repo_root / "README.md"
+        if readme.exists():
+            md.append(readme)
+        doc_findings = check_doc_links(md, repo_root)
+        if select:
+            doc_findings = [f for f in doc_findings if f.rule in select]
+        findings += doc_findings
+
+    result = LintResult()
+    matched_keys = set()
+    for f in findings:
+        if f.key in baseline:
+            matched_keys.add(f.key)
+            result.suppressed.append(f)
+        elif _inline_disabled(f, repo_root):
+            result.suppressed.append(f)
+        else:
+            result.findings.append(f)
+    result.stale_baseline = sorted(set(baseline) - matched_keys)
+    return result
+
+
+__all__ = ["RULES", "Finding", "LintResult", "Project", "check_doc_links",
+           "discover", "load_baseline", "run_lint", "write_baseline",
+           "REPO_ROOT", "DEFAULT_BASELINE"]

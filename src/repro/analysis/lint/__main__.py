@@ -1,0 +1,83 @@
+"""CLI for fedlint: ``python -m repro.analysis.lint [PATHS...] [flags]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import (RULES, run_lint, write_baseline)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="fedlint: FedPara-repo static analysis (FED001-FED007).")
+    ap.add_argument("paths", nargs="*", type=Path,
+                    help="files/dirs to lint (default: <repo>/src)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any unsuppressed finding remains")
+    ap.add_argument("--docs", action="store_true",
+                    help="also run FED007 doc-link checks on docs/ + README")
+    ap.add_argument("--docs-only", action="store_true",
+                    help="run only the FED007 doc-link checks")
+    ap.add_argument("--baseline", type=Path, default=None,
+                    help="baseline file (default: <repo>/fedlint_baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline and exit")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule IDs to run (e.g. FED001,FED004)")
+    ap.add_argument("--repo-root", type=Path, default=None,
+                    help="override repo root (used by tests on fixtures)")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="print only the summary line")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, desc in sorted(RULES.items()):
+            print(f"{rid}  {desc}")
+        return 0
+
+    select = ({s.strip() for s in args.select.split(",") if s.strip()}
+              if args.select else None)
+    unknown = (select or set()) - set(RULES)
+    if unknown:
+        print(f"fedlint: unknown rule(s): {', '.join(sorted(unknown))}",
+              file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        # Collect everything (ignoring the existing baseline) and accept it.
+        result = run_lint(paths=args.paths or None,
+                          baseline_path=Path("/nonexistent"),
+                          select=select, include_docs=args.docs,
+                          docs_only=args.docs_only, repo_root=args.repo_root)
+        from repro.analysis.lint import REPO_ROOT
+        root = args.repo_root or REPO_ROOT
+        target = args.baseline or (Path(root) / "fedlint_baseline.json")
+        write_baseline(target, result.findings)
+        print(f"fedlint: wrote {len(result.findings)} suppression(s) "
+              f"to {target}")
+        return 0
+
+    result = run_lint(paths=args.paths or None, baseline_path=args.baseline,
+                      select=select, include_docs=args.docs,
+                      docs_only=args.docs_only, repo_root=args.repo_root)
+
+    if not args.quiet:
+        for f in result.findings:
+            print(f.render())
+        for key in result.stale_baseline:
+            print(f"stale-baseline: {key} (no longer matches; "
+                  f"remove from fedlint_baseline.json)")
+    n, s = len(result.findings), len(result.suppressed)
+    print(f"fedlint: {n} finding(s), {s} suppressed, "
+          f"{len(result.stale_baseline)} stale baseline entr"
+          f"{'y' if len(result.stale_baseline) == 1 else 'ies'}")
+    if args.check and not result.ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,7 @@ divided by chip count for the usefulness ratio.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
 HBM_BW = 819e9            # bytes/s per chip

@@ -21,7 +21,6 @@ import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import msgpack
 import numpy as np
 

@@ -15,12 +15,11 @@ cross-pod payload of the 'full' sync mode drops too.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.6: top-level export, `check_vma` kwarg
     from jax import shard_map as _shard_map

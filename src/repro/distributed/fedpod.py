@@ -17,8 +17,7 @@ granularity (beyond-paper; see DESIGN.md).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

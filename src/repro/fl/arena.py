@@ -34,7 +34,7 @@ an int32 row vector bumped by the same arrival mask.
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -40,13 +40,11 @@ batch, not C sequential launches.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.parameterization import apply_rank_mask
@@ -54,13 +52,7 @@ from repro.fl import comm
 from repro.fl.codecs import Codec, make_codec
 from repro.fl.client import ClientConfig, _step_math, strategy_post
 from repro.fl.strategies import (
-    Strategy,
-    tree_hetero_wmean_stacked,
-    tree_index,
-    tree_stack,
-    tree_wmean_stacked,
-    tree_zeros,
-)
+    Strategy, tree_hetero_wmean_stacked, tree_wmean_stacked, tree_zeros)
 
 
 def _tree_where(cond, a, b):

@@ -22,8 +22,7 @@ from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.fl.strategies import Strategy, tree_add, tree_sub, tree_zeros
-from repro.optim import apply_updates, sgd
+from repro.fl.strategies import Strategy, tree_sub, tree_zeros
 
 
 @dataclass
@@ -76,10 +75,14 @@ def _step_math(params, opt_mu, batch, global_params, client_state,
     return params, opt_mu, loss
 
 
-@functools.partial(jax.jit, static_argnames=("loss_fn", "strategy_name", "lr_mom"))
-def _local_step(params, opt_mu, batch, global_params, client_state,
-                loss_fn, strategy_name: str, lr_mom: Tuple[float, float, float]):
-    lr, momentum, wd = lr_mom
+@functools.partial(jax.jit, static_argnames=("loss_fn", "strategy_name", "mom_wd"))
+def _local_step(params, opt_mu, batch, global_params, client_state, lr,
+                loss_fn, strategy_name: str, mom_wd: Tuple[float, float]):
+    # lr is TRACED: the server decays it every round (lr * decay**round),
+    # so baking it static would recompile this program each round. The
+    # momentum/wd pair stays static — it selects the step-math branch and
+    # never changes within a run.
+    momentum, wd = mom_wd
     return _step_math(params, opt_mu, batch, global_params, client_state,
                       loss_fn, strategy_name, lr, momentum, wd)
 
@@ -122,8 +125,9 @@ def local_update(
     n_steps, last_loss = 0, 0.0
     for batch in batches:
         params, mu, loss = _local_step(
-            params, mu, batch, global_params, state, loss_fn,
-            strategy.name, (lr, cfg.momentum, cfg.weight_decay))
+            params, mu, batch, global_params, state,
+            jnp.asarray(lr, jnp.float32), loss_fn,
+            strategy.name, (cfg.momentum, cfg.weight_decay))
         n_steps += 1
         last_loss = loss
     # ---- strategy post-processing (shared with the batched engine)

@@ -7,11 +7,10 @@ The paper's cost metric: total bits = 2 × #participants × model_size ×
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.parameterization import tree_bytes  # dtype-aware; re-exported
 

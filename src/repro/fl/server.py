@@ -80,8 +80,7 @@ it to fp32 tolerance with bitwise-identical arrival masks.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -94,14 +93,8 @@ from repro.data.loader import client_epochs, stack_client_epochs
 from repro.fl import codecs, comm
 from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.strategies import (
-    Strategy,
-    tree_broadcast,
-    tree_hetero_wmean_stacked,
-    tree_index,
-    tree_mean,
-    tree_stack,
-    tree_zeros,
-)
+    Strategy, tree_broadcast, tree_hetero_wmean_stacked, tree_index,
+    tree_mean, tree_stack)
 from repro.fl.trace import spawn_seeds
 
 FEDPER_LOCAL_KEYS = ("head", "fc2", "b2")   # model-specific last layers

@@ -7,8 +7,8 @@ layer parameterization.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional
 
 import jax
 import jax.numpy as jnp

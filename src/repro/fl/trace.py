@@ -35,7 +35,7 @@ engine (``repro.fl.arena``) keep the *device* as the only O(C) store.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -33,11 +33,10 @@ Oracle: ``repro.kernels.ref.tree_dequant_acc_ref`` (dense jnp).
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 

@@ -4,11 +4,11 @@ correct, shardable, zero device allocation.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeCfg
 from repro.distributed.sharding import AxisRules, tree_param_specs

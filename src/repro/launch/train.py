@@ -20,26 +20,20 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import os
 import time
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import SHAPES, get_arch
+from repro.configs import get_arch
 from repro.configs.base import ParamCfg, ShapeCfg
 from repro.data import ShardedBatcher, make_token_lm_dataset
 from repro.distributed.fedpod import (
-    make_dp_step,
-    make_fed_round,
-    pod_specs,
-    stack_for_pods,
-)
-from repro.distributed.sharding import tree_param_specs, use_rules
+    make_dp_step, make_fed_round, stack_for_pods)
+from repro.distributed.sharding import use_rules
 from repro.launch import specs as specs_mod
 from repro.nn.transformer import ModelOptions, build_model
 from repro.optim import adamw, chain_clip

@@ -8,13 +8,13 @@ weights (the paper pre-composes W for inference).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import parameterization as par
-from repro.configs.base import ArchConfig, ParamCfg
+from repro.configs.base import ParamCfg
 
 
 # ----------------------------------------------------------------- dispatch

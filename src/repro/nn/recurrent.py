@@ -13,7 +13,7 @@ materialized, forward or backward) with no model-code changes.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

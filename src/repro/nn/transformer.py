@@ -10,7 +10,6 @@ Layer iteration supports two modes:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 

@@ -7,7 +7,7 @@ three FC layers (512-512-#classes) kept dense, same gamma for all convs.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

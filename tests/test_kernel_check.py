@@ -1,0 +1,83 @@
+"""Kernel block-table contract: every layer shape every shipped config
+produces must resolve to a valid tile, and the set of shapes the table
+can NOT serve within the VMEM budget is pinned here — an xfail-style
+report, not a silent fallback.
+"""
+import pytest
+
+from repro.analysis import kernel_check as kc
+from repro.configs import ASSIGNED
+
+# The known over-VMEM shapes: llama3-405B's 16384x53248 FFN matrices in
+# the dY-factor backward body (~18.6 MiB > 16 MiB). Adding a block-table
+# regime for them shrinks this set; adding a new config may grow it —
+# either way, deliberately, here.
+KNOWN_UNCOVERED = {
+    ("llama3-405b", 16384, 53248, "dfy"),
+    ("llama3-405b", 53248, 16384, "dfy"),
+}
+
+
+def _key(entry):
+    return (entry.config, entry.m, entry.n, entry.body)
+
+
+@pytest.fixture(scope="module")
+def results():
+    return kc.check_all()
+
+
+def test_every_config_enumerates_factor_layers(results):
+    covered = {r.config for r in results}
+    assert covered == set(ASSIGNED)
+    assert all(any(r.config == c and r.body == "fwd" for r in results)
+               for c in ASSIGNED), "a config produced no factor layers"
+
+
+def test_no_invalid_tiles(results):
+    bad = kc.invalid(results)
+    assert bad == [], "\n".join(r.render() for r in bad)
+
+
+def test_uncovered_set_is_exactly_the_known_one(results):
+    over = {_key(r) for r in kc.uncovered(results)}
+    report = "\n".join(r.render() for r in kc.uncovered(results))
+    assert over == KNOWN_UNCOVERED, (
+        f"uncovered-shape report changed:\n{report}\n"
+        f"update KNOWN_UNCOVERED deliberately if the block table or a "
+        f"config changed")
+
+
+def test_aggregation_tiles_always_fit(results):
+    agg = [r for r in results if r.body == "agg"]
+    assert agg, "no aggregation entries enumerated"
+    assert all(r.valid and r.fits for r in agg), "\n".join(
+        r.render() for r in agg if not (r.valid and r.fits))
+
+
+def test_vmem_model_matches_hand_count():
+    # fwd body, blocks (8, 32, 128), r=16: streamed = x(8x32) +
+    # factors 2*(32+128)*16 + out(8x128); scratch = 8x128 — all fp32.
+    streamed = 8 * 32 + 2 * (32 * 16 + 128 * 16) + 8 * 128
+    expect = (2 * streamed + 8 * 128) * 4
+    assert kc.kernel_vmem("fwd", 8, 32, 128, 16) == expect
+
+
+def test_selected_blocks_cover_every_factor_shape():
+    from repro.kernels import blocks
+
+    for name in ASSIGNED:
+        for path, m, n, r in kc.factor_shapes(kc.enumerate_config(name)):
+            bb, bm, bn = blocks.select_blocks(m, n, r)
+            assert bb > 0 and bm > 0 and bn > 0, (name, path)
+            # padded grid covers the operand
+            assert -(-m // bm) * bm >= m and -(-n // bn) * bn >= n
+
+
+def test_cli_reports_without_failing():
+    assert kc.main([]) == 0
+
+
+def test_cli_strict_fails_on_the_known_uncovered():
+    assert kc.main(["--strict", "llama3-405b"]) == 1
+    assert kc.main(["--strict", "qwen3-8b"]) == 0

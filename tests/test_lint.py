@@ -1,0 +1,248 @@
+"""fedlint layer 1: rule engine, baseline, CLI, and the repo itself.
+
+The seeded-violation fixture is the negative control the acceptance
+criteria ask for: a tiny fake repo whose one module violates FED001-006
+and whose docs contain a dead link — ``--check`` must exit non-zero on
+it, and exit zero on this repository.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (check_doc_links, load_baseline, run_lint,
+                                 write_baseline)
+from repro.analysis.lint.__main__ import main as lint_main
+from repro.analysis.lint.rules import RULES, Project
+
+REPO = Path(__file__).resolve().parents[1]
+
+# One violation per AST rule; parses cleanly, never executed.
+_BAD_SRC = '''\
+import functools
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_step(x):
+    noise = np.random.normal(size=3)
+    scale = float(x)
+    host = np.asarray(x)
+    return x * scale + noise.sum() + host.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("missing",))
+def bad_static(x, flag):
+    return x
+
+
+step = jax.jit(lambda a, b: (a + b, b), donate_argnums=(0,))
+
+
+def loop(a, b):
+    out, b = step(a, b)
+    return out + a
+
+
+def run_cb(x):
+    return jax.pure_callback(lambda v: v, x, x)
+
+
+def build(keys):
+    return {k: 0 for k in set(keys)}
+'''
+
+
+@pytest.fixture
+def violation_repo(tmp_path):
+    pkg = tmp_path / "src" / "pkg"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")
+    (pkg / "bad.py").write_text(_BAD_SRC)
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    (docs / "guide.md").write_text(
+        "See [the missing page](nonexistent.md) and "
+        "[the web](https://example.com).\n")
+    return tmp_path
+
+
+# ------------------------------------------------------------ rule engine
+
+def test_fixture_trips_every_ast_rule(violation_repo):
+    result = run_lint(repo_root=violation_repo)
+    hit = {f.rule for f in result.findings}
+    assert hit == {"FED001", "FED002", "FED003", "FED004", "FED005",
+                   "FED006"}, sorted(f.render() for f in result.findings)
+    assert not result.ok
+
+
+def test_fed002_counts_each_sync_site(violation_repo):
+    result = run_lint(repo_root=violation_repo, select={"FED002"})
+    # float(x) and np.asarray(x) are separate findings
+    assert len(result.findings) == 2
+
+
+def test_fed004_names_the_donated_argument(violation_repo):
+    result = run_lint(repo_root=violation_repo, select={"FED004"})
+    (f,) = result.findings
+    assert "`a`" in f.message and "position 0" in f.message
+
+
+def test_doc_link_rule(violation_repo):
+    findings = check_doc_links(
+        [violation_repo / "docs" / "guide.md"], violation_repo)
+    assert [f.rule for f in findings] == ["FED007"]
+    assert "nonexistent.md" in findings[0].message
+
+
+def test_rebind_on_call_line_kills_fed004_taint(tmp_path):
+    # `x, mu = step(x, mu)` is the donation-safe idiom every engine uses:
+    # the store on the call's own line rebinds the name to the NEW output.
+    pkg = tmp_path / "src" / "m"
+    pkg.mkdir(parents=True)
+    (pkg / "ok.py").write_text(
+        "import jax\n"
+        "step = jax.jit(lambda a, b: (a + b, b), donate_argnums=(0,))\n"
+        "def loop(a, b):\n"
+        "    a, b = step(a, b)\n"
+        "    return a + b\n")
+    result = run_lint(repo_root=tmp_path, select={"FED004"})
+    assert result.ok, [f.render() for f in result.findings]
+
+
+def test_traced_propagation_is_cross_module(tmp_path):
+    # helper() is only traced because a jitted body in another module
+    # imports and calls it — the project-wide call graph must see that.
+    pkg = tmp_path / "src" / "p"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")
+    (pkg / "helper.py").write_text(
+        "import numpy as np\n"
+        "def helper(x):\n"
+        "    return x + np.random.uniform()\n")
+    (pkg / "engine.py").write_text(
+        "import jax\n"
+        "from p.helper import helper\n"
+        "@jax.jit\n"
+        "def round_program(x):\n"
+        "    return helper(x)\n")
+    result = run_lint(repo_root=tmp_path, select={"FED001"})
+    assert [f.symbol for f in result.findings] == ["helper"]
+
+
+def test_host_callback_callee_is_exempt(tmp_path):
+    # A pure_callback callee runs host-side: host RNG there is fine.
+    pkg = tmp_path / "src" / "p"
+    pkg.mkdir(parents=True)
+    (pkg / "m.py").write_text(
+        "import jax\n"
+        "import numpy as np\n"
+        "def fetch(i):\n"
+        "    return np.random.normal(size=3)\n"
+        "@jax.jit\n"
+        "def prog(i, spec):\n"
+        "    return jax.pure_callback(fetch, spec, i)\n")
+    result = run_lint(repo_root=tmp_path, select={"FED001"})
+    assert result.ok, [f.render() for f in result.findings]
+
+
+# -------------------------------------------------- suppression mechanisms
+
+def test_inline_disable_suppresses(tmp_path):
+    pkg = tmp_path / "src" / "m"
+    pkg.mkdir(parents=True)
+    (pkg / "a.py").write_text(
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return float(x)  # fedlint: disable=FED002\n")
+    result = run_lint(repo_root=tmp_path)
+    assert result.ok and len(result.suppressed) == 1
+
+
+def test_baseline_roundtrip_and_staleness(violation_repo):
+    live = run_lint(repo_root=violation_repo)
+    bl = violation_repo / "fedlint_baseline.json"
+    write_baseline(bl, live.findings)
+    assert len(load_baseline(bl)) == len({f.key for f in live.findings})
+
+    again = run_lint(repo_root=violation_repo)
+    assert again.ok and len(again.suppressed) == len(live.findings)
+    assert again.stale_baseline == []
+
+    # remove the offending module: every entry must be reported stale
+    (violation_repo / "src" / "pkg" / "bad.py").write_text("x = 1\n")
+    stale = run_lint(repo_root=violation_repo)
+    assert stale.ok and len(stale.stale_baseline) == len(live.findings)
+
+
+def test_baseline_key_survives_line_shift(violation_repo):
+    live = run_lint(repo_root=violation_repo)
+    write_baseline(violation_repo / "fedlint_baseline.json", live.findings)
+    bad = violation_repo / "src" / "pkg" / "bad.py"
+    bad.write_text("# a new leading comment shifts every line\n"
+                   + bad.read_text())
+    shifted = run_lint(repo_root=violation_repo)
+    assert shifted.ok, [f.render() for f in shifted.findings]
+
+
+# ------------------------------------------------------------------- CLI
+
+def test_cli_check_fails_on_fixture(violation_repo):
+    rc = lint_main(["--check", "-q", "--repo-root", str(violation_repo)])
+    assert rc == 1
+
+
+def test_cli_check_includes_fixture_docs(violation_repo):
+    rc = lint_main(["--check", "-q", "--docs-only",
+                    "--repo-root", str(violation_repo)])
+    assert rc == 1
+
+
+def test_cli_rejects_unknown_rule(violation_repo, capsys):
+    rc = lint_main(["--select", "FED999",
+                    "--repo-root", str(violation_repo)])
+    assert rc == 2
+
+
+def test_cli_write_baseline_then_check_passes(violation_repo):
+    assert lint_main(["--write-baseline", "-q",
+                      "--repo-root", str(violation_repo)]) == 0
+    assert lint_main(["--check", "-q",
+                      "--repo-root", str(violation_repo)]) == 0
+
+
+def test_cli_check_passes_on_this_repo():
+    # Acceptance criterion: the shipped source tree is clean under its
+    # committed baseline. Run as a real subprocess = the CI lint job.
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--check", "--docs"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_repo_baseline_has_no_stale_entries():
+    result = run_lint(repo_root=REPO, include_docs=True)
+    assert result.ok, [f.render() for f in result.findings]
+    assert result.stale_baseline == []
+    # every committed suppression carries a real justification
+    for just in load_baseline(REPO / "fedlint_baseline.json").values():
+        assert just and "TODO" not in just
+
+
+def test_rule_catalog_is_documented():
+    catalog = (REPO / "docs" / "analysis.md").read_text()
+    for rule in RULES:
+        assert rule in catalog, f"{rule} missing from docs/analysis.md"
+
+
+def test_project_reports_parse_errors(tmp_path):
+    pkg = tmp_path / "src" / "m"
+    pkg.mkdir(parents=True)
+    (pkg / "broken.py").write_text("def f(:\n")
+    proj = Project([pkg / "broken.py"], tmp_path)
+    assert any(f.rule == "PARSE" for f in proj.run())

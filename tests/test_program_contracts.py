@@ -1,0 +1,94 @@
+"""fedlint Layer 2: donation aliasing, wire-dtype, and host-callback
+contracts on the engines' real compiled round programs — plus negative
+controls proving each detector actually detects.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import program_check as pc
+
+
+# ------------------------------------------------------- real programs
+
+def test_donation_aliases_in_compiled_hlo():
+    for r in pc.check_donation():
+        assert r.ok, r.render()
+
+
+def test_wire_payloads_stay_at_wire_dtype():
+    for r in pc.check_wire_dtype():
+        assert r.ok, r.render()
+
+
+def test_exactly_the_registered_callbacks():
+    for r in pc.check_callbacks():
+        assert r.ok, r.render()
+
+
+@pytest.mark.slow
+def test_cli_fast_mode_passes():
+    assert pc.main(["--fast"]) == 0
+
+
+# ---------------------------------------------------- negative controls
+
+def test_widening_detector_catches_host_side_dequant():
+    # the anti-design: int8 wire payload widened to f32 OUTSIDE any
+    # kernel — exactly what the fused dequant-accumulate path avoids
+    def bad_agg(q, coeff):
+        return (q.astype(jnp.float32) * coeff[:, None]).sum(0)
+
+    jaxpr = jax.make_jaxpr(bad_agg)(
+        jax.ShapeDtypeStruct((4, 64), jnp.int8),
+        jax.ShapeDtypeStruct((4,), jnp.float32)).jaxpr
+    found = pc.widening_converts(jaxpr)
+    assert len(found) == 1 and "int8" in found[0]
+
+
+def test_widening_detector_ignores_non_wire_dtypes():
+    def ok(x):
+        return x.astype(jnp.float32).sum()
+
+    jaxpr = jax.make_jaxpr(ok)(
+        jax.ShapeDtypeStruct((8,), jnp.bfloat16)).jaxpr
+    assert pc.widening_converts(jaxpr) == []
+
+
+def test_alias_detector_requires_donation():
+    def f(x):
+        return x + 1.0
+
+    x = jax.ShapeDtypeStruct((128,), jnp.float32)
+    plain = jax.jit(f).lower(x).compile().as_text()
+    donated = jax.jit(f, donate_argnums=(0,)).lower(x).compile().as_text()
+    assert pc.hlo_aliases(plain) == []
+    assert pc.hlo_aliases(donated) != []
+
+
+def test_callback_detector_names_the_callee():
+    def fetch(i):
+        return np.zeros((3,), np.float32)
+
+    def prog(i):
+        return jax.pure_callback(
+            fetch, jax.ShapeDtypeStruct((3,), jnp.float32), i)
+
+    jaxpr = jax.make_jaxpr(prog)(jnp.int32(0)).jaxpr
+    names = pc.callback_callees(jaxpr)
+    assert len(names) == 1 and names[0].endswith("fetch")
+
+
+def test_compile_counter_counts_fresh_compiles_only():
+    @jax.jit
+    def g(x):
+        return x * 2.0
+
+    with pc.CompileCounter() as cc:
+        g(jnp.ones((4,)))       # fresh compile
+        g(jnp.ones((4,)))       # cache hit
+    assert cc.count == 1
+    with pc.CompileCounter() as cc2:
+        g(jnp.ones((4,)))       # still cached
+    assert cc2.count == 0

@@ -1,0 +1,60 @@
+"""Zero-retrace contract: at a fixed cohort shape, rounds 2..3 compile
+NOTHING new, for every engine × state-store combination.
+
+This is the regression the per-round lr decay once caused (a static lr
+argument recompiled the local step every round) and the reason
+``_local_step`` now takes lr traced. The counter hooks jax's dispatch
+logger, so a failure names exactly which program recompiled.
+"""
+import pytest
+
+from repro.analysis import program_check as pc
+
+
+@pytest.mark.parametrize("engine,store", pc.RETRACE_MATRIX,
+                         ids=[f"{e}-{s}" for e, s in pc.RETRACE_MATRIX])
+def test_fixed_shape_rounds_compile_nothing(engine, store):
+    events = pc.count_retrace(engine, store)
+    assert events == [], (
+        f"{engine}/{store}: rounds 2-3 recompiled {sorted(set(events))}")
+
+
+def test_lr_decay_does_not_retrace():
+    # lr changes every round (0.1 * decay**t); it must be traced, not
+    # baked into the compile cache key.
+    def factory():
+        srv = pc.make_mini_server("sequential", "dict")
+        srv.scfg.lr_decay = 0.9
+        return srv
+
+    events = pc.count_retrace("sequential", "dict", server_factory=factory)
+    assert events == [], f"lr decay retraced: {sorted(set(events))}"
+
+
+def test_client_chunk_change_recompiles_round_program_once():
+    srv = pc.make_mini_server("streaming", "dict")
+    srv.run_round()
+    srv.run_round()
+
+    srv.scfg.client_chunk = 2
+    with pc.CompileCounter() as cc:
+        srv.run_round()
+    round_prog = [e for e in cc.events if "_round_program" in e]
+    assert len(round_prog) == 1, (
+        f"chunk change should recompile the round program exactly once, "
+        f"got {cc.events}")
+
+    # and the new shape is cached: the next round is clean again
+    with pc.CompileCounter() as cc2:
+        srv.run_round()
+    assert cc2.events == [], f"post-rechunk round recompiled: {cc2.events}"
+
+
+def test_strategy_state_does_not_retrace():
+    # scaffold threads per-client control variates through every round;
+    # the state tree must stay shape-stable.
+    def factory():
+        return pc.make_mini_server("streaming", "dict", strategy="scaffold")
+
+    events = pc.count_retrace("streaming", "dict", server_factory=factory)
+    assert events == [], f"scaffold state retraced: {sorted(set(events))}"
