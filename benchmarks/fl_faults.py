@@ -1,0 +1,219 @@
+"""Chaos robustness: accuracy under injected faults, with and without
+the compiled upload defenses, plus crash/resume parity.
+
+Runs the MLP-FedPara synthetic FL task four ways — fault-free baseline,
+20% mixed faults with defense='none' / 'clip' / 'trimmed' — and records
+final eval accuracy, whether the global model stayed finite, rejection
+and retry counts, and the per-kind fault histogram. The headline
+numbers: defense='clip' holds accuracy within a small absolute gap of
+the fault-free run while defense='none' degrades (or NaNs outright),
+and a run killed mid-way resumes from its checkpoint bitwise.
+
+Writes ``BENCH_robust.json`` via ``benchmarks.common.write_artifact``.
+
+Run: PYTHONPATH=src python -m benchmarks.fl_faults [--rounds 10]
+     PYTHONPATH=src python -m benchmarks.fl_faults --smoke   # CI gate
+"""
+import argparse
+import json
+import time
+
+FAULT_RATE = 0.2
+SCENARIOS = (
+    ("clean", "none", 0.0),
+    ("faults_undefended", "none", FAULT_RATE),
+    ("faults_clip", "clip", FAULT_RATE),
+    ("faults_trimmed", "trimmed", FAULT_RATE),
+)
+
+
+def build_server(defense: str, fault_rate: float, rounds: int, clients: int,
+                 seed: int = 0, engine: str = "batched",
+                 recover_retries: int = 1):
+    import jax
+
+    from repro.configs.base import ParamCfg
+    from repro.data import dirichlet_partition, make_image_dataset, \
+        train_test_split
+    from repro.fl import ClientConfig, FaultPlan, FLServer, ServerConfig, \
+        make_strategy
+    from repro.nn import recurrent as rec
+
+    ds = make_image_dataset(2400, 10, size=16, channels=1, noise=0.3,
+                            seed=seed)
+    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+    tr, te = train_test_split(data)
+    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=0.3,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(seed), cfg)
+    parts = dirichlet_partition(tr["y"], clients, 0.5, seed=seed)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    def eval_fn(p):
+        return float(rec.mlp_accuracy(p, cfg, {"x": te["x"][:400],
+                                               "y": te["y"][:400]}))
+
+    plan = FaultPlan(rate=fault_rate, seed=seed) if fault_rate > 0 else None
+    return FLServer(loss_fn, params, tr, parts, make_strategy("fedavg"),
+                    ClientConfig(lr=0.1, batch=32, epochs=2),
+                    ServerConfig(clients=clients, participation=0.34,
+                                 rounds=rounds, engine=engine,
+                                 uplink_codec="int8", downlink_codec="int8",
+                                 defense=defense, faults=plan,
+                                 recover_retries=(recover_retries
+                                                  if plan else 0),
+                                 seed=seed),
+                    eval_fn=eval_fn)
+
+
+def _finite_global(srv) -> bool:
+    import jax
+    import numpy as np
+
+    return all(bool(np.isfinite(np.asarray(x)).all())
+               for x in jax.tree.leaves(srv.global_params))
+
+
+def run_scenario(name, defense, fault_rate, rounds, clients):
+    srv = build_server(defense, fault_rate, rounds, clients)
+    t0 = time.time()
+    hist = srv.run()
+    elapsed = time.time() - t0
+    kinds = {}
+    for r in hist:
+        for k, v in r.get("fault_kinds", {}).items():
+            kinds[k] = kinds.get(k, 0) + v
+    return {
+        "scenario": name,
+        "defense": defense,
+        "fault_rate": fault_rate,
+        "acc": hist[-1].get("eval"),
+        "finite_global": _finite_global(srv),
+        "rejected_total": sum(r.get("rejected", 0) for r in hist),
+        "retries_total": sum(r.get("retries", 0) for r in hist),
+        "nonfinite_loss_rounds": sum(
+            1 for r in hist if r.get("nonfinite_losses", 0) > 0),
+        "fault_kinds": kinds,
+        "seconds": elapsed,
+    }
+
+
+def check_resume_parity(rounds: int, clients: int) -> dict:
+    """Kill-after-round-k resume must reproduce the uninterrupted run
+    bitwise (global params byte compare + identical history keys)."""
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager
+
+    def gbytes(srv):
+        return b"".join(np.asarray(x).tobytes()
+                        for x in jax.tree.leaves(srv.global_params))
+
+    k = rounds // 2
+    srv_a = build_server("clip", FAULT_RATE, rounds, clients)
+    hist_a = srv_a.run()
+    with tempfile.TemporaryDirectory() as d:
+        srv_b = build_server("clip", FAULT_RATE, rounds, clients)
+        srv_b.run(rounds=k, ckpt=CheckpointManager(d, keep=0))
+        del srv_b
+        srv_c = build_server("clip", FAULT_RATE, rounds, clients)
+        srv_c.restore_checkpoint(CheckpointManager(d, keep=0))
+        hist_c = srv_c.run(rounds=rounds, ckpt=CheckpointManager(d, keep=0))
+    key = lambda h: [(r["round"], r["mean_loss"], r["up_bytes"]) for r in h]  # noqa: E731
+    return {
+        "resumed_at": k,
+        "history_match": key(hist_a) == key(hist_c),
+        "global_bitwise": gbytes(srv_a) == gbytes(srv_c),
+    }
+
+
+def run_all(rounds: int = 10, clients: int = 12):
+    scen = [run_scenario(name, defense, rate, rounds, clients)
+            for name, defense, rate in SCENARIOS]
+    clean = next(s for s in scen if s["scenario"] == "clean")
+    for s in scen:
+        s["acc_gap_vs_clean"] = (None if s["acc"] is None
+                                 or clean["acc"] is None
+                                 else clean["acc"] - s["acc"])
+    return {
+        "benchmark": "fl_faults",
+        "what": "final accuracy under 20% mixed client faults with and "
+                "without compiled upload defenses (batched engine, int8 "
+                "links), plus bitwise crash/resume parity",
+        "clients": clients,
+        "rounds": rounds,
+        "fault_rate": FAULT_RATE,
+        "scenarios": scen,
+        "resume": check_resume_parity(rounds, clients),
+    }
+
+
+def csv_rows(rounds: int = 6, clients: int = 12):
+    art = run_all(rounds=rounds, clients=clients)
+    rows = []
+    for s in art["scenarios"]:
+        acc = "nan" if s["acc"] is None else f"{s['acc']:.3f}"
+        rows.append((f"fl_faults_{s['scenario']}", s["seconds"] * 1e6,
+                     f"acc={acc};finite={int(s['finite_global'])};"
+                     f"rejected={s['rejected_total']}"))
+    r = art["resume"]
+    rows.append(("fl_faults_resume", 0.0,
+                 f"bitwise={int(r['global_bitwise'])};"
+                 f"history={int(r['history_match'])}"))
+    return rows
+
+
+def smoke(rounds: int = 10, clients: int = 12) -> int:
+    """Blocking CI gate: 10 chaos rounds at 20% faults under
+    defense='clip' must keep the global model finite, reject at least
+    one upload, and resume bitwise from a mid-run checkpoint."""
+    s = run_scenario("smoke_clip", "clip", FAULT_RATE, rounds, clients)
+    failures = []
+    if not s["finite_global"]:
+        failures.append("global model went non-finite under defense=clip")
+    if not (s["fault_kinds"] or s["rejected_total"]):
+        failures.append("no faults were drawn — schedule is dead")
+    r = check_resume_parity(rounds, clients)
+    if not r["global_bitwise"]:
+        failures.append("resume is not bitwise")
+    if not r["history_match"]:
+        failures.append("resumed history diverges")
+    print(json.dumps({"smoke": s, "resume": r}, indent=1))
+    for f in failures:
+        print("FAIL:", f)
+    print("chaos smoke:", "FAIL" if failures else "PASS")
+    return 1 if failures else 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--smoke", action="store_true",
+                    help="blocking chaos gate (no artifact): finite "
+                         "global under defense=clip + bitwise resume")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke(rounds=args.rounds, clients=args.clients))
+    art = run_all(rounds=args.rounds, clients=args.clients)
+
+    from benchmarks.common import write_artifact
+
+    path = write_artifact("BENCH_robust.json", art)
+    print(json.dumps([{k: s[k] for k in ("scenario", "acc",
+                                         "acc_gap_vs_clean",
+                                         "finite_global",
+                                         "rejected_total")}
+                      for s in art["scenarios"]], indent=1))
+    print(json.dumps(art["resume"], indent=1))
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

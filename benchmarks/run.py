@@ -14,6 +14,7 @@ MODULES = (
     ("fl_streaming", ("stream",)),
     ("fl_hetero", ("hetero",)),
     ("fl_fleet_smoke", ("fleet",)),
+    ("fl_faults", ("faults", "robust", "chaos")),
 )
 
 

@@ -176,11 +176,16 @@ def _mini_task(seed: int = 0):
 def make_mini_server(engine: str, state_store: str = "dict", *,
                      data_stream: str = "eager", uplink_codec: str = "",
                      client_chunk: int = 4, participation: float = 1.0,
-                     strategy: str = "fedavg", seed: int = 0):
+                     strategy: str = "fedavg", seed: int = 0,
+                     defense: str = "none", fault_rate: float = 0.0,
+                     **server_kw):
     """A tiny but real FLServer (8 clients, 64-16-4 fedpara MLP) whose
-    round programs have every contract of the full-size ones."""
+    round programs have every contract of the full-size ones.
+    ``fault_rate > 0`` attaches a :class:`repro.fl.faults.FaultPlan`;
+    extra ``server_kw`` forward to :class:`ServerConfig`."""
     from repro.configs.base import ParamCfg
     from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+    from repro.fl.faults import FaultPlan
     from repro.nn import recurrent as rec
 
     data, parts = _mini_task(seed)
@@ -192,13 +197,15 @@ def make_mini_server(engine: str, state_store: str = "dict", *,
     def loss_fn(p, b):
         return rec.mlp_loss(p, cfg, b)
 
+    plan = FaultPlan(rate=fault_rate, seed=seed) if fault_rate > 0 else None
     return FLServer(
         loss_fn, params, data, parts, make_strategy(strategy),
         ClientConfig(lr=0.1, batch=16, epochs=1),
         ServerConfig(clients=N_CLIENTS, participation=participation,
                      rounds=3, engine=engine, client_chunk=client_chunk,
                      state_store=state_store, data_stream=data_stream,
-                     uplink_codec=uplink_codec, seed=seed))
+                     uplink_codec=uplink_codec, seed=seed,
+                     defense=defense, faults=plan, **server_kw))
 
 
 def _spec(x):
@@ -371,12 +378,31 @@ def check_retrace() -> List[CheckResult]:
     return out
 
 
+def check_defense_retrace() -> List[CheckResult]:
+    """Chaos knobs are DATA, not program constants: with faults drawn
+    every round and the defense gate active, rounds 2-3 must still
+    compile zero new XLA programs (the per-round fault arrays and the
+    varying drawn-fault sets ride in as traced arguments)."""
+    out = []
+    for engine, defense in (("batched", "clip"), ("batched", "trimmed"),
+                            ("streaming", "clip")):
+        events = count_retrace(
+            engine, "dict",
+            server_factory=lambda e=engine, d=defense: make_mini_server(
+                e, "dict", defense=d, fault_rate=0.4, uplink_codec="int8"))
+        out.append(CheckResult(
+            f"retrace:{engine}:defense={defense}+faults", not events,
+            "0 recompiles in rounds 2-3" if not events
+            else f"{len(events)} recompile(s): {sorted(set(events))}"))
+    return out
+
+
 # ------------------------------------------------------------------- CLI
 
 def run_all(fast: bool = False) -> List[CheckResult]:
     results = check_donation() + check_wire_dtype() + check_callbacks()
     if not fast:
-        results += check_retrace()
+        results += check_retrace() + check_defense_retrace()
     return results
 
 

@@ -40,25 +40,40 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._pending: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------- save
     def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         if self.async_save:
-            self.wait()
+            self.wait()   # re-raises a previous async save's failure
             self._pending = threading.Thread(
-                target=self._write, args=(step, host_tree, extra), daemon=True
-            )
+                target=self._write_guarded, args=(step, host_tree, extra),
+                daemon=True)
             self._pending.start()
         else:
             self._write(step, host_tree, extra)
         return os.path.join(self.dir, f"step_{step:010d}")
 
+    def _write_guarded(self, step: int, host_tree: Any,
+                       extra: Optional[Dict]):
+        # daemon-thread body: a raised exception would otherwise die with
+        # the thread and the caller would keep training on the silent
+        # assumption that the checkpoint exists — capture it and let the
+        # next wait()/save() raise it on the caller's thread
+        try:
+            self._write(step, host_tree, extra)
+        except BaseException as e:   # noqa: BLE001  (re-raised in wait)
+            self._error = e
+
     def wait(self):
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _write(self, step: int, host_tree: Any, extra: Optional[Dict]):
         final = os.path.join(self.dir, f"step_{step:010d}")
@@ -104,10 +119,7 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: Optional[int], target_tree: Any,
-                shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
-        """Restore into the structure of ``target_tree``; optionally
-        device_put against per-leaf shardings (elastic re-shard)."""
+    def _load_items(self, step: Optional[int]) -> Tuple[Dict, Dict, int]:
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -123,7 +135,22 @@ class CheckpointManager:
             raw = data[f"a{i}"]
             dt = np.dtype(manifest["dtypes"][i])
             by_path[p] = raw.view(dt).reshape(manifest["shapes"][i])
+        return by_path, manifest["extra"], int(manifest["step"])
 
+    def restore_items(self, step: Optional[int] = None
+                      ) -> Tuple[Dict, Dict, int]:
+        """Structure-free restore: ``(by_path, extra, step)`` where
+        ``by_path`` maps "/"-joined tree paths to host arrays. For
+        callers whose checkpointed structure is data-dependent (e.g. an
+        FL server's per-client state dicts) and therefore cannot supply
+        a target_tree before reading the checkpoint."""
+        return self._load_items(step)
+
+    def restore(self, step: Optional[int], target_tree: Any,
+                shardings: Optional[Any] = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``target_tree``; optionally
+        device_put against per-leaf shardings (elastic re-shard)."""
+        by_path, extra, _ = self._load_items(step)
         tgt_items = _flatten_with_paths(target_tree)
         leaves = []
         for key, tgt in tgt_items:
@@ -139,4 +166,4 @@ class CheckpointManager:
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
             tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
-        return tree, manifest["extra"]
+        return tree, extra

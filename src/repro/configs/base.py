@@ -171,6 +171,12 @@ class FedCfg:
                                    # eager (full (C,S,B,...) host
                                    # stack) | chunked (streaming only:
                                    # per-scan-chunk host callback)
+    defense: str = "none"          # upload screening/aggregation rule:
+                                   # none | clip | trimmed (batched
+                                   # only; see docs/robustness.md)
+    fault_rate: float = 0.0        # chaos injection: per-client fault
+                                   # probability per round (0 = off;
+                                   # see repro.fl.faults.FaultPlan)
 
 
 @dataclass(frozen=True)

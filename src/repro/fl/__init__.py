@@ -5,8 +5,10 @@ traces).
 
 Start at :class:`FLServer` + :class:`ServerConfig`; see docs/engines.md
 for the engine decision table, docs/codecs.md for the codec grammar,
-docs/hetero.md for heterogeneous-capacity rank tiers and docs/fleet.md
-for the arena / trace / streamed-data fleet substrate.
+docs/hetero.md for heterogeneous-capacity rank tiers, docs/fleet.md
+for the arena / trace / streamed-data fleet substrate and
+docs/robustness.md for fault injection, upload defenses and
+crash/resume.
 """
 from repro.fl import (
     arena,
@@ -14,6 +16,7 @@ from repro.fl import (
     client,
     codecs,
     comm,
+    faults,
     server,
     strategies,
     stream_engine,
@@ -31,6 +34,7 @@ from repro.fl.batch_engine import (
 from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.codecs import Codec, make_codec
 from repro.fl.comm import CommLog, merge_pfedpara, split_pfedpara
+from repro.fl.faults import FaultPlan
 from repro.fl.server import FLServer, ServerConfig
 from repro.fl.strategies import (
     Strategy,
@@ -43,13 +47,13 @@ from repro.fl.stream_engine import StreamingRound
 from repro.fl.trace import FleetTrace, spawn_seeds
 
 __all__ = [
-    "arena", "batch_engine", "client", "codecs", "comm", "server",
+    "arena", "batch_engine", "client", "codecs", "comm", "faults", "server",
     "strategies", "stream_engine", "trace", "ClientArena", "ClientBatch",
     "assemble_client_params", "batched_local_update",
     "batched_personalized_eval", "chunk_round_program", "select_upload",
     "ClientConfig", "init_client_state", "local_update", "Codec",
-    "make_codec", "CommLog", "merge_pfedpara", "split_pfedpara", "FLServer",
-    "ServerConfig", "Strategy", "make_strategy", "FleetTrace", "spawn_seeds",
-    "StreamingRound", "tree_hetero_wmean_stacked", "tree_take",
-    "tree_wmean_stacked",
+    "make_codec", "CommLog", "merge_pfedpara", "split_pfedpara", "FaultPlan",
+    "FLServer", "ServerConfig", "Strategy", "make_strategy", "FleetTrace",
+    "spawn_seeds", "StreamingRound", "tree_hetero_wmean_stacked",
+    "tree_take", "tree_wmean_stacked",
 ]

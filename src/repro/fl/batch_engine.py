@@ -49,10 +49,12 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.parameterization import apply_rank_mask
 from repro.fl import comm
+from repro.fl import faults as faults_lib
 from repro.fl.codecs import Codec, make_codec
 from repro.fl.client import ClientConfig, _step_math, strategy_post
 from repro.fl.strategies import (
-    Strategy, tree_hetero_wmean_stacked, tree_wmean_stacked, tree_zeros)
+    Strategy, tree_hetero_wmean_stacked, tree_trimmed_wmean_stacked,
+    tree_wmean_stacked, tree_zeros)
 
 
 def _tree_where(cond, a, b):
@@ -208,6 +210,9 @@ def chunk_round_program(
     axis: str = "clients",
     encoded_upload: bool = False,
     col_masks: Any = None,
+    fault: Any = None,
+    stale_ref: Any = None,
+    flip_bits: int = 4,
 ):
     """One chunk of clients: local epochs, payload selection, per-client
     uplink encoding. The shared core of the batched engine's round
@@ -232,6 +237,15 @@ def chunk_round_program(
     ``col_masks=None`` the homogeneous path below is byte-identical to
     before.
 
+    ``fault`` (chaos injection, see ``repro.fl.faults``): the traced
+    per-client arrays of :func:`repro.fl.faults.device_fault_args`.
+    Stale-replay / byzantine-scaling / NaN-poison corruption hits the
+    payload BEFORE the codec (exactly what a faulty client would
+    transmit); bit-flips hit the ENCODED int8 wire between encode and
+    decode. ``stale_ref`` is the server's previous decoded broadcast
+    (the model a stale client replays). With ``fault=None`` the clean
+    path below is byte-identical to before.
+
     Returns ``(new_params, new_state, upload, local, last_loss,
     n_steps)``, all stacked along the chunk's client axis.
     """
@@ -245,33 +259,98 @@ def chunk_round_program(
         # tier-sliced uplink: zero columns stand in for absent ones
         # (they carry zero aggregation WEIGHT downstream, not zero value)
         upload = apply_rank_mask(upload, col_masks)
+    if upload is not None and fault is not None:
+        # pre-codec corruption: stale replay / byzantine deviation
+        # scaling / NaN poisoning, per client (the wire then carries the
+        # corrupted factors exactly as a faulty client would send them)
+        sref = down_payload if stale_ref is None else stale_ref
+
+        def poison_one(u, nan_on, pv, byz, st, m=None):
+            r, s = down_payload, sref
+            if m is not None:
+                r = apply_rank_mask(r, m)
+                s = apply_rank_mask(s, m)
+            return faults_lib.poison_upload_one(u, r, s, nan_on, pv, byz, st)
+
+        if col_masks is not None:
+            upload = jax.vmap(poison_one)(
+                upload, fault["nan"], fault["poison"], fault["byz"],
+                fault["stale"], col_masks)
+        else:
+            upload = jax.vmap(
+                lambda u, a, p, b, s: poison_one(u, a, p, b, s)
+            )(upload, fault["nan"], fault["poison"], fault["byz"],
+              fault["stale"])
     if upload is not None and not codec.is_identity:
         # per-client encode: delta against the round's decoded broadcast
         # (closure => broadcast under vmap), error feedback threaded
         # through the stacked client state
-        enc = codec.encode_for_agg if encoded_upload else codec.encode_decode
-        if col_masks is not None:
-            def enc_masked(u, m, e, k):
-                return enc(u, ref=apply_rank_mask(down_payload, m),
-                           ef=e, key=k)
+        if fault is None:
+            enc = (codec.encode_for_agg if encoded_upload
+                   else codec.encode_decode)
+            if col_masks is not None:
+                def enc_masked(u, m, e, k):
+                    return enc(u, ref=apply_rank_mask(down_payload, m),
+                               ef=e, key=k)
 
-            if codec.has_ef:
-                upload, new_ef = jax.vmap(enc_masked)(
-                    upload, col_masks, new_state["_ef_up"], quant_keys)
+                if codec.has_ef:
+                    upload, new_ef = jax.vmap(enc_masked)(
+                        upload, col_masks, new_state["_ef_up"], quant_keys)
+                    new_state = {**new_state, "_ef_up": new_ef}
+                else:
+                    upload, _ = jax.vmap(
+                        lambda u, m, k: enc_masked(u, m, None, k)
+                    )(upload, col_masks, quant_keys)
+            elif codec.has_ef:
+                upload, new_ef = jax.vmap(
+                    lambda u, e, k: enc(u, ref=down_payload, ef=e, key=k)
+                )(upload, new_state["_ef_up"], quant_keys)
                 new_state = {**new_state, "_ef_up": new_ef}
             else:
                 upload, _ = jax.vmap(
-                    lambda u, m, k: enc_masked(u, m, None, k)
-                )(upload, col_masks, quant_keys)
-        elif codec.has_ef:
-            upload, new_ef = jax.vmap(
-                lambda u, e, k: enc(u, ref=down_payload, ef=e, key=k)
-            )(upload, new_state["_ef_up"], quant_keys)
-            new_state = {**new_state, "_ef_up": new_ef}
+                    lambda u, k: enc(u, ref=down_payload, key=k)
+                )(upload, quant_keys)
         else:
-            upload, _ = jax.vmap(
-                lambda u, k: enc(u, ref=down_payload, key=k)
-            )(upload, quant_keys)
+            # faulted path: the round trip is opened up so wire bit-flips
+            # land on the ENCODED int8 payload, then the usual decode /
+            # agg-form recovery runs on the corrupted wire. EF state is
+            # taken from encode (client-side, before the wire corrupts).
+            def enc_faulted(u, ref, e, k, fl, fk):
+                wire, new_e = codec.encode(u, ref=ref, ef=e, key=k)
+                wire = faults_lib.flip_wire_bits(wire, fl, fk, flip_bits)
+                if encoded_upload:
+                    if not codec.agg_linear:
+                        wire = faults_lib.linear_decode(codec, wire)
+                    return wire, new_e
+                return codec.decode(wire, ref=ref), new_e
+
+            fl, fk = fault["flip"], fault["flip_keys"]
+            if col_masks is not None:
+                def enc_fm(u, m, e, k, fl_, fk_):
+                    return enc_faulted(u, apply_rank_mask(down_payload, m),
+                                       e, k, fl_, fk_)
+
+                if codec.has_ef:
+                    upload, new_ef = jax.vmap(enc_fm)(
+                        upload, col_masks, new_state["_ef_up"], quant_keys,
+                        fl, fk)
+                    new_state = {**new_state, "_ef_up": new_ef}
+                else:
+                    upload, _ = jax.vmap(
+                        lambda u, m, k, fl_, fk_:
+                            enc_fm(u, m, None, k, fl_, fk_)
+                    )(upload, col_masks, quant_keys, fl, fk)
+            elif codec.has_ef:
+                upload, new_ef = jax.vmap(
+                    lambda u, e, k, fl_, fk_:
+                        enc_faulted(u, down_payload, e, k, fl_, fk_)
+                )(upload, new_state["_ef_up"], quant_keys, fl, fk)
+                new_state = {**new_state, "_ef_up": new_ef}
+            else:
+                upload, _ = jax.vmap(
+                    lambda u, k, fl_, fk_:
+                        enc_faulted(u, down_payload, None, k, fl_, fk_)
+                )(upload, quant_keys, fl, fk)
     return new_p, new_state, upload, local, last_loss, n_steps
 
 
@@ -293,6 +372,14 @@ class ClientBatch:
     fedper_local_keys: Tuple[str, ...] = ()
     mesh: Optional[Mesh] = None
     mesh_axis: str = "clients"
+    # upload defenses (repro.fl.faults): "none" | "clip" | "trimmed";
+    # all static => baked into the one compiled program, no per-round
+    # recompiles when fault draws change
+    defense: str = "none"
+    defense_z: float = 3.0
+    defense_clip: float = 1.0
+    defense_trim: float = 0.1
+    flip_bits: int = 4
 
     def __post_init__(self):
         if self.uplink_codec is None:
@@ -303,7 +390,7 @@ class ClientBatch:
     def _round_program(self, stacked_params, stacked_state, batches,
                        step_mask, arrived_mask, sizes, lr, quant_keys,
                        server_state, agg_target, down_payload,
-                       tier_idx, tier_masks):
+                       tier_idx, tier_masks, fault=None, stale_ref=None):
         col_masks = None
         if tier_masks is not None:
             # per-client rank masks gathered from the (T, ...) tier table
@@ -319,11 +406,41 @@ class ClientBatch:
                 fedper_local_keys=self.fedper_local_keys,
                 uplink_codec=self.uplink_codec, lr=lr,
                 mesh=self.mesh, axis=self.mesh_axis,
-                col_masks=col_masks)
+                col_masks=col_masks, fault=fault, stale_ref=stale_ref,
+                flip_bits=self.flip_bits)
 
+        valid = jnp.ones_like(arrived_mask)
         if upload is not None:
             w = arrived_mask * sizes
-            if col_masks is not None:
+            if self.defense != "none":
+                # compiled upload screening: finite + per-layer norm
+                # z-score vs the cohort; rejected clients fold into the
+                # arrival weighting as zero WEIGHT with sanitized (zero)
+                # values so 0 * NaN never reaches the fp32 accumulators
+                cand = (arrived_mask > 0).astype(jnp.float32)
+                dev = faults_lib.deviation_tree(upload, down_payload, False)
+                if col_masks is not None:
+                    dev = apply_rank_mask(dev, col_masks)
+                norms, finite = faults_lib.upload_stats(dev)
+                valid = faults_lib.validity_gate(norms, finite, cand,
+                                                 self.defense_z)
+                upload = faults_lib.sanitize_stacked(upload, valid)
+                w = w * valid
+                if self.defense == "clip":
+                    s = faults_lib.clip_scales(norms, valid, cand,
+                                               self.defense_clip)
+                    upload = faults_lib.apply_clip_stacked(
+                        upload, down_payload, s)
+                    if col_masks is not None:
+                        # the clip re-centers on the full broadcast;
+                        # re-mask so tier-absent columns stay zero-valued
+                        upload = apply_rank_mask(upload, col_masks)
+            if self.defense == "trimmed":
+                # coordinate-wise trimmed mean: needs all uploads
+                # resident along the client axis (batched engine only)
+                mean_w = tree_trimmed_wmean_stacked(
+                    upload, w, col_masks, agg_target, self.defense_trim)
+            elif col_masks is not None:
                 # per-column arrival weighting: a column only averages
                 # over clients whose tier covers it; columns nobody
                 # covers keep the current global value (agg_target)
@@ -331,20 +448,32 @@ class ClientBatch:
                                                    agg_target)
             else:
                 mean_w = tree_wmean_stacked(upload, w)
+                if self.defense != "none":
+                    # a fully-rejected round keeps the current global
+                    # (zero accepted weight must not zero the model)
+                    wsum = w.sum()
+                    mean_w = jax.tree.map(
+                        lambda mn, tgt: jnp.where(wsum > 0, mn,
+                                                  tgt.astype(mn.dtype)),
+                        mean_w, agg_target)
             new_global, new_server_state = self.strategy.server_update(
                 server_state, agg_target, mean_w)
         else:
             new_global, new_server_state = agg_target, server_state
         return (new_p, new_state, upload, local, last_loss, n_steps,
-                new_global, new_server_state)
+                new_global, new_server_state, valid)
 
     def run(self, stacked_params, stacked_state, batches, step_mask,
             arrived_mask, sizes, lr, quant_keys, server_state, agg_target,
-            down_payload, tier_idx=None, tier_masks=None):
+            down_payload, tier_idx=None, tier_masks=None, fault=None,
+            stale_ref=None):
         """Execute one round. ``tier_idx`` (``(C,)`` int) and
         ``tier_masks`` (``(T, ...)``-leading payload-structure mask tree)
         switch on heterogeneous-rank aggregation; both ``None`` (the
-        default) runs the homogeneous program unchanged."""
+        default) runs the homogeneous program unchanged. ``fault`` is a
+        :func:`repro.fl.faults.device_fault_args` dict (or ``None``) and
+        ``stale_ref`` the previous decoded broadcast for stale-replay
+        injection."""
         return self._program(
             stacked_params, stacked_state,
             jax.tree.map(jnp.asarray, batches), jnp.asarray(step_mask),
@@ -353,4 +482,4 @@ class ClientBatch:
             jnp.asarray(lr, jnp.float32), quant_keys,
             server_state, agg_target, down_payload,
             None if tier_idx is None else jnp.asarray(tier_idx, jnp.int32),
-            tier_masks)
+            tier_masks, fault, stale_ref)

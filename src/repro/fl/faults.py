@@ -1,0 +1,357 @@
+"""Deterministic fault injection + compiled upload defenses.
+
+Production fleets fail constantly: clients crash mid-round, return
+NaN/Inf-poisoned factors, flip bits on the wire, mount byzantine
+scale/sign attacks, or replay stale models. This module makes those
+faults a *first-class, deterministic* part of the simulation and gives
+the server compiled-path defenses against them.
+
+Fault model (:class:`FaultPlan`)
+  Every fault decision is a pure function of ``(seed, round, cohort
+  position)`` drawn from the same ``np.random.SeedSequence`` discipline
+  as :mod:`repro.fl.trace` (re-keyed per round under a private
+  domain-separation tag, never a stateful stream), so the SAME faults
+  hit the SAME clients in the sequential, batched and streaming engines
+  — chaos runs stay replayable and the engine-parity contract survives
+  fault injection. Kinds:
+
+    crash       crash-before-upload: the client trains, then vanishes —
+                zero aggregation weight, no state writeback, download
+                bytes charged but no upload bytes.
+    nan         NaN/Inf-poisoned factor upload (poison value drawn per
+                client), applied to the payload BEFORE the codec.
+    bitflip     bit-flips applied to the ENCODED int8 wire payload
+                (``{"q", "scale"}`` nodes): random (index, bit) pairs
+                XORed into each int8 ``q`` leaf. Codecs with no int8
+                stage have no int8 wire, so the flip is a no-op there.
+    byzantine   scale/sign attack: the upload's deviation from the
+                round's broadcast is multiplied by a drawn factor in
+                ``byzantine_scales`` (e.g. -1 = sign flip, 10 = blow-up).
+    stale       the upload is replaced by the client's PREVIOUS
+                broadcast version (the server's last decoded downlink)
+                — a replayed round-old model.
+
+Defenses (``ServerConfig.defense``, computed INSIDE the round program)
+  gate        per-client validity gate: finite-check over the upload's
+              factor leaves plus a per-layer upload-norm z-score
+              against the statistics block (cohort for the
+              sequential/batched engines, scan chunk for streaming —
+              the cohort is never resident there). Rejected clients
+              fold into the arrival/tier weighting as zero WEIGHT (and
+              a sanitized zero payload so ``0 * NaN`` can never reach
+              the accumulator), exactly like a straggler.
+    clip      norm-clipped weighted mean: each client's deviation from
+              the broadcast is scaled by ``min(1, tau / ||dev||)`` with
+              ``tau = defense_clip x median candidate norm``. The scale
+              is per-client and the aggregate stays LINEAR in the
+              uploads, so it composes with the streaming engine's
+              encoded-form fold (the clip scale multiplies the fold
+              weight; the non-delta broadcast remainder is carried as a
+              scalar slack term, see ``stream_engine``).
+    trimmed   coordinate-wise trimmed mean (batched engine only — the
+              trim needs every upload resident along the client axis;
+              the streaming engine is statically rejected, see
+              docs/robustness.md).
+
+Everything here is jit-safe and vmap-compatible; the host-side draws
+return plain numpy arrays the round programs consume as data, so
+toggling fault rates per round never recompiles.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl import comm
+
+# domain-separation tag for the fault RNG streams (mixed into every
+# SeedSequence entropy tuple, so fault draws never collide with the
+# trace's (seed, round) streams or any RandomState(seed) consumer)
+_FAULT_TAG = 0xFA0175EE
+# recovery re-sampling gets its own tag: a retry's replacement cohort
+# must not replay the fault stream
+_RECOVER_TAG = 0x5EC0FE12
+
+FAULT_KINDS: Tuple[str, ...] = ("crash", "nan", "bitflip", "byzantine",
+                                "stale")
+
+
+def recovery_rng(seed: int, round_idx: int, attempt: int
+                 ) -> np.random.Generator:
+    """The recovery policy's private per-(round, attempt) generator —
+    re-keyed like ``FleetTrace.round_rng`` so replacement cohorts are
+    replayable without any stateful stream."""
+    return np.random.Generator(np.random.PCG64(np.random.SeedSequence(
+        (int(seed), _RECOVER_TAG, int(round_idx), int(attempt)))))
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic per-round fault schedule (see module docstring).
+
+    Attributes:
+        rate: per-sampled-client fault probability per round.
+        kinds: the fault kinds to draw from (uniformly), a subset of
+            :data:`FAULT_KINDS`.
+        byzantine_scales: the deviation multipliers a byzantine client
+            draws from.
+        flip_bits: (index, bit) pairs XORed into each int8 wire leaf of
+            a bit-flipped client.
+        seed: fault-stream seed; every round re-keys from it.
+    """
+
+    rate: float = 0.0
+    kinds: Tuple[str, ...] = FAULT_KINDS
+    byzantine_scales: Tuple[float, ...] = (-1.0, -10.0, 10.0)
+    flip_bits: int = 4
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"fault rate must be in [0, 1]: {self.rate}")
+        bad = [k for k in self.kinds if k not in FAULT_KINDS]
+        if bad:
+            raise ValueError(
+                f"unknown fault kind(s) {bad}; expected a subset of "
+                f"{FAULT_KINDS}")
+        if not self.kinds:
+            raise ValueError("FaultPlan.kinds must name at least one kind")
+
+    def round_rng(self, round_idx: int, attempt: int = 0
+                  ) -> np.random.Generator:
+        """The round's private fault generator, re-keyed per
+        ``(seed, round[, attempt])`` — draws are independent of engine,
+        chunking and of how many draws earlier rounds made."""
+        entropy = (int(self.seed), _FAULT_TAG, int(round_idx))
+        if attempt:
+            entropy = entropy + (int(attempt),)
+        return np.random.Generator(np.random.PCG64(
+            np.random.SeedSequence(entropy)))
+
+    def draw(self, round_idx: int, n: int, attempt: int = 0) -> Dict:
+        """Host-side fault draw for one round's ``n`` sampled clients.
+
+        Returns a dict of plain per-client numpy arrays (the round
+        program consumes them as data — no recompile when the rate or
+        the drawn set changes):
+
+          kind       (n,) int8: index into :data:`FAULT_KINDS`, -1 clean
+          crash      (n,) bool
+          nan        (n,) float32 mask  } traced into the program
+          poison     (n,) float32 (NaN or +/-Inf per poisoned client)
+          byz        (n,) float32 deviation multiplier (1 = clean)
+          stale      (n,) float32 mask
+          flip       (n,) float32 mask
+          flip_keys  (n, 2) uint32 per-client PRNG keys for the wire
+                     bit positions
+        """
+        rng = self.round_rng(round_idx, attempt)
+        hit = rng.random(n) < self.rate
+        kind_draw = rng.integers(0, len(self.kinds), size=n)
+        kind = np.full(n, -1, np.int8)
+        for i, name in enumerate(self.kinds):
+            kind[hit & (kind_draw == i)] = FAULT_KINDS.index(name)
+        poison_pool = np.array([np.nan, np.inf, -np.inf], np.float32)
+        poison = poison_pool[rng.integers(0, len(poison_pool), size=n)]
+        byz_pool = np.asarray(self.byzantine_scales, np.float32)
+        byz_draw = byz_pool[rng.integers(0, len(byz_pool), size=n)]
+        flip_keys = rng.integers(0, 2 ** 32, size=(n, 2), dtype=np.uint32)
+        is_kind = {k: kind == FAULT_KINDS.index(k) for k in FAULT_KINDS}
+        return {
+            "kind": kind,
+            "crash": is_kind["crash"],
+            "nan": is_kind["nan"].astype(np.float32),
+            "poison": poison,
+            "byz": np.where(is_kind["byzantine"], byz_draw,
+                            np.float32(1.0)).astype(np.float32),
+            "stale": is_kind["stale"].astype(np.float32),
+            "flip": is_kind["bitflip"].astype(np.float32),
+            "flip_keys": flip_keys,
+        }
+
+    def kind_counts(self, fault: Dict, mask) -> Dict[str, int]:
+        """``{kind: count}`` over the round's ARRIVED clients (faults
+        drawn for non-arrived clients never fired)."""
+        m = np.asarray(mask).astype(bool)
+        kind = np.asarray(fault["kind"])
+        return {k: int(((kind == i) & m).sum())
+                for i, k in enumerate(FAULT_KINDS)
+                if int(((kind == i) & m).sum())}
+
+
+def device_fault_args(fault: Optional[Dict]) -> Optional[Dict]:
+    """The traced subset of a :meth:`FaultPlan.draw` dict (crash and
+    kind stay host-side: crashes fold into the effective arrival mask
+    before the program runs)."""
+    if fault is None:
+        return None
+    return {
+        "nan": jnp.asarray(fault["nan"], jnp.float32),
+        "poison": jnp.asarray(fault["poison"], jnp.float32),
+        "byz": jnp.asarray(fault["byz"], jnp.float32),
+        "stale": jnp.asarray(fault["stale"], jnp.float32),
+        "flip": jnp.asarray(fault["flip"], jnp.float32),
+        "flip_keys": jnp.asarray(fault["flip_keys"], jnp.uint32),
+    }
+
+
+# ------------------------------------------------------------- injection
+#
+# All injection helpers are pure per-client functions: the batched
+# engine vmaps them over the cohort axis, the streaming engine over each
+# scan chunk, and the sequential reference calls them one client at a
+# time — identical per-client inputs give bitwise-identical faulted
+# uploads in all three.
+
+def _bcast(flag, leaf):
+    return jnp.reshape(flag, (1,) * leaf.ndim)
+
+
+def poison_upload_one(upload: Any, ref: Any, stale_ref: Any, nan_on,
+                      poison_val, byz_scale, stale_on) -> Any:
+    """Pre-codec faults on ONE client's payload tree: stale replay,
+    byzantine deviation scaling, NaN/Inf poisoning (in that order —
+    a drawn client has exactly one kind, so order never matters)."""
+    def one(u, r, s):
+        u = jnp.where(_bcast(stale_on > 0, u), s.astype(u.dtype), u)
+        # gate the byzantine rewrite so clean clients (scale 1) keep
+        # their upload BIT-exactly (r + (u - r) would reassociate)
+        u = jnp.where(_bcast(byz_scale != 1.0, u),
+                      r + byz_scale * (u - r), u)
+        return jnp.where(_bcast(nan_on > 0, u),
+                         jnp.full_like(u, poison_val), u)
+
+    return jax.tree.map(one, upload, ref, stale_ref)
+
+
+def flip_wire_bits(wire: Any, flip_on, flip_key, n_bits: int) -> Any:
+    """XOR ``n_bits`` drawn (index, bit) pairs into every int8 leaf of
+    ONE client's encoded wire tree (``{"q", "scale"}`` q nodes). Leaves
+    that are not int8 — fp16/fp32 carriers, scales — pass through: the
+    fault models a corrupted int8 wire, and codecs without an int8
+    stage simply have nothing to flip."""
+    leaves, treedef = jax.tree_util.tree_flatten(wire)
+
+    def one(i, leaf):
+        if leaf.dtype != jnp.int8:
+            return leaf
+        key = jax.random.fold_in(flip_key, i)
+        k_idx, k_bit = jax.random.split(key)
+        flat = leaf.reshape(-1)
+        idx = jax.random.randint(k_idx, (n_bits,), 0, flat.size)
+        bit = jax.random.randint(k_bit, (n_bits,), 0, 8)
+        xor = jnp.zeros_like(flat).at[idx].set(
+            jnp.left_shift(jnp.ones((n_bits,), jnp.int8),
+                           bit.astype(jnp.int8)))
+        flipped = jnp.bitwise_xor(flat, xor).reshape(leaf.shape)
+        return jnp.where(_bcast(flip_on > 0, leaf), flipped, leaf)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(i, lf) for i, lf in enumerate(leaves)])
+
+
+# --------------------------------------------------------------- defenses
+
+def linear_decode(codec, wire: Any) -> Any:
+    """Decode an ``encode_for_agg`` wire tree through every stage except
+    delta (the linear dequant the streaming accumulator applies): the
+    defense gate's view of what a client actually uploaded."""
+    if codec.is_identity:
+        return wire
+    from repro.fl.codecs import Codec
+
+    stripped = Codec(spec=codec.spec, stages=tuple(
+        s for s in codec.stages if s.kind != "delta"))
+    return stripped.decode(wire)
+
+
+def deviation_tree(decoded: Any, down_payload: Any, has_delta: bool) -> Any:
+    """Per-client deviation from the round's broadcast, given the
+    linear-decoded upload (stacked along a leading client axis). With a
+    delta codec the linear form IS the deviation; otherwise subtract the
+    broadcast."""
+    if has_delta:
+        return decoded
+    return jax.tree.map(lambda u, r: u - r[None].astype(u.dtype),
+                        decoded, down_payload)
+
+
+def upload_stats(dev: Any) -> Tuple[jax.Array, jax.Array]:
+    """Per-client gate statistics from the stacked deviation tree:
+    ``(norms, finite)`` where ``norms`` is (C, L) per-layer L2 norms
+    and ``finite`` is (C,) all-leaves-finite flags. Non-finite entries
+    contribute a non-finite norm, which the gate masks out of the
+    cohort statistics."""
+    leaves = jax.tree.leaves(dev)
+    per_leaf = [jnp.sqrt(jnp.sum(
+        jnp.square(lf.astype(jnp.float32)),
+        axis=tuple(range(1, lf.ndim)))) for lf in leaves]
+    norms = jnp.stack(per_leaf, axis=1)
+    finite = jnp.all(jnp.isfinite(norms), axis=1)
+    return norms, finite
+
+
+def validity_gate(norms: jax.Array, finite: jax.Array, cand: jax.Array,
+                  z_thresh: float) -> jax.Array:
+    """(C,) float validity: finite AND every per-layer norm within
+    ``z_thresh`` sigmas of the candidate block's mean. Statistics are
+    computed only over finite candidates, so one NaN client cannot
+    poison the gate itself."""
+    ok = cand * finite.astype(jnp.float32)
+    n = jnp.maximum(ok.sum(), 1.0)
+    safe = jnp.where(ok[:, None] > 0, norms, 0.0)
+    mu = safe.sum(0) / n
+    var = (jnp.where(ok[:, None] > 0, jnp.square(norms - mu[None]),
+                     0.0).sum(0) / n)
+    sd = jnp.sqrt(jnp.maximum(var, 0.0))
+    z = jnp.abs(norms - mu[None]) / jnp.maximum(sd, 1e-6)
+    # degenerate blocks (<= 3 candidates) have meaningless sigmas:
+    # the z stage passes everyone and the finite check stands alone
+    z_ok = jnp.where(n > 3.0, jnp.all(z <= z_thresh, axis=1), True)
+    return finite.astype(jnp.float32) * z_ok.astype(jnp.float32)
+
+
+def clip_scales(norms: jax.Array, valid: jax.Array, cand: jax.Array,
+                clip_mult: float) -> jax.Array:
+    """(C,) per-client clip scale ``min(1, tau / ||dev||)`` with ``tau
+    = clip_mult x median valid-candidate total norm``. Per-client and
+    scalar, so the clipped aggregate stays linear in the uploads (the
+    streaming engine multiplies it into the fold weight)."""
+    tot = jnp.sqrt(jnp.square(norms).sum(1))
+    ok = cand * valid
+    n = ok.sum()
+    ranked = jnp.sort(jnp.where(ok > 0, tot, jnp.inf))
+    med = ranked[jnp.clip((n.astype(jnp.int32) - 1) // 2, 0,
+                          tot.shape[0] - 1)]
+    tau = clip_mult * jnp.where(jnp.isfinite(med), med, 0.0)
+    s = jnp.minimum(1.0, tau / jnp.maximum(tot, 1e-12))
+    return jnp.where((ok > 0) & (n > 0), s, 1.0)
+
+
+def sanitize_stacked(upload: Any, valid: jax.Array) -> Any:
+    """Zero every rejected client's upload leaves (stacked trees). The
+    rejected client already carries zero WEIGHT; zeroing the VALUES as
+    well keeps ``0 * NaN`` out of the fp32 accumulators."""
+    def one(u):
+        keep = (valid > 0).reshape((-1,) + (1,) * (u.ndim - 1))
+        return jnp.where(keep, u, jnp.zeros_like(u))
+
+    return jax.tree.map(one, upload)
+
+
+def apply_clip_stacked(upload: Any, down_payload: Any, scales: jax.Array
+                       ) -> Any:
+    """Dense-path clip: ``down + s_c * (u_c - down)`` per client over
+    stacked decoded uploads (the batched/sequential engines' form of
+    the same linear clip the streaming engine applies to its fold
+    weights)."""
+    def one(u, r):
+        s = scales.reshape((-1,) + (1,) * (u.ndim - 1))
+        rb = r[None].astype(u.dtype)
+        return rb + s * (u - rb)
+
+    return jax.tree.map(one, upload, down_payload)

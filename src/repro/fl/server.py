@@ -91,13 +91,44 @@ from repro.core import parameterization as param_lib
 from repro.core import rank_policy
 from repro.data.loader import client_epochs, stack_client_epochs
 from repro.fl import codecs, comm
+from repro.fl import faults as faults_lib
 from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.strategies import (
-    Strategy, tree_broadcast, tree_hetero_wmean_stacked, tree_index,
-    tree_mean, tree_stack)
+    Strategy, tree_broadcast, tree_hetero_wmean_stacked,
+    tree_trimmed_wmean_stacked, tree_index, tree_mean, tree_stack,
+    tree_wmean_stacked)
 from repro.fl.trace import spawn_seeds
 
 FEDPER_LOCAL_KEYS = ("head", "fc2", "b2")   # model-specific last layers
+
+
+def _loss_stats(losses) -> tuple:
+    """``(mean, nonfinite_count)`` over per-client round losses: the
+    mean ignores non-finite entries (one NaN/Inf client must not poison
+    the whole round's ``mean_loss``) and the count keeps fault rounds
+    diagnosable. All-finite rounds reproduce the plain mean bitwise."""
+    arr = np.asarray(losses).reshape(-1)
+    if arr.size == 0:
+        return float("nan"), 0
+    fin = np.isfinite(arr)
+    mean = float(arr[fin].mean()) if fin.any() else float("nan")
+    return mean, int((~fin).sum())
+
+
+def _to_plain(obj):
+    """Recursively convert numpy scalars/arrays to plain Python so the
+    checkpoint's msgpack ``extra`` blob can serialize history records."""
+    if isinstance(obj, dict):
+        return {k: _to_plain(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_to_plain(v) for v in obj]
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, (np.ndarray, jnp.ndarray)):
+        return _to_plain(np.asarray(obj).tolist())
+    return obj
 
 
 def arrival_mask(ok: np.ndarray, lat: np.ndarray, n_target: int) -> np.ndarray:
@@ -161,6 +192,18 @@ class ServerConfig:
                                        # rank-gamma per tier; () = uniform
                                        # full-rank clients (today's path)
     tier_assignment: str = "round_robin"   # round_robin | random | size
+    defense: str = "none"              # upload screening + robust agg:
+                                       # none | clip | trimmed (trimmed is
+                                       # batched-only — docs/robustness.md)
+    defense_z: float = 3.0             # validity-gate norm z-score bound
+    defense_clip: float = 1.0          # clip: tau = clip * median norm
+    defense_trim: float = 0.1          # trimmed: fraction cut per side
+    faults: Optional[Any] = None       # repro.fl.faults.FaultPlan: chaos
+                                       # injection; None = fault-free
+    recover_frac: float = 0.5          # re-sample the round when more than
+                                       # this fraction of participants
+                                       # crashed or were gate-rejected ...
+    recover_retries: int = 0           # ... up to this many retries
     seed: int = 0
 
 
@@ -265,6 +308,25 @@ class FLServer:
                 and server_cfg.engine != "streaming"):
             raise ValueError(
                 "data_stream='chunked' requires the streaming engine")
+        if server_cfg.defense not in ("none", "clip", "trimmed"):
+            raise ValueError(
+                f"unknown defense {server_cfg.defense!r} "
+                "(expected none | clip | trimmed)")
+        if (server_cfg.defense == "trimmed"
+                and server_cfg.engine != "batched"):
+            raise ValueError(
+                "defense='trimmed' requires the batched engine: the "
+                "coordinate-wise trim needs every upload resident along "
+                "the client axis (see docs/robustness.md); the streaming "
+                "fold and the sequential reference use defense='clip'")
+        plan = server_cfg.faults
+        if plan is not None and not isinstance(plan, faults_lib.FaultPlan):
+            raise ValueError(
+                "ServerConfig.faults must be a repro.fl.faults.FaultPlan")
+        if server_cfg.recover_retries < 0:
+            raise ValueError("recover_retries must be >= 0")
+        self._stale_ref: Any = None   # previous decoded broadcast (what a
+                                      # stale-replay fault re-uploads)
         self.arena = None   # created lazily at the first arena-mode round
         self._mesh, self._mesh_axis = mesh, mesh_axis
         self._engine = None
@@ -277,7 +339,12 @@ class FLServer:
                 personalization=server_cfg.personalization,
                 uplink_codec=self.uplink_codec,
                 fedper_local_keys=FEDPER_LOCAL_KEYS,
-                mesh=mesh, mesh_axis=mesh_axis)
+                mesh=mesh, mesh_axis=mesh_axis,
+                defense=server_cfg.defense,
+                defense_z=server_cfg.defense_z,
+                defense_clip=server_cfg.defense_clip,
+                defense_trim=server_cfg.defense_trim,
+                flip_bits=plan.flip_bits if plan is not None else 4)
         elif server_cfg.engine == "streaming":
             from repro.fl.stream_engine import StreamingRound
 
@@ -287,7 +354,11 @@ class FLServer:
                 uplink_codec=self.uplink_codec,
                 fedper_local_keys=FEDPER_LOCAL_KEYS,
                 chunk=max(1, int(server_cfg.client_chunk)),
-                mesh=mesh, mesh_axis=mesh_axis)
+                mesh=mesh, mesh_axis=mesh_axis,
+                defense=server_cfg.defense,
+                defense_z=server_cfg.defense_z,
+                defense_clip=server_cfg.defense_clip,
+                flip_bits=plan.flip_bits if plan is not None else 4)
         elif server_cfg.engine != "sequential":
             raise ValueError(
                 f"unknown engine {server_cfg.engine!r} "
@@ -359,18 +430,22 @@ class FLServer:
                 counts[cid] += int(hit)
         return counts
 
-    def _split_upload(self, cid: int, trained: Any):
+    def _split_upload(self, cid: int, trained: Any, into: Optional[Dict] = None):
+        """Split a trained tree into (upload, resident); the resident
+        lands in ``into`` (default ``self.local_trees`` — pass a pending
+        dict to defer the writeback until the round commits)."""
+        target = self.local_trees if into is None else into
         mode = self.scfg.personalization
         if mode == "pfedpara":
             glob, loc = comm.split_pfedpara(trained)
-            self.local_trees[cid] = loc
+            target[cid] = loc
             return glob
         if mode == "fedper":
-            self.local_trees[cid] = {k: trained[k] for k in FEDPER_LOCAL_KEYS
-                                     if k in trained}
+            target[cid] = {k: trained[k] for k in FEDPER_LOCAL_KEYS
+                           if k in trained}
             return {k: v for k, v in trained.items() if k not in FEDPER_LOCAL_KEYS}
         if mode == "local":
-            self.local_trees[cid] = trained
+            target[cid] = trained
             return None
         return trained
 
@@ -459,21 +534,28 @@ class FLServer:
             return self.tier_of[cids].astype(np.int32)
         return self.scfg.trace.tiers_of(cids)
 
-    def _round_bytes(self, sampled, mask, down_bytes: int, down_dec: Any
-                     ) -> tuple:
+    def _round_bytes(self, sampled, mask, down_bytes: int, down_dec: Any,
+                     up_mask=None) -> tuple:
         """Exact (down, up) wire bytes for the round's arrived clients.
         Homogeneous: participants × full payload bytes (as before).
         Heterogeneous: each arrived client is charged its TIER's sliced
-        payload bytes on both links."""
+        payload bytes on both links. ``up_mask`` (fault injection) lets
+        crash-before-upload clients charge the downlink only — they
+        received the broadcast, trained, and vanished."""
+        if up_mask is None:
+            up_mask = mask
         n_arrived = int(mask.sum())
         local = self.scfg.personalization == "local"
         if self.tiers is None:
             up = 0 if local else self.uplink_codec.wire_bytes(down_dec)
-            return n_arrived * down_bytes, n_arrived * up
+            return n_arrived * down_bytes, int(up_mask.sum()) * up
         tc = self._tier_cache
-        tiers = self._cohort_tiers(np.asarray(sampled)[mask.astype(bool)])
-        down = sum(tc["down_bytes"][int(t)] for t in tiers)
-        up = 0 if local else sum(tc["up_bytes"][int(t)] for t in tiers)
+        down_tiers = self._cohort_tiers(
+            np.asarray(sampled)[mask.astype(bool)])
+        up_tiers = self._cohort_tiers(
+            np.asarray(sampled)[up_mask.astype(bool)])
+        down = sum(tc["down_bytes"][int(t)] for t in down_tiers)
+        up = 0 if local else sum(tc["up_bytes"][int(t)] for t in up_tiers)
         return down, up
 
     # ------------------------------------------------------------- round
@@ -482,7 +564,7 @@ class FLServer:
         comm_s = 8.0 * payload_bytes / (self.scfg.bandwidth_mbps * 1e6)
         return comp + comm_s
 
-    def _select_round(self):
+    def _select_round(self, attempt: int = 0):
         """Host-side RNG for one round, shared verbatim by both engines:
         sample clients, simulate stragglers/dropout, derive the boolean
         arrived-mask over the sampled order (truncated to the first
@@ -498,15 +580,26 @@ class FLServer:
         trace's own dropout/diurnal model. Per-client data seeds are
         ``SeedSequence.spawn``-derived 64-bit values on BOTH paths
         (collision-free at fleet scale, unlike the legacy 2^30 draws).
+
+        ``attempt > 0`` (round-level fault recovery) re-samples a
+        replacement cohort from a fresh salted stream: the trace path
+        salts its per-round generator, the legacy path switches to the
+        stateless :func:`repro.fl.faults.recovery_rng` so retries never
+        disturb the stateful ``self.rng`` sequence the clean rounds
+        replay from.
         """
         scfg = self.scfg
         trace = scfg.trace
         n_target = max(1, int(round(scfg.participation * scfg.clients)))
         n_sample = max(n_target, int(round(n_target * (1 + scfg.oversample))))
         n_sample = min(n_sample, scfg.clients)
+        rrng = (faults_lib.recovery_rng(scfg.seed, self.round_idx, attempt)
+                if attempt and trace is None else None)
         if trace is not None:
-            trng = trace.round_rng(self.round_idx)
+            trng = trace.round_rng(self.round_idx, salt=attempt)
             sampled = trace.sample_cohort(trng, n_sample)
+        elif rrng is not None:
+            sampled = rrng.choice(scfg.clients, size=n_sample, replace=False)
         else:
             sampled = self.rng.choice(scfg.clients, size=n_sample,
                                       replace=False)
@@ -526,6 +619,12 @@ class FLServer:
                                 scfg.straggler_sigma, scfg.bandwidth_mbps)
             alive = (trng.random(len(sampled))
                      < trace.availability(sampled, self.round_idx))
+        elif rrng is not None:
+            lat = (rrng.lognormal(mean=0.0, sigma=scfg.straggler_sigma,
+                                  size=len(sampled))
+                   + 8.0 * np.asarray(payload_bytes, np.float64)
+                   / (scfg.bandwidth_mbps * 1e6))
+            alive = rrng.random(len(sampled)) >= scfg.dropout_prob
         else:
             lat = self._simulate_latency(payload_bytes, len(sampled))
             alive = self.rng.rand(len(sampled)) >= scfg.dropout_prob
@@ -570,29 +669,85 @@ class FLServer:
 
     def run_round(self) -> Dict:
         """Execute one federated round end-to-end (selection, broadcast
-        encode, the configured engine, aggregation, bookkeeping) and
-        return (and append to ``history``) its record dict."""
+        encode, fault injection, the configured engine, defense gating,
+        round-level recovery, bookkeeping) and return (and append to
+        ``history``) its record dict.
+
+        With ``ServerConfig.faults`` set, each attempt draws the round's
+        deterministic fault schedule, folds crash-before-upload clients
+        out of the effective arrival mask, and runs the engine WITHOUT
+        committing state; when crashed + gate-rejected clients exceed
+        ``recover_frac`` of the participants and retries remain, a
+        replacement cohort is re-sampled from a salted stream and the
+        attempt's results are discarded. Only the accepted attempt's
+        writebacks, aggregation and wire charges commit."""
+        scfg = self.scfg
+        plan = scfg.faults
         sampled, mask, seeds, lr, probe = self._select_round()
         if not mask.any():   # everyone failed: skip round (fault tolerance)
             self.round_idx += 1
             return {"round": self.round_idx, "participants": 0, "skipped": True}
         down_dec, down_bytes = self._encode_downlink(probe)
-        if self._stream is not None:
-            rec = self._run_round_streaming(sampled, mask, seeds, lr,
-                                            down_dec, down_bytes)
-        elif self._engine is not None:
-            rec = self._run_round_batched(sampled, mask, seeds, lr,
-                                          down_dec, down_bytes)
-        else:
-            rec = self._run_round_sequential(sampled, mask, seeds, lr,
-                                             down_dec, down_bytes)
+        attempt = 0
+        while True:
+            fault = (plan.draw(self.round_idx, len(sampled), attempt)
+                     if plan is not None else None)
+            # crash-before-upload folds into the EFFECTIVE arrival mask
+            # host-side: the client trained and vanished — no upload, no
+            # state writeback, zero aggregation weight
+            eff = (mask & ~fault["crash"]) if fault is not None else mask
+            if eff.any():
+                if self._stream is not None:
+                    runner = self._run_round_streaming
+                elif self._engine is not None:
+                    runner = self._run_round_batched
+                else:
+                    runner = self._run_round_sequential
+                rec, commit, valid = runner(sampled, eff, seeds, lr,
+                                            down_dec, down_bytes,
+                                            sel_mask=mask, fault=fault)
+            else:
+                # every participant crashed before upload: a
+                # downlink-only round, nothing arrives to aggregate
+                valid = np.zeros(len(sampled), np.float32)
+                rd, ru = self._round_bytes(sampled, mask, down_bytes,
+                                           down_dec, up_mask=eff)
+                rec = {"participants": int(mask.sum()),
+                       "sampled": len(sampled),
+                       "mean_loss": float("nan"), "nonfinite_losses": 0,
+                       "down_bytes": rd, "up_bytes": ru, "lr": lr}
+
+                def commit(rd=rd, ru=ru):
+                    self.comm_log.log_round(rd, ru)
+            participants = int(mask.sum())
+            ok = (int(np.round(np.asarray(valid, np.float64)[
+                np.asarray(eff, bool)].sum())) if eff.any() else 0)
+            rejected = participants - ok
+            if (fault is not None and attempt < scfg.recover_retries
+                    and rejected > scfg.recover_frac * participants):
+                nxt = self._select_round(attempt + 1)
+                if nxt[1].any():
+                    # discard the attempt (nothing committed) and rerun
+                    # the round on the replacement cohort
+                    attempt += 1
+                    sampled, mask, seeds, lr, _ = nxt
+                    continue
+            break
+        commit()
+        rec["comm_gb"] = self.comm_log.total_gb
         self.round_idx += 1
         rec["round"] = self.round_idx
         rec["arrived_mask"] = mask.astype(int).tolist()
         rec["sampled"] = [int(c) for c in sampled]
+        if plan is not None:
+            rec["rejected"] = rejected
+            rec["retries"] = attempt
+            rec["fault_kinds"] = plan.kind_counts(fault, mask)
         if self.eval_fn is not None:
             rec["eval"] = self.eval_fn(self.global_params)
         self.history.append(rec)
+        # next round's stale-replay faults re-upload THIS broadcast
+        self._stale_ref = down_dec
         return rec
 
     def _ensure_ef(self, state: Dict, payload: Any) -> Dict:
@@ -604,14 +759,24 @@ class FLServer:
 
     # ------------------------------------------- sequential reference
     def _run_round_sequential(self, sampled, mask, seeds, lr, down_dec,
-                              down_bytes) -> Dict:
+                              down_bytes, sel_mask=None, fault=None):
+        """Reference round. ``mask`` is the EFFECTIVE arrival mask
+        (crash faults removed); ``sel_mask`` the selection mask used for
+        participant counts and downlink charges. Returns ``(rec, commit,
+        valid)``: nothing is written back until ``commit()`` runs, so a
+        recovery retry can discard the whole attempt."""
         scfg = self.scfg
+        if sel_mask is None:
+            sel_mask = mask
         up_codec = self.uplink_codec
+        plan = scfg.faults
         quant_keys = self._quant_keys(len(sampled))
         hetero = self.tiers is not None
         tc = self._tier_state(down_dec) if hetero else None
         cohort_tiers = self._cohort_tiers(sampled) if hetero else None
-        uploads, up_masks, weights, losses = [], [], [], []
+        pend_states: Dict[int, Dict] = {}
+        pend_locals: Dict[int, Any] = {}
+        uploads, up_masks, weights, losses, up_pos = [], [], [], [], []
         for i, cid in enumerate(int(c) for c in sampled):
             if not mask[i]:
                 continue
@@ -629,49 +794,127 @@ class FLServer:
             trained, state, m = local_update(
                 params, batches, self.loss_fn, self.ccfg, self.strategy,
                 client_state=state, lr=lr)
-            up = self._split_upload(cid, trained)
+            up = self._split_upload(cid, trained, into=pend_locals)
             if up is not None:
                 ref = down_dec
+                pmask = None
                 if hetero:
                     pmask = tree_index(tc["payload_masks"], tier)
                     up = param_lib.apply_rank_mask(up, pmask)
                     ref = param_lib.apply_rank_mask(down_dec, pmask)
                     up_masks.append(pmask)
-                up, new_ef = up_codec.encode_decode(
-                    up, ref=ref, ef=state.get("_ef_up"),
-                    key=quant_keys[i])
+                if fault is not None:
+                    # same per-client injection helpers the compiled
+                    # engines vmap — identical inputs, bitwise-identical
+                    # faulted uploads
+                    sref = (self._stale_ref if self._stale_ref is not None
+                            else down_dec)
+                    if pmask is not None:
+                        sref = param_lib.apply_rank_mask(sref, pmask)
+                    up = faults_lib.poison_upload_one(
+                        up, ref, sref,
+                        jnp.float32(fault["nan"][i]),
+                        jnp.float32(fault["poison"][i]),
+                        jnp.float32(fault["byz"][i]),
+                        jnp.float32(fault["stale"][i]))
+                    if up_codec.is_identity:
+                        new_ef = state.get("_ef_up")
+                    else:
+                        wire, new_ef = up_codec.encode(
+                            up, ref=ref, ef=state.get("_ef_up"),
+                            key=quant_keys[i])
+                        wire = faults_lib.flip_wire_bits(
+                            wire, jnp.float32(fault["flip"][i]),
+                            jnp.asarray(fault["flip_keys"][i], jnp.uint32),
+                            plan.flip_bits)
+                        up = up_codec.decode(wire, ref=ref)
+                else:
+                    up, new_ef = up_codec.encode_decode(
+                        up, ref=ref, ef=state.get("_ef_up"),
+                        key=quant_keys[i])
                 if new_ef is not None:
                     state = {**state, "_ef_up": new_ef}
                 uploads.append(up)
                 weights.append(float(len(self.partitions[cid])))
-            self.client_states[cid] = state
+                up_pos.append(i)
+            pend_states[cid] = state
             losses.append(m["loss"])
-        rd, ru = self._round_bytes(sampled, mask, down_bytes, down_dec)
-        self.comm_log.log_round(rd, ru)
 
         # ---------------------------------------------------- aggregation
+        valid = np.ones(len(sampled), np.float32)
+        agg_state = None
         if uploads and scfg.personalization != "local":
             agg_target = (self.global_params if scfg.personalization == "none"
                           else self._download_payload(-1))
-            if hetero:
+            if scfg.defense != "none":
+                # same gate/clip primitives the batched program runs,
+                # over the same statistics block (the arrived cohort)
+                stacked = tree_stack(uploads)
+                masks_st = tree_stack(up_masks) if hetero else None
+                w = jnp.asarray(weights, jnp.float32)
+                cand = jnp.ones(len(uploads), jnp.float32)
+                dev = faults_lib.deviation_tree(stacked, down_dec, False)
+                if hetero:
+                    dev = param_lib.apply_rank_mask(dev, masks_st)
+                norms, finite = faults_lib.upload_stats(dev)
+                v = faults_lib.validity_gate(norms, finite, cand,
+                                             scfg.defense_z)
+                stacked = faults_lib.sanitize_stacked(stacked, v)
+                w = w * v
+                if scfg.defense == "clip":
+                    s = faults_lib.clip_scales(norms, v, cand,
+                                               scfg.defense_clip)
+                    stacked = faults_lib.apply_clip_stacked(
+                        stacked, down_dec, s)
+                    if hetero:
+                        stacked = param_lib.apply_rank_mask(stacked,
+                                                            masks_st)
+                valid[np.asarray(up_pos)] = np.asarray(v, np.float32)
+                if hetero:
+                    mean_w = tree_hetero_wmean_stacked(stacked, w, masks_st,
+                                                       agg_target)
+                else:
+                    mean_w = tree_wmean_stacked(stacked, w)
+                    wsum = w.sum()
+                    # a fully-rejected round keeps the current global
+                    # (zero accepted weight must not zero the model)
+                    mean_w = jax.tree.map(
+                        lambda mn, tgt: jnp.where(wsum > 0, mn,
+                                                  tgt.astype(mn.dtype)),
+                        mean_w, agg_target)
+            elif hetero:
                 mean_w = tree_hetero_wmean_stacked(
                     tree_stack(uploads), jnp.asarray(weights, jnp.float32),
                     tree_stack(up_masks), agg_target)
             else:
                 mean_w = tree_mean(uploads, weights)
-            new_global_part, self.server_state = self.strategy.server_update(
+            new_global_part, new_server_state = self.strategy.server_update(
                 self.server_state, agg_target, mean_w)
-            self._apply_aggregated(new_global_part, agg_target)
+            agg_state = (new_global_part, new_server_state, agg_target)
 
-        return {
-            "participants": int(mask.sum()),
+        rd, ru = self._round_bytes(sampled, sel_mask, down_bytes, down_dec,
+                                   up_mask=mask)
+        mean_loss, nonfinite = _loss_stats(losses)
+
+        def commit():
+            self.client_states.update(pend_states)
+            self.local_trees.update(pend_locals)
+            if agg_state is not None:
+                new_gp, new_ss, tgt = agg_state
+                self.server_state = new_ss
+                self._apply_aggregated(new_gp, tgt)
+            self.comm_log.log_round(rd, ru)
+
+        rec = {
+            "participants": int(sel_mask.sum()),
             "sampled": len(sampled),
-            "mean_loss": float(np.mean(losses)) if losses else float("nan"),
-            "comm_gb": self.comm_log.total_gb,
+            "mean_loss": mean_loss,
+            "nonfinite_losses": nonfinite,
             "down_bytes": rd,
             "up_bytes": ru,
             "lr": lr,
         }
+        return rec, commit, valid
 
     def _prep_client_state(self, cid: int, params: Any, down_dec: Any,
                            tier: int = -1) -> Dict:
@@ -765,8 +1008,10 @@ class FLServer:
 
     # ------------------------------------------------ batched engine
     def _run_round_batched(self, sampled, mask, seeds, lr, down_dec,
-                           down_bytes) -> Dict:
+                           down_bytes, sel_mask=None, fault=None):
         scfg = self.scfg
+        if sel_mask is None:
+            sel_mask = mask
         cids = [int(c) for c in sampled]
         C = len(cids)
         hetero = self.tiers is not None
@@ -816,49 +1061,60 @@ class FLServer:
                       else self._download_payload(-1))
 
         (new_p, new_state, upload, local, last_loss, n_steps, new_global,
-         new_server_state) = self._engine.run(
+         new_server_state, valid_dev) = self._engine.run(
             stacked_params, stacked_state, batches, step_mask,
             mask, sizes, lr, self._quant_keys(C),
             self.server_state, agg_target, down_dec,
             tier_idx=tier_idx,
-            tier_masks=tc["payload_masks"] if hetero else None)
+            tier_masks=tc["payload_masks"] if hetero else None,
+            fault=faults_lib.device_fault_args(fault),
+            stale_ref=(None if fault is None else
+                       (self._stale_ref if self._stale_ref is not None
+                        else down_dec)))
 
         arrived = np.nonzero(mask)[0]
-        if arena:
-            # ONE masked scatter writes the arrivals back; non-arrived
-            # rows keep their previous values bit-exactly
-            self.arena.scatter(rows, new_state if new_state else {},
-                               local, mask)
-        else:
-            for pos in arrived:
-                cid = cids[pos]
-                if new_state:
-                    self.client_states[cid] = tree_index(new_state, pos)
-                else:
-                    self.client_states[cid] = {}
-                if local is not None:
-                    self.local_trees[cid] = tree_index(local, pos)
-        if upload is not None and scfg.personalization != "local":
-            self.server_state = new_server_state
-            self._apply_aggregated(new_global, agg_target)
+        valid = np.asarray(valid_dev, np.float32)
+
+        def commit():
+            if arena:
+                # ONE masked scatter writes the arrivals back;
+                # non-arrived (and crashed) rows keep their previous
+                # values bit-exactly
+                self.arena.scatter(rows, new_state if new_state else {},
+                                   local, mask)
+            else:
+                for pos in arrived:
+                    cid = cids[pos]
+                    if new_state:
+                        self.client_states[cid] = tree_index(new_state, pos)
+                    else:
+                        self.client_states[cid] = {}
+                    if local is not None:
+                        self.local_trees[cid] = tree_index(local, pos)
+            if upload is not None and scfg.personalization != "local":
+                self.server_state = new_server_state
+                self._apply_aggregated(new_global, agg_target)
+            self.comm_log.log_round(rd, ru)
 
         losses = np.asarray(last_loss)[arrived]
-        rd, ru = self._round_bytes(sampled, mask, down_bytes, down_dec)
-        self.comm_log.log_round(rd, ru)
+        rd, ru = self._round_bytes(sampled, sel_mask, down_bytes, down_dec,
+                                   up_mask=mask)
+        mean_loss, nonfinite = _loss_stats(losses)
 
-        return {
-            "participants": int(mask.sum()),
+        rec = {
+            "participants": int(sel_mask.sum()),
             "sampled": len(sampled),
-            "mean_loss": float(np.mean(losses)) if len(losses) else float("nan"),
-            "comm_gb": self.comm_log.total_gb,
+            "mean_loss": mean_loss,
+            "nonfinite_losses": nonfinite,
             "down_bytes": rd,
             "up_bytes": ru,
             "lr": lr,
         }
+        return rec, commit, valid
 
     # ---------------------------------------------- streaming engine
     def _run_round_streaming(self, sampled, mask, seeds, lr, down_dec,
-                             down_bytes) -> Dict:
+                             down_bytes, sel_mask=None, fault=None):
         """Chunked round: identical selection/bookkeeping contract as the
         batched engine, but clients are fed to the jitted scan program
         ``client_chunk`` at a time and the aggregate is a streamed fp32
@@ -867,6 +1123,8 @@ class FLServer:
         from repro.fl.stream_engine import chunk_layout, from_chunks, to_chunks
 
         scfg = self.scfg
+        if sel_mask is None:
+            sel_mask = mask
         mode = scfg.personalization
         cids = [int(c) for c in sampled]
         C = len(cids)
@@ -936,8 +1194,31 @@ class FLServer:
         agg_target = (self.global_params if mode == "none"
                       else self._download_payload(-1))
 
+        fault_xs = None
+        stale_ref = None
+        if fault is not None:
+            # pad slots are drawn-clean (byz scale 1, everything else 0)
+            # so the injection math inside the scan is a no-op for them
+            def _pad1(a, fill, dtype):
+                out = np.full((C + pad,) + np.shape(a)[1:], fill, dtype)
+                out[:C] = a
+                return out
+            fault_pad = {
+                "nan": _pad1(fault["nan"], 0.0, np.float32),
+                "poison": _pad1(fault["poison"], 0.0, np.float32),
+                "byz": _pad1(fault["byz"], 1.0, np.float32),
+                "stale": _pad1(fault["stale"], 0.0, np.float32),
+                "flip": _pad1(fault["flip"], 0.0, np.float32),
+                "flip_keys": _pad1(fault["flip_keys"], 0, np.uint32),
+            }
+            fault_xs = jax.tree.map(
+                lambda a: to_chunks(a, n_chunks, chunk),
+                faults_lib.device_fault_args(fault_pad))
+            stale_ref = (self._stale_ref if self._stale_ref is not None
+                         else down_dec)
+
         (state_ys, local_ys, loss_ys, _steps, new_global,
-         new_server_state) = self._stream.run(
+         new_server_state, valid_ys) = self._stream.run(
             to_chunks(stacked_state, n_chunks, chunk),
             to_chunks(stacked_res, n_chunks, chunk)
             if stacked_res is not None else None,
@@ -951,50 +1232,162 @@ class FLServer:
                      if hetero else None),
             tier_payload_masks=tc["payload_masks"] if hetero else None,
             tier_full_masks=tc["full_masks"] if hetero else None,
-            data_source=data_source)
+            data_source=data_source,
+            fault_xs=fault_xs, stale_ref=stale_ref)
 
         new_state = from_chunks(state_ys) if state_ys else {}
         local = from_chunks(local_ys) if local_ys is not None else None
         arrived = np.nonzero(mask)[0]
-        if arena:
-            # ONE masked scatter: arrivals land in their rows, the pad
-            # slots all write the scratch row's unchanged value
-            self.arena.scatter(rows, new_state, local, mask_pad)
-        else:
-            for pos in arrived:
-                cid = cids[pos]
-                self.client_states[cid] = (tree_index(new_state, int(pos))
-                                           if new_state else {})
-                if local is not None:
-                    self.local_trees[cid] = tree_index(local, int(pos))
-        if mode != "local":
-            self.server_state = new_server_state
-            self._apply_aggregated(new_global, agg_target)
+        valid = np.asarray(from_chunks(valid_ys), np.float32)[:C]
+
+        def commit():
+            if arena:
+                # ONE masked scatter: arrivals land in their rows, the
+                # pad slots all write the scratch row's unchanged value
+                self.arena.scatter(rows, new_state, local, mask_pad)
+            else:
+                for pos in arrived:
+                    cid = cids[pos]
+                    self.client_states[cid] = (
+                        tree_index(new_state, int(pos)) if new_state else {})
+                    if local is not None:
+                        self.local_trees[cid] = tree_index(local, int(pos))
+            if mode != "local":
+                self.server_state = new_server_state
+                self._apply_aggregated(new_global, agg_target)
+            self.comm_log.log_round(rd, ru)
 
         losses = np.asarray(from_chunks(loss_ys))[arrived]
-        n_arrived = int(mask.sum())
-        rd, ru = self._round_bytes(sampled, mask, down_bytes, down_dec)
-        self.comm_log.log_round(rd, ru)
+        mean_loss, nonfinite = _loss_stats(losses)
+        rd, ru = self._round_bytes(sampled, sel_mask, down_bytes, down_dec,
+                                   up_mask=mask)
 
-        return {
-            "participants": n_arrived,
+        rec = {
+            "participants": int(sel_mask.sum()),
             "sampled": len(sampled),
             "chunks": n_chunks,
             "client_chunk": chunk,
-            "mean_loss": float(np.mean(losses)) if len(losses) else float("nan"),
-            "comm_gb": self.comm_log.total_gb,
+            "mean_loss": mean_loss,
+            "nonfinite_losses": nonfinite,
             "down_bytes": rd,
             "up_bytes": ru,
             "lr": lr,
         }
+        return rec, commit, valid
 
-    def run(self, rounds: Optional[int] = None, log_every: int = 0) -> List[Dict]:
+    # --------------------------------------------------- crash / resume
+    def _checkpoint_tree(self) -> Dict:
+        """Every array-valued piece of server state, as one dict tree
+        (client dicts keyed by stringified cid — the checkpoint's
+        "/"-joined paths restore them without a target structure)."""
+        tree: Dict[str, Any] = {"global_params": self.global_params,
+                                "server_state": self.server_state}
+        if self._down_ref is not None:
+            tree["down_ref"] = self._down_ref
+        if self._down_ef is not None:
+            tree["down_ef"] = self._down_ef
+        if self._stale_ref is not None:
+            tree["stale_ref"] = self._stale_ref
+        if self.client_states:
+            tree["client_states"] = {str(c): s for c, s
+                                     in self.client_states.items()}
+        if self.local_trees:
+            tree["local_trees"] = {str(c): t for c, t
+                                   in self.local_trees.items()}
+        if self.arena is not None:
+            ar = {"state": self.arena.state,
+                  "participation": self.arena.participation}
+            if self.arena.residents is not None:
+                ar["residents"] = self.arena.residents
+            tree["arena"] = ar
+        return tree
+
+    def save_checkpoint(self, manager) -> str:
+        """Checkpoint the COMPLETE server state at a round boundary
+        (arrays + host bookkeeping: round index, legacy RNG stream,
+        wire-byte totals, history). A restore from the written step is
+        bitwise: continuing reproduces an uninterrupted run exactly."""
+        st = self.rng.get_state()
+        extra = {
+            "round_idx": int(self.round_idx),
+            "rng": [st[0], [int(v) for v in st[1]], int(st[2]),
+                    int(st[3]), float(st[4])],
+            "comm": [int(self.comm_log.down_bytes),
+                     int(self.comm_log.up_bytes),
+                     int(self.comm_log.rounds)],
+            "history": _to_plain(self.history),
+        }
+        return manager.save(self.round_idx, self._checkpoint_tree(),
+                            extra=extra)
+
+    def restore_checkpoint(self, manager, step: Optional[int] = None) -> int:
+        """Restore from ``manager`` (latest step by default) and return
+        the restored round index. Structure-free: the checkpoint's
+        "/"-joined paths rebuild the nested dict trees, so per-client
+        state dicts restore without knowing which clients ever
+        participated. Continuing the run reproduces the uninterrupted
+        history bitwise (see docs/robustness.md)."""
+        by_path, extra, step = manager.restore_items(step)
+        root: Dict[str, Any] = {}
+        for path, arr in by_path.items():
+            parts = path.split("/")
+            node = root
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jnp.asarray(arr)
+        self.global_params = root["global_params"]
+        self.server_state = root.get("server_state", {})
+        self._down_ref = root.get("down_ref")
+        self._down_ef = root.get("down_ef")
+        self._stale_ref = root.get("stale_ref")
+        self.client_states = {int(c): s for c, s
+                              in root.get("client_states", {}).items()}
+        self.local_trees = {int(c): t for c, t
+                            in root.get("local_trees", {}).items()}
+        ar = root.get("arena")
+        if ar is not None:
+            self._ensure_arena()
+            # fedavg-without-EF arenas have an EMPTY state dict — only
+            # the sections that produced leaves exist in the checkpoint
+            if "state" in ar:
+                self.arena.state = ar["state"]
+            self.arena.participation = ar["participation"]
+            if "residents" in ar:
+                self.arena.residents = ar["residents"]
+        self.round_idx = int(extra["round_idx"])
+        r = extra["rng"]
+        self.rng.set_state((r[0], np.asarray(r[1], np.uint32), int(r[2]),
+                            int(r[3]), float(r[4])))
+        (self.comm_log.down_bytes, self.comm_log.up_bytes,
+         self.comm_log.rounds) = (int(v) for v in extra["comm"])
+        self.history = list(extra["history"])
+        return step
+
+    def run(self, rounds: Optional[int] = None, log_every: int = 0,
+            ckpt: Optional[Any] = None, ckpt_every: int = 1) -> List[Dict]:
         """Run ``rounds`` federated rounds (default:
-        ``ServerConfig.rounds``) and return the full ``history`` list."""
-        for r in range(rounds or self.scfg.rounds):
+        ``ServerConfig.rounds``) and return the full ``history`` list.
+
+        With ``ckpt`` (a :class:`repro.checkpoint.CheckpointManager`),
+        ``rounds`` is the TOTAL round target: a server restored via
+        :meth:`restore_checkpoint` runs only the remaining rounds, and
+        the full state checkpoints every ``ckpt_every`` completed
+        rounds (plus at the end)."""
+        target = rounds or self.scfg.rounds
+        if ckpt is None:
+            for r in range(target):
+                rec = self.run_round()
+                if log_every and (r % log_every == 0):
+                    print(rec)
+            return self.history
+        while self.round_idx < target:
             rec = self.run_round()
-            if log_every and (r % log_every == 0):
+            if log_every and ((self.round_idx - 1) % log_every == 0):
                 print(rec)
+            if (self.round_idx % ckpt_every == 0
+                    or self.round_idx >= target):
+                self.save_checkpoint(ckpt)
+        ckpt.wait()
         return self.history
 
     # --------------------------------------------- personalization eval

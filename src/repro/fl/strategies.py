@@ -104,6 +104,56 @@ def tree_hetero_wmean_stacked(stacked: Any, weights: jax.Array,
     return jax.tree.map(one, stacked, col_masks, fallback)
 
 
+def tree_trimmed_wmean_stacked(stacked: Any, weights: jax.Array,
+                               col_masks: Any, fallback: Any,
+                               trim: float) -> Any:
+    """Coordinate-wise trimmed weighted mean over the client axis
+    (robust aggregation, ``ServerConfig.defense='trimmed'``).
+
+    Per coordinate, the ``floor(trim * n_members)`` highest and lowest
+    values among member clients (positive weight, covered column) are
+    dropped and the remainder weighted-averaged; coordinates with no
+    surviving member fall back to ``fallback`` — the same uncovered-
+    column semantics as :func:`tree_hetero_wmean_stacked`. Needs every
+    upload resident along the client axis, which is why the streaming
+    engine statically rejects this defense (see docs/robustness.md).
+
+    Args:
+        stacked: client-stacked upload tree, leaves ``(C, ...)``.
+        weights: ``(C,)`` mask-weight vector (rejected clients carry 0).
+        col_masks: per-client broadcastable 0/1 rank masks, or ``None``
+            (homogeneous: every client covers every coordinate).
+        fallback: unstacked payload-structure tree (current global).
+        trim: fraction trimmed from EACH side, in [0, 0.5).
+    """
+    wf = weights.astype(jnp.float32)
+
+    def one(x, m, tgt):
+        w = wf.reshape((-1,) + (1,) * (x.ndim - 1))
+        member = ((w > 0)
+                  & (jnp.broadcast_to(m, x.shape) > 0)).astype(jnp.float32)
+        n = member.sum(axis=0)
+        k = jnp.floor(trim * n)
+        xf = x.astype(jnp.float32)
+        # per-coordinate rank among members: non-members sort to +inf
+        # (never into the kept low band), argsort-of-argsort gives each
+        # element its rank along the client axis
+        keyed = jnp.where(member > 0, xf, jnp.inf)
+        order = jnp.argsort(keyed, axis=0)
+        rank = jnp.argsort(order, axis=0).astype(jnp.float32)
+        keep = member * (rank >= k) * (rank < n - k)
+        num = jnp.sum(w * keep * xf, axis=0)
+        den = jnp.sum(w * keep, axis=0)
+        mean = jnp.where(den > 0, num / jnp.maximum(den, 1e-12),
+                         tgt.astype(jnp.float32))
+        return mean.astype(x.dtype)
+
+    if col_masks is None:
+        col_masks = jax.tree.map(lambda x: jnp.ones((1,) * x.ndim,
+                                                    jnp.float32), stacked)
+    return jax.tree.map(one, stacked, col_masks, fallback)
+
+
 def tree_sub(a: Any, b: Any) -> Any:
     return jax.tree.map(lambda x, y: x - y, a, b)
 

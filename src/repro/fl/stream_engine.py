@@ -68,6 +68,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.parameterization import apply_rank_mask
+from repro.fl import faults as faults_lib
 from repro.fl.batch_engine import assemble_client_params, chunk_round_program
 from repro.fl.client import ClientConfig
 from repro.fl.codecs import Codec, make_codec
@@ -97,8 +98,22 @@ class StreamingRound:
     mesh: Optional[Mesh] = None
     mesh_axis: str = "clients"
     use_pallas_agg: bool = True
+    # upload defenses (repro.fl.faults): "none" | "clip". The gate's
+    # statistics block is the scan CHUNK (the cohort is never resident
+    # here); "trimmed" needs every upload resident along the client
+    # axis, so it is statically rejected — see docs/robustness.md.
+    defense: str = "none"
+    defense_z: float = 3.0
+    defense_clip: float = 1.0
+    flip_bits: int = 4
 
     def __post_init__(self):
+        if self.defense not in ("none", "clip"):
+            raise ValueError(
+                f"streaming engine supports defense 'none' | 'clip', got "
+                f"{self.defense!r} (coordinate-wise trimming needs all "
+                "uploads resident along the client axis — use the batched "
+                "engine; see docs/robustness.md)")
         if self.uplink_codec is None:
             self.uplink_codec = make_codec("")
         # The chunk-stacked client state and personalization residents
@@ -132,7 +147,7 @@ class StreamingRound:
     def _round_program(self, state_xs, resident_xs, batches_xs, step_mask_xs,
                        mask_xs, sizes_xs, quant_keys_xs, lr, server_state,
                        agg_target, down_payload, tier_xs, tier_payload_masks,
-                       tier_full_masks):
+                       tier_full_masks, fault_xs=None, stale_ref=None):
         codec = self.uplink_codec
         mode = self.personalization
         mesh, axis = self.mesh, self.mesh_axis
@@ -142,11 +157,21 @@ class StreamingRound:
         hetero = tier_payload_masks is not None
         n_tiers = (jax.tree.leaves(tier_payload_masks)[0].shape[0]
                    if hetero else 1)
+        # clipping a non-delta codec re-centers each upload on the
+        # broadcast: the fold keeps w·s as its weight and the leftover
+        # w·(1-s)·broadcast rides in one scalar slack term per tier,
+        # added back at finalize — the aggregate stays LINEAR, which is
+        # the whole reason 'clip' streams and 'trimmed' cannot
+        clip_slack = self.defense == "clip" and not codec.has_delta
 
         def chunk_step(carry, xs):
-            accs, wtots = carry
+            if clip_slack:
+                accs, wtots, slacks = carry
+            else:
+                accs, wtots = carry
+                slacks = None
             (state_c, resident_c, batches_c, smask_c, mask_c, sizes_c,
-             keys_c, tier_c, chunk_i) = xs
+             keys_c, tier_c, fault_c, chunk_i) = xs
             if batches_c is None:
                 # lazy data: the chunk's batches materialize host-side
                 # inside the scan step — the cohort-wide (C, S, B, ...)
@@ -172,29 +197,65 @@ class StreamingRound:
                     strategy_name=self.strategy.name, personalization=mode,
                     fedper_local_keys=self.fedper_local_keys,
                     uplink_codec=codec, lr=lr, mesh=mesh, axis=axis,
-                    encoded_upload=True, col_masks=col_masks)
+                    encoded_upload=True, col_masks=col_masks,
+                    fault=fault_c, stale_ref=stale_ref,
+                    flip_bits=self.flip_bits)
+            valid_c = jnp.ones_like(mask_c)
+            clip_s = None
             if upload is not None:
                 w = mask_c * sizes_c
+                if self.defense != "none":
+                    # chunk-block screening on the linear-decoded wire:
+                    # rejected clients fold in with zero WEIGHT and a
+                    # sanitized (zeroed) wire so 0 * NaN never reaches
+                    # the fp32 accumulator
+                    lin = jax.vmap(
+                        lambda u: faults_lib.linear_decode(codec, u))(upload)
+                    dev = faults_lib.deviation_tree(lin, down_payload,
+                                                    codec.has_delta)
+                    if hetero:
+                        dev = apply_rank_mask(dev, col_masks)
+                    cand = (mask_c > 0).astype(jnp.float32)
+                    norms, finite = faults_lib.upload_stats(dev)
+                    valid_c = faults_lib.validity_gate(norms, finite, cand,
+                                                       self.defense_z)
+                    upload = faults_lib.sanitize_stacked(upload, valid_c)
+                    w = w * valid_c
+                    if self.defense == "clip":
+                        clip_s = faults_lib.clip_scales(norms, valid_c,
+                                                        cand,
+                                                        self.defense_clip)
                 # one fused accumulator per tier: within a tier every
                 # client shares the same column mask, so the per-column
                 # weighting factors out of the kernel contraction as
                 # mask_t * (Σ_{c∈t} w_c · deq(wire_c))
                 new_accs, new_wtots = [], []
+                new_slacks = [] if clip_slack else None
                 for t in range(n_tiers):
                     wt = (w * (tier_c == t).astype(w.dtype)) if hetero else w
+                    # the per-client clip scale is scalar, so it folds
+                    # straight into the kernel's fold weight
+                    wf = wt * clip_s if clip_s is not None else wt
                     if two_level:
                         part = agg_kernels.sharded_tree_dequant_acc(
-                            upload, wt, mesh, axis,
+                            upload, wf, mesh, axis,
                             use_pallas=self.use_pallas_agg)
                         new_accs.append(jax.tree.map(jnp.add, accs[t], part))
                     else:
                         new_accs.append(agg_kernels.tree_dequant_acc(
-                            accs[t], upload, wt,
+                            accs[t], upload, wf,
                             use_pallas=self.use_pallas_agg))
                     new_wtots.append(wtots[t] + wt.sum())
+                    if clip_slack:
+                        new_slacks.append(
+                            slacks[t] + (wt * (1.0 - clip_s)).sum())
                 accs, wtots = tuple(new_accs), tuple(new_wtots)
+                if clip_slack:
+                    slacks = tuple(new_slacks)
             del new_p  # reassembled from the broadcast next round
-            return (accs, wtots), (new_state, local, last_loss, n_steps)
+            out_carry = ((accs, wtots, slacks) if clip_slack
+                         else (accs, wtots))
+            return out_carry, (new_state, local, last_loss, n_steps, valid_c)
 
         acc0 = tuple(
             jax.tree.map(lambda x: jnp.zeros(jnp.shape(x), jnp.float32),
@@ -202,11 +263,28 @@ class StreamingRound:
         wtot0 = tuple(jnp.zeros((), jnp.float32) for _ in range(n_tiers))
         n_chunks = step_mask_xs.shape[0]
         xs = (state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
-              sizes_xs, quant_keys_xs, tier_xs,
+              sizes_xs, quant_keys_xs, tier_xs, fault_xs,
               jnp.arange(n_chunks, dtype=jnp.int32))
-        ((accs, wtots),
-         (state_ys, local_ys, loss_ys, steps_ys)) = jax.lax.scan(
-            chunk_step, (acc0, wtot0), xs)
+        carry0 = ((acc0, wtot0,
+                   tuple(jnp.zeros((), jnp.float32) for _ in range(n_tiers)))
+                  if clip_slack else (acc0, wtot0))
+        (carry_out,
+         (state_ys, local_ys, loss_ys, steps_ys, valid_ys)) = jax.lax.scan(
+            chunk_step, carry0, xs)
+        if clip_slack:
+            accs, wtots, slacks = carry_out
+            # the clipped-away broadcast remainder: Σ_c w_c (1 - s_c)
+            # per tier, re-attached as slack_t · broadcast so the mean
+            # equals Σ w (down + s·(u - down)) / Σ w exactly as in the
+            # dense engines (delta codecs need none — the reference is
+            # outside the fold entirely)
+            accs = tuple(
+                jax.tree.map(
+                    lambda a, d: a + slacks[t] * d.astype(jnp.float32),
+                    accs[t], down_payload)
+                for t in range(n_tiers))
+        else:
+            accs, wtots = carry_out
 
         if mode != "local":
             if hetero:
@@ -233,17 +311,25 @@ class StreamingRound:
                 mean = jax.tree.map(lambda a: a / jnp.maximum(wtot, 1e-12),
                                     acc)
                 mean = codec.agg_finalize(mean, ref=down_payload)
+                if self.defense != "none":
+                    # a fully-rejected round keeps the current global
+                    # (zero accepted weight must not zero the model)
+                    mean = jax.tree.map(
+                        lambda mn, tgt: jnp.where(wtot > 0, mn,
+                                                  tgt.astype(mn.dtype)),
+                        mean, agg_target)
             new_global, new_server_state = self.strategy.server_update(
                 server_state, agg_target, mean)
         else:
             new_global, new_server_state = agg_target, server_state
         return (state_ys, local_ys, loss_ys, steps_ys, new_global,
-                new_server_state)
+                new_server_state, valid_ys)
 
     def run(self, state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
             sizes_xs, quant_keys_xs, lr, server_state, agg_target,
             down_payload, tier_xs=None, tier_payload_masks=None,
-            tier_full_masks=None, data_source=None):
+            tier_full_masks=None, data_source=None, fault_xs=None,
+            stale_ref=None):
         """Execute one streaming round. The ``tier_*`` arguments switch
         on heterogeneous-rank mode: ``tier_xs`` is the chunked
         ``(n_chunks, chunk)`` int tier index, ``tier_payload_masks`` /
@@ -255,7 +341,12 @@ class StreamingRound:
         switches on lazy per-chunk data: pass ``batches_xs=None`` and
         each scan step fetches its own chunk's batches through a host
         callback — the cohort-wide batch stack is never materialized,
-        host data memory stays O(chunk)."""
+        host data memory stays O(chunk).
+
+        ``fault_xs`` (chaos injection): the per-client arrays of
+        :func:`repro.fl.faults.device_fault_args` chunked to leading
+        ``(n_chunks, chunk)`` axes; ``stale_ref`` is the previous
+        decoded broadcast for stale-replay faults."""
         if data_source is not None:
             if batches_xs is not None:
                 raise ValueError(
@@ -272,7 +363,7 @@ class StreamingRound:
             quant_keys_xs, jnp.asarray(lr, jnp.float32),
             server_state, agg_target, down_payload,
             None if tier_xs is None else jnp.asarray(tier_xs, jnp.int32),
-            tier_payload_masks, tier_full_masks)
+            tier_payload_masks, tier_full_masks, fault_xs, stale_ref)
 
 
 def chunk_layout(n_clients: int, chunk: int) -> Tuple[int, int, int]:

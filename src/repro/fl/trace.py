@@ -111,13 +111,18 @@ class FleetTrace:
                     f"tier_mix must sum to 1, got {self.tier_mix} (sum {s})")
 
     # ------------------------------------------------------------ streams
-    def round_rng(self, round_idx: int) -> np.random.Generator:
+    def round_rng(self, round_idx: int, salt: int = 0) -> np.random.Generator:
         """The round's private generator — every round re-keys from the
         trace seed, so round r's draws never depend on how many draws
-        earlier rounds made (replayable at any round in isolation)."""
+        earlier rounds made (replayable at any round in isolation).
+        ``salt`` (recovery retries, see docs/robustness.md) opens a
+        fresh stream per attempt; ``salt=0`` keys exactly as before, so
+        existing runs are bitwise untouched."""
+        entropy = (int(self.seed), _TRACE_TAG, int(round_idx))
+        if salt:
+            entropy = entropy + (int(salt),)
         return np.random.Generator(np.random.PCG64(
-            np.random.SeedSequence((int(self.seed), _TRACE_TAG,
-                                    int(round_idx)))))
+            np.random.SeedSequence(entropy)))
 
     def local_seeds(self, round_idx: int, n: int) -> np.ndarray:
         """Per-client 64-bit local-epoch data seeds for the round's

@@ -145,7 +145,8 @@ def train_pods(args):
 def train_fl(args):
     """Paper-regime FL simulation on synthetic data."""
     from repro.data import dirichlet_partition, make_image_dataset, train_test_split
-    from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+    from repro.fl import (ClientConfig, FaultPlan, FLServer, ServerConfig,
+                          make_strategy)
     from repro.nn import recurrent as rec
 
     if args.model == "mlp":
@@ -172,6 +173,8 @@ def train_fl(args):
         mesh = Mesh(np.array(jax.devices()), ("clients",))
     gamma_tiers = tuple(float(g) for g in args.gamma_tiers.split(",")
                         if g.strip()) if args.gamma_tiers else ()
+    plan = (FaultPlan(rate=args.fault_rate, seed=args.seed)
+            if args.fault_rate > 0 else None)
     srv = FLServer(loss_fn, params, tr, parts, make_strategy(args.strategy),
                    ClientConfig(lr=args.lr, batch=64, epochs=args.local_epochs),
                    ServerConfig(clients=args.clients, participation=0.16,
@@ -184,9 +187,20 @@ def train_fl(args):
                                 gamma_tiers=gamma_tiers,
                                 tier_assignment=args.tier_assignment,
                                 state_store=args.state_store,
-                                data_stream=args.data_stream),
+                                data_stream=args.data_stream,
+                                defense=args.defense, faults=plan,
+                                recover_retries=args.recover_retries),
                    eval_fn=eval_fn, mesh=mesh)
-    hist = srv.run(log_every=1)
+    ckpt = (CheckpointManager(args.ckpt_dir, keep=2)
+            if args.ckpt_dir else None)
+    if args.resume:
+        if ckpt is None:
+            raise SystemExit("--resume requires --ckpt-dir")
+        if ckpt.latest_step() is not None:
+            step = srv.restore_checkpoint(ckpt)
+            print(f"resumed at round {step}", flush=True)
+    hist = srv.run(log_every=1, ckpt=ckpt,
+                   ckpt_every=max(1, args.ckpt_every) if ckpt else 1)
     hist[-1]["comm_up_mb"] = srv.comm_log.up_bytes / 1e6
     hist[-1]["comm_down_mb"] = srv.comm_log.down_bytes / 1e6
     print(json.dumps(hist[-1], indent=1))
@@ -262,6 +276,24 @@ def main():
                     help="client->tier rule for --gamma-tiers: cid mod T, "
                          "seeded uniform draw, or by local dataset size "
                          "(more data -> larger-gamma tier)")
+    ap.add_argument("--defense", default="none",
+                    choices=["none", "clip", "trimmed"],
+                    help="compiled upload screening + robust aggregation: "
+                         "clip (all engines; median-norm clipping), "
+                         "trimmed (batched engine only: coordinate-wise "
+                         "trimmed mean). See docs/robustness.md")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos injection: per-client per-round fault "
+                         "probability (deterministic in --seed; kinds: "
+                         "crash/nan/bitflip/byzantine/stale)")
+    ap.add_argument("--recover-retries", type=int, default=0,
+                    help="round-level recovery: re-sample a replacement "
+                         "cohort up to N times when crashed+rejected "
+                         "clients exceed half the participants")
+    ap.add_argument("--resume", action="store_true",
+                    help="fl mode: restore the latest checkpoint in "
+                         "--ckpt-dir and continue to --rounds (bitwise "
+                         "identical to the uninterrupted run)")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route every FedPara dense() through the fused "
                          "differentiable Pallas kernels: local training "

@@ -1,0 +1,266 @@
+"""Chaos-grade federation: deterministic fault injection + defenses.
+
+The fault schedule (`repro.fl.faults.FaultPlan`) must be a pure
+function of (seed, round, attempt) — identical across engines and
+replayable — and the compiled upload defenses must (a) reject the
+injected corruption, (b) keep the global model finite where
+defense='none' lets NaNs poison it, and (c) agree across the
+sequential / batched / streaming engines when the streaming chunk
+covers the whole cohort (same gate statistics block).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.program_check import make_mini_server
+from repro.fl import faults as faults_lib
+from repro.fl.faults import FAULT_KINDS, FaultPlan
+from repro.fl.strategies import tree_trimmed_wmean_stacked
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # only the property test needs hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):          # no-op decorators so the module still loads
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    settings = given
+
+    class st:  # noqa: N801
+        integers = staticmethod(lambda **kw: None)
+        floats = staticmethod(lambda **kw: None)
+
+
+def _glob(srv):
+    return np.concatenate([np.asarray(x).ravel()
+                           for x in jax.tree.leaves(srv.global_params)])
+
+
+# ------------------------------------------------------------ fault plans
+
+def test_fault_plan_deterministic():
+    plan = FaultPlan(rate=0.5, seed=3)
+    a = plan.draw(7, 16)
+    b = plan.draw(7, 16)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    # rounds are independently keyed: some round must differ
+    c = plan.draw(8, 16)
+    assert any(not np.array_equal(a[k], c[k]) for k in a)
+    # recovery attempts open a fresh stream without touching attempt 0
+    d = plan.draw(7, 16, attempt=1)
+    assert any(not np.array_equal(a[k], d[k]) for k in a)
+    np.testing.assert_array_equal(plan.draw(7, 16)["kind"], a["kind"])
+
+
+def test_fault_plan_rate_zero_and_kinds():
+    clean = FaultPlan(rate=0.0, seed=0).draw(0, 32)
+    assert not clean["crash"].any()
+    assert (clean["kind"] == -1).all()
+    assert (clean["byz"] == 1.0).all()
+    only_crash = FaultPlan(rate=1.0, kinds=("crash",), seed=0).draw(0, 32)
+    assert only_crash["crash"].all()
+    assert (only_crash["kind"]
+            == FAULT_KINDS.index("crash")).all()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       round_idx=st.integers(min_value=0, max_value=10_000),
+       rate=st.floats(min_value=0.0, max_value=1.0))
+def test_fault_plan_draw_is_pure(seed, round_idx, rate):
+    """Property: draw(round) is bitwise replayable and internally
+    consistent (exactly the drawn kinds set their per-kind mask)."""
+    plan = FaultPlan(rate=rate, seed=seed)
+    a, b = plan.draw(round_idx, 8), plan.draw(round_idx, 8)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    kind = a["kind"]
+    np.testing.assert_array_equal(
+        a["crash"], kind == FAULT_KINDS.index("crash"))
+    np.testing.assert_array_equal(
+        a["nan"] > 0, kind == FAULT_KINDS.index("nan"))
+    np.testing.assert_array_equal(
+        a["flip"] > 0, kind == FAULT_KINDS.index("bitflip"))
+    np.testing.assert_array_equal(
+        a["stale"] > 0, kind == FAULT_KINDS.index("stale"))
+    np.testing.assert_array_equal(
+        a["byz"] != 1.0, kind == FAULT_KINDS.index("byzantine"))
+
+
+def test_fault_plan_draw_is_pure_seeded():
+    """Deterministic fallback for the hypothesis property above."""
+    for seed, round_idx, rate in [(0, 0, 0.3), (7, 123, 0.9), (42, 5, 0.05)]:
+        plan = FaultPlan(rate=rate, seed=seed)
+        a, b = plan.draw(round_idx, 8), plan.draw(round_idx, 8)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+        kind = a["kind"]
+        np.testing.assert_array_equal(
+            a["crash"], kind == FAULT_KINDS.index("crash"))
+        np.testing.assert_array_equal(
+            a["nan"] > 0, kind == FAULT_KINDS.index("nan"))
+
+
+# ------------------------------------------------------ injection helpers
+
+def test_poison_clean_client_is_bitwise_noop():
+    """A clean client's payload must pass through injection BIT-exactly
+    (fault=None and fault-with-clean-draw paths must agree)."""
+    key = jax.random.PRNGKey(0)
+    u = {"w": jax.random.normal(key, (5, 4)), "b": jnp.ones((4,))}
+    r = jax.tree.map(lambda x: x * 0.5, u)
+    s = jax.tree.map(lambda x: x * 0.25, u)
+    out = faults_lib.poison_upload_one(
+        u, r, s, jnp.float32(0.0), jnp.float32(np.nan),
+        jnp.float32(1.0), jnp.float32(0.0))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(u)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_flip_wire_bits_targets_int8_only():
+    wire = {"q": jnp.zeros((64,), jnp.int8), "scale": jnp.float32(0.1)}
+    key = jnp.asarray([1, 2], jnp.uint32)
+    off = faults_lib.flip_wire_bits(wire, jnp.float32(0.0), key, 4)
+    assert np.asarray(off["q"]).tobytes() == bytes(64)
+    on = faults_lib.flip_wire_bits(wire, jnp.float32(1.0), key, 4)
+    assert np.asarray(on["q"]).any()              # bits actually flipped
+    assert float(on["scale"]) == float(wire["scale"])   # non-int8 untouched
+    # deterministic in the key
+    on2 = faults_lib.flip_wire_bits(wire, jnp.float32(1.0), key, 4)
+    np.testing.assert_array_equal(np.asarray(on["q"]), np.asarray(on2["q"]))
+
+
+def test_validity_gate_rejects_nan_and_outlier():
+    inliers = 1.0 + 0.01 * np.arange(15, dtype=np.float32)
+    norms = jnp.asarray(np.concatenate([inliers, [50.0, np.nan]]
+                                       ).reshape(-1, 1), jnp.float32)
+    finite = jnp.isfinite(norms).all(axis=1)
+    cand = jnp.ones(17, jnp.float32)
+    valid = np.asarray(faults_lib.validity_gate(norms, finite, cand, 3.0))
+    assert valid[16] == 0.0         # non-finite always rejected
+    assert valid[15] == 0.0         # 50x norm is far outside 3 sigma
+    assert valid[:15].all()
+    # degenerate blocks (<= 3 candidates): finite-only gate
+    small = np.asarray(faults_lib.validity_gate(
+        norms[:2], finite[:2], jnp.ones(2, jnp.float32), 3.0))
+    assert small.all()
+
+
+# ----------------------------------------------------- trimmed aggregation
+
+def test_trimmed_mean_drops_outliers():
+    vals = jnp.asarray([[1.0], [2.0], [3.0], [4.0], [100.0]], jnp.float32)
+    w = jnp.ones(5, jnp.float32)
+    fallback = {"x": jnp.zeros(())}
+    out = tree_trimmed_wmean_stacked({"x": vals}, w, None,
+                                     {"x": jnp.zeros((1,))}, trim=0.2)
+    # k = floor(0.2 * 5) = 1 trimmed from each side: mean(2, 3, 4)
+    np.testing.assert_allclose(np.asarray(out["x"]), [3.0], rtol=1e-6)
+    # zero-weight members never participate
+    w0 = jnp.asarray([1, 1, 1, 1, 0], jnp.float32)
+    out0 = tree_trimmed_wmean_stacked({"x": vals}, w0, None,
+                                      {"x": jnp.zeros((1,))}, trim=0.0)
+    np.testing.assert_allclose(np.asarray(out0["x"]), [2.5], rtol=1e-6)
+    # no surviving members -> fallback value
+    outf = tree_trimmed_wmean_stacked({"x": vals},
+                                      jnp.zeros(5, jnp.float32), None,
+                                      {"x": jnp.full((1,), 7.0)}, trim=0.0)
+    np.testing.assert_allclose(np.asarray(outf["x"]), [7.0], rtol=1e-6)
+
+
+def test_trimmed_defense_statically_rejected_off_batched():
+    for engine in ("sequential", "streaming"):
+        with pytest.raises(ValueError, match="batched engine"):
+            make_mini_server(engine, "dict", defense="trimmed")
+
+
+# --------------------------------------------------- cross-engine identity
+
+def test_cross_engine_fault_identity():
+    """With client_chunk >= cohort the three engines share the same gate
+    statistics block, so fault draws, rejections AND the defended global
+    must agree (fp32 accumulation-order tolerance)."""
+    results = {}
+    for engine in ("sequential", "batched", "streaming"):
+        srv = make_mini_server(engine, "dict", defense="clip",
+                               fault_rate=0.4, uplink_codec="int8",
+                               client_chunk=8)
+        hist = [srv.run_round() for _ in range(3)]
+        results[engine] = (srv, hist)
+    ref_srv, ref_hist = results["sequential"]
+    for engine in ("batched", "streaming"):
+        srv, hist = results[engine]
+        assert [r["rejected"] for r in hist] == \
+            [r["rejected"] for r in ref_hist]
+        assert [r["fault_kinds"] for r in hist] == \
+            [r["fault_kinds"] for r in ref_hist]
+        assert [r["arrived_mask"] for r in hist] == \
+            [r["arrived_mask"] for r in ref_hist]
+        assert np.abs(_glob(srv) - _glob(ref_srv)).max() < 5e-5
+
+
+def test_defense_keeps_global_finite_under_nan_faults():
+    """defense='none' lets one NaN client poison the aggregate; the
+    clip gate rejects it and stays within a small loss gap of the
+    fault-free run."""
+    from repro.fl.faults import FaultPlan as FP
+
+    def run(defense, rate):
+        srv = make_mini_server("batched", "dict", defense=defense)
+        if rate:
+            srv.scfg.faults = FP(rate=rate, kinds=("nan", "byzantine"),
+                                 seed=1)
+        hist = [srv.run_round() for _ in range(4)]
+        return srv, hist
+
+    clean, hist_clean = run("none", 0.0)
+    undefended, _ = run("none", 0.25)
+    defended, hist_def = run("clip", 0.25)
+    assert not np.isfinite(_glob(undefended)).all()
+    assert np.isfinite(_glob(defended)).all()
+    gap = abs(hist_def[-1]["mean_loss"] - hist_clean[-1]["mean_loss"])
+    assert gap < 0.25, f"defended loss gap {gap:.3f} too large"
+    assert sum(r["rejected"] for r in hist_def) > 0
+
+
+def test_recovery_resamples_cohort():
+    """When crashed + rejected clients exceed recover_frac, the round
+    re-samples a replacement cohort from a salted stream (bounded by
+    recover_retries) and records the attempt count."""
+    from repro.fl.faults import FaultPlan as FP
+
+    srv = make_mini_server("batched", "dict", defense="clip",
+                           recover_retries=2, recover_frac=0.3)
+    srv.scfg.faults = FP(rate=0.8, kinds=("crash", "nan"), seed=0)
+    hist = [srv.run_round() for _ in range(3)]
+    assert any(r["retries"] > 0 for r in hist)
+    for r in hist:
+        assert set(r["fault_kinds"]) <= {"crash", "nan"}
+        assert r["retries"] <= 2
+        assert np.isfinite(_glob(srv)).all()
+    # recovery must not disturb the legacy RNG stream: a fault-free
+    # server's post-run selection state is what a no-retry run produces
+    srv_plain = make_mini_server("batched", "dict")
+    srv_plain.run(rounds=3)
+    s0 = srv.rng.get_state()
+    s1 = srv_plain.rng.get_state()
+    np.testing.assert_array_equal(s0[1], s1[1])
+    assert s0[2] == s1[2]
+
+
+def test_mean_loss_ignores_nonfinite_clients():
+    """One NaN-loss client must not poison the round's mean_loss; the
+    record keeps the non-finite count for diagnosis."""
+    from repro.fl.server import _loss_stats
+
+    mean, bad = _loss_stats([1.0, float("nan"), 3.0])
+    assert mean == 2.0 and bad == 1
+    mean, bad = _loss_stats([float("inf")])
+    assert np.isnan(mean) and bad == 1
+    mean, bad = _loss_stats([1.0, 3.0])
+    assert mean == 2.0 and bad == 0  # all-finite: plain mean, bitwise

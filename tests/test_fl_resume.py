@@ -1,0 +1,172 @@
+"""Bitwise crash/resume for all three engines + checkpoint atomicity.
+
+An FL run killed at a round boundary and resumed from its checkpoint
+must reproduce the uninterrupted run BITWISE: global params, per-client
+state, comm totals and the history records — for every engine x state
+store, including error-feedback codecs (the EF accumulator is client
+state and must survive the round trip) and fault/defense rounds.
+
+Plus the CheckpointManager contracts the resume guarantee rests on:
+async save failures surface on the caller thread instead of dying with
+the daemon thread, and a crash mid-save never corrupts (or publishes)
+a step directory.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.program_check import make_mini_server
+from repro.checkpoint import CheckpointManager
+
+EF_CODEC = "delta|topk0.5|int8"
+
+
+def _state_bytes(srv):
+    """Every aggregate-relevant array, as one bytes blob (bitwise)."""
+    trees = [srv.global_params, srv.server_state]
+    for cid in sorted(srv.client_states):
+        trees.append(srv.client_states[cid])
+    for cid in sorted(srv.local_trees):
+        trees.append(srv.local_trees[cid])
+    if srv.arena is not None:
+        trees += [srv.arena.state, srv.arena.participation]
+        if srv.arena.residents is not None:
+            trees.append(srv.arena.residents)
+    return b"".join(np.asarray(x).tobytes()
+                    for t in trees for x in jax.tree.leaves(t))
+
+
+def _hist_key(hist):
+    return [(r["round"], r["mean_loss"], r.get("down_bytes"),
+             r.get("up_bytes"), tuple(r.get("arrived_mask", ())),
+             r.get("rejected"), r.get("retries")) for r in hist]
+
+
+MATRIX = [
+    ("sequential", "dict", EF_CODEC, "fedavg"),
+    ("batched", "dict", EF_CODEC, "scaffold"),
+    ("batched", "arena", EF_CODEC, "fedavg"),
+    ("streaming", "dict", EF_CODEC, "fedadam"),
+    ("streaming", "arena", EF_CODEC, "scaffold"),
+]
+
+
+@pytest.mark.parametrize("engine,store,codec,strategy", MATRIX)
+def test_resume_is_bitwise(tmp_path, engine, store, codec, strategy):
+    kw = dict(participation=0.75, uplink_codec=codec, strategy=strategy,
+              defense="clip", fault_rate=0.3)
+
+    srv_a = make_mini_server(engine, store, **kw)
+    hist_a = srv_a.run(rounds=4)
+
+    d = str(tmp_path / "ck")
+    srv_b = make_mini_server(engine, store, **kw)
+    srv_b.run(rounds=2, ckpt=CheckpointManager(d))
+    del srv_b   # "kill" after round 2: only the checkpoint survives
+
+    srv_c = make_mini_server(engine, store, **kw)
+    step = srv_c.restore_checkpoint(CheckpointManager(d))
+    assert step == 2
+    hist_c = srv_c.run(rounds=4, ckpt=CheckpointManager(d))
+
+    assert _hist_key(hist_a) == _hist_key(hist_c)
+    assert _state_bytes(srv_a) == _state_bytes(srv_c)
+    assert srv_a.comm_log.up_bytes == srv_c.comm_log.up_bytes
+    assert srv_a.comm_log.down_bytes == srv_c.comm_log.down_bytes
+    assert srv_a.round_idx == srv_c.round_idx
+
+
+def test_resume_restores_downlink_codec_state(tmp_path):
+    """Delta downlink refs + server-side EF must survive the round trip
+    (they shift every later broadcast if lost)."""
+    kw = dict(downlink_codec="delta|int8", participation=0.75)
+    srv_a = make_mini_server("batched", "dict", **kw)
+    srv_a.run(rounds=4)
+    d = str(tmp_path / "ck")
+    srv_b = make_mini_server("batched", "dict", **kw)
+    srv_b.run(rounds=2, ckpt=CheckpointManager(d))
+    srv_c = make_mini_server("batched", "dict", **kw)
+    srv_c.restore_checkpoint(CheckpointManager(d))
+    srv_c.run(rounds=4, ckpt=CheckpointManager(d))
+    assert np.concatenate(
+        [np.asarray(x).ravel() for x in jax.tree.leaves(
+            srv_a.global_params)]).tobytes() == np.concatenate(
+        [np.asarray(x).ravel() for x in jax.tree.leaves(
+            srv_c.global_params)]).tobytes()
+
+
+def test_run_checkpoints_every_k(tmp_path):
+    d = str(tmp_path / "ck")
+    srv = make_mini_server("batched", "dict")
+    mgr = CheckpointManager(d, keep=0)
+    srv.run(rounds=4, ckpt=mgr, ckpt_every=2)
+    assert mgr.all_steps() == [2, 4]
+
+
+# ------------------------------------------------ manager failure modes
+
+def test_async_save_error_surfaces(tmp_path, monkeypatch):
+    """An async save that fails must raise on the NEXT wait()/save(),
+    not die silently with the daemon thread."""
+    mgr = CheckpointManager(str(tmp_path / "ck"), async_save=True)
+
+    def boom(step, host_tree, extra):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(mgr, "_write", boom)
+    mgr.save(0, {"x": np.zeros(3)})
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    # the error is consumed: the manager is usable again
+    mgr.wait()
+
+    mgr2 = CheckpointManager(str(tmp_path / "ck2"), async_save=True)
+    monkeypatch.setattr(mgr2, "_write", boom)
+    mgr2.save(0, {"x": np.zeros(3)})
+    with pytest.raises(OSError, match="disk full"):
+        mgr2.save(1, {"x": np.zeros(3)})   # save() re-raises via wait()
+
+
+def test_kill_mid_save_never_corrupts(tmp_path, monkeypatch):
+    """A crash between the tmp-dir write and the atomic rename leaves no
+    step_* directory behind: the previous checkpoint stays the latest
+    restorable one."""
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d)
+    tree = {"x": np.arange(5, dtype=np.float32)}
+    mgr.save(1, tree, extra={"round_idx": 1})
+
+    real_savez = np.savez
+
+    def dying_savez(path, **arrays):
+        real_savez(path, **arrays)   # partial artifacts land in tmp
+        raise KeyboardInterrupt("killed mid-save")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(KeyboardInterrupt):
+        mgr.save(2, {"x": np.full(5, 9.0, np.float32)})
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    # the half-written step never published; step 1 is intact
+    assert mgr.all_steps() == [1]
+    assert not os.path.exists(os.path.join(d, "step_0000000002"))
+    restored, extra = mgr.restore(None, tree)
+    np.testing.assert_array_equal(restored["x"], tree["x"])
+    assert extra["round_idx"] == 1
+    # and a later save of the same step succeeds over the stale tmp dir
+    mgr.save(2, {"x": np.full(5, 9.0, np.float32)})
+    assert mgr.all_steps() == [1, 2]
+
+
+def test_restore_items_structure_free(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    tree = {"a": {"b": np.arange(4, dtype=np.int32)},
+            "c": np.float32(2.5)}
+    mgr.save(3, tree, extra={"k": "v"})
+    by_path, extra, step = mgr.restore_items()
+    assert step == 3
+    assert extra == {"k": "v"}
+    np.testing.assert_array_equal(by_path["a/b"], tree["a"]["b"])
+    np.testing.assert_array_equal(by_path["c"], np.float32(2.5))
