@@ -1,8 +1,11 @@
-"""Serving example: pre-compose FedPara weights, prefill, decode.
+"""Serving example: FL checkpoint -> planned decode engine.
 
-Thin wrapper over repro.launch.serve with a reduced qwen3-style model —
-demonstrates the paper's inference-time story (W is pre-composed ONCE,
-so FedPara adds zero per-token cost at serving).
+Thin wrapper over repro.launch.serve — trains a miniature pFedPara
+federation, checkpoints it, then serves TWO distinct users per step
+from the resident arena with the cost-model ("auto") weight layout:
+precomposed int8 caches where the roofline favors them, fused
+never-materialize factor matmuls where it doesn't. Prints the
+per-layer decision table, then warmed-up prefill/decode timings.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -11,6 +14,7 @@ import sys
 from repro.launch import serve
 
 if __name__ == "__main__":
-    sys.argv = [sys.argv[0], "--arch", "qwen3-8b", "--preset", "cpu-small",
-                "--batch", "2", "--prompt-len", "16", "--gen-len", "16"]
+    sys.argv = [sys.argv[0], "--mode", "auto", "--users", "2",
+                "--batch", "2", "--rounds", "1", "--prompt-len", "8",
+                "--gen-len", "8"]
     serve.main()

@@ -81,6 +81,27 @@ def agg_vmem(bc: int, bl: int, wire_itemsize: int = 1) -> int:
     return DOUBLE_BUFFER * stream + bl * 4
 
 
+def serve_kernel_vmem(kind: str, bb: int, bm: int, bn: int, r: int) -> int:
+    """Working-set bytes of one grid step of a serve kernel body
+    (kernels/serve_matmul.py; returns bytes directly — the int8 cache
+    tile and its fp32 in-VMEM widened copy have different itemsizes).
+
+    ``w8``: x(bb,bm) + int8 w(bm,bn) + scale(1,bn) + out(bb,bn)
+    streamed; fp32 acc(bb,bn) + the widened w tile as scratch/temp.
+    ``resid`` (cache_residual, single- or many-user — identical per-step
+    footprint): additionally streams the (bm,r)/(bn,r) user factor
+    slices and forms the (bm,bn) fp32 residual tile in VMEM.
+    """
+    stream = 4 * bb * bm + bm * bn + 4 * bn + 4 * bb * bn
+    scratch = 4 * bb * bn + 4 * bm * bn
+    if kind == "resid":
+        stream += 4 * (bm * r + bn * r)
+        scratch += 4 * bm * bn
+    elif kind != "w8":
+        raise ValueError(f"unknown serve kernel body {kind!r}")
+    return DOUBLE_BUFFER * stream + scratch
+
+
 # ----------------------------------------------------------- shape enum
 
 @dataclass
@@ -162,6 +183,8 @@ def enumerate_config(name: str):
 # ---------------------------------------------------------------- checks
 
 MATMUL_BODIES = ("fwd", "dx", "dfx", "dfy")
+SERVE_BODIES = ("w8", "resid")
+INT8_SUBLANE = 32                  # int8 second-minor tiling minimum
 # Paper FL regime batch per local step; the kernels clamp block_b to the
 # actual batch so this only caps the estimate from above.
 ASSUMED_BATCH = 128
@@ -197,6 +220,34 @@ def check_layer(config: str, path: str, m: int, n: int, r: int
     return out
 
 
+def check_serve_layer(config: str, path: str, m: int, n: int, r: int
+                      ) -> List[LayerCheck]:
+    """Serve-kernel tiles (int8 cache matmul + pFedPara cache+residual)
+    for one factor layer — every factorized layer is a candidate for the
+    precomposed serving cache."""
+    from repro.kernels import blocks
+
+    bb, bm, bn = blocks.select_serve_blocks(m, n, r)
+    out = []
+    for body in SERVE_BODIES:
+        lc = LayerCheck(config, path, m, n, r, body, (bb, bm, bn),
+                        serve_kernel_vmem(body, bb, bm, bn, r))
+        if bb % SUBLANE or bm % INT8_SUBLANE or bn % LANE:
+            lc.valid = False
+            lc.notes.append(
+                f"tile misaligned: need bb%{SUBLANE}==0, "
+                f"bm%{INT8_SUBLANE}==0 (int8 sublane), bn%{LANE}==0")
+        if _ceil_mult(m, bm) // bm < 1 or _ceil_mult(n, bn) // bn < 1:
+            lc.valid = False
+            lc.notes.append("grid does not cover the operand")
+        if not lc.fits:
+            lc.notes.append(
+                f"exceeds v5e VMEM budget by "
+                f"{(lc.vmem - VMEM_BUDGET) / (1 << 20):.1f}MiB")
+        out.append(lc)
+    return out
+
+
 def check_agg_leaf(config: str, path: str, length: int,
                    clients: int = 64) -> LayerCheck:
     from repro.kernels import blocks
@@ -220,6 +271,7 @@ def check_config(name: str, *, agg_leaves: bool = True) -> List[LayerCheck]:
     out = []
     for path, m, n, r in factor_shapes(shapes):
         out += check_layer(name, path, m, n, r)
+        out += check_serve_layer(name, path, m, n, r)
     if agg_leaves:
         seen = set()
         for path, length in payload_lengths(shapes):

@@ -397,10 +397,86 @@ def check_defense_retrace() -> List[CheckResult]:
     return out
 
 
+# ---------------------------------------------------------------- serving
+
+def _mini_serve_engine(mode: str, *, use_pallas: bool, users: int = 4,
+                       batch: int = 4, seed: int = 0):
+    """A tiny pFedPara ServeEngine (2-layer decoder, 4 resident users
+    with random personal halves) whose decode program carries every
+    contract of the full-size one."""
+    import dataclasses
+
+    from repro.configs import get_arch
+    from repro.fl import comm
+    from repro.nn.transformer import ModelOptions, build_model
+    from repro.serve import ServeEngine
+
+    cfg = get_arch("qwen3-8b").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2, param=dataclasses.replace(
+        cfg.param, kind="pfedpara", min_dim_for_factorization=8, gamma=0.5))
+    opts = ModelOptions(attn_chunk=8, ssm_chunk=8, logit_chunk=16,
+                        dtype=jnp.float32)
+    model = build_model(cfg, opts)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    local_trees = {
+        u: comm.split_pfedpara(
+            model.init_params(jax.random.PRNGKey(seed + 1 + u)))[1]
+        for u in range(users)}
+    eng = ServeEngine(cfg, params, local_trees, mode=mode, batch=batch,
+                      use_pallas=use_pallas, opts=opts)
+    return eng, cfg
+
+
+def check_serve_retrace() -> List[CheckResult]:
+    """Decode must compile exactly once per engine config: 16 steps over
+    2 DIFFERENT user cohorts reuse the first step's program (position
+    and user-row indices are traced arguments, the KV cache is donated
+    in place)."""
+    out = []
+    for mode in ("precompose", "fused"):
+        eng, cfg = _mini_serve_engine(mode, use_pallas=False)
+        cache = eng.init_cache(4, 24)
+        tok = jnp.zeros((4, 1), jnp.int32)
+        cohorts = ([0, 1, 2, 3], [3, 2, 1, 0])
+        logits, cache = eng.decode_step(cache, tok, 0, user_ids=cohorts[0])
+        with CompileCounter() as cc:
+            for i in range(1, 16):
+                logits, cache = eng.decode_step(
+                    cache, tok, i, user_ids=cohorts[i % 2])
+        out.append(CheckResult(
+            f"serve-retrace:{mode}", not cc.events,
+            "0 recompiles over 15 steps x 2 cohorts" if not cc.events
+            else f"{len(cc.events)} recompile(s): {sorted(set(cc.events))}"))
+    return out
+
+
+def check_serve_wire_dtype() -> List[CheckResult]:
+    """The int8 precomposed cache must reach the matmul at int8: any
+    fp32 widen of an int8 array outside a pallas_call body means the
+    cache is being dequantized in HBM — the full dense-fp32 weight
+    stream the cache exists to avoid."""
+    eng, cfg = _mini_serve_engine("precompose", use_pallas=True)
+    cache = eng.init_cache(4, 24)
+    rows = eng.arena.rows_for([0, 1, 2, 3])
+    args = (eng.serve_params, eng.arena.tree, cache,
+            jnp.zeros((4, 1), jnp.int32), jnp.int32(0), rows)
+    jaxpr = eng._jit_decode.trace(*jax.tree.map(_spec, args)).jaxpr
+    bad = widening_converts(jaxpr, src_dtypes=("int8",))
+    return [CheckResult(
+        "serve-wire-dtype:int8-cache", not bad,
+        "int8 cache widened only inside pallas_call" if not bad
+        else "; ".join(bad[:4]))]
+
+
+def check_serve() -> List[CheckResult]:
+    return check_serve_retrace() + check_serve_wire_dtype()
+
+
 # ------------------------------------------------------------------- CLI
 
 def run_all(fast: bool = False) -> List[CheckResult]:
-    results = check_donation() + check_wire_dtype() + check_callbacks()
+    results = (check_donation() + check_wire_dtype() + check_callbacks()
+               + check_serve())
     if not fast:
         results += check_retrace() + check_defense_retrace()
     return results

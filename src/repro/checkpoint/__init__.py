@@ -1,3 +1,3 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, unflatten_paths
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "unflatten_paths"]

@@ -34,6 +34,50 @@ def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
     return out
 
 
+def unflatten_paths(by_path: Dict[str, Any], prefix: str = "",
+                    listify: bool = True) -> Any:
+    """Rebuild a nested tree from the "/"-joined paths of
+    :meth:`CheckpointManager.restore_items`.
+
+    The inverse of the manager's path flattening for dict/list pytrees:
+    every path component becomes a dict key; with ``listify`` (default),
+    dicts whose keys are exactly "0".."k-1" are converted back to lists
+    (list-structured model subtrees, e.g. xLSTM block stacks, roundtrip
+    losslessly). ``prefix`` selects a subtree ("global_params",
+    "local_trees/3", ...) and strips it from the returned keys.
+
+    Serving restores through this: the FL server's checkpoint structure
+    is data-dependent (per-client entries), so a serve process cannot
+    supply a target_tree up front — it rebuilds the tree from paths and
+    picks out ``global_params`` / ``local_trees/<cid>``.
+    """
+    if prefix and not prefix.endswith("/"):
+        prefix = prefix + "/"
+    root: Dict[str, Any] = {}
+    for path, leaf in by_path.items():
+        if prefix:
+            if not path.startswith(prefix):
+                continue
+            path = path[len(prefix):]
+        parts = path.split("/")
+        node = root
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = leaf
+
+    def walk(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: walk(v) for k, v in node.items()}
+        if listify and out and all(k.isdigit() for k in out):
+            idx = sorted(out, key=int)
+            if idx == [str(i) for i in range(len(idx))]:
+                return [out[k] for k in idx]
+        return out
+
+    return walk(root)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = False):
         self.dir = directory

@@ -24,6 +24,11 @@ class ParamCfg:
                                    # every dense() of this parameterization:
                                    # training never materializes W (custom
                                    # VJP, repro.kernels.fedpara_grad)
+    gram_batch: int = 0            # serve decode: row counts <= this use the
+                                   # Hadamard-Gram identity instead of the
+                                   # tile kernel (repro.serve cost model
+                                   # sets it; 0 = never, so training paths
+                                   # are untouched)
 
 
 @dataclass(frozen=True)

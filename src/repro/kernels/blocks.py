@@ -36,6 +36,39 @@ def select_blocks(m: int, n: int, r: int) -> Tuple[int, int, int]:
     return _TABLE[-1][1]
 
 
+# ---------------------------------------------------------- serving tiles
+#
+# The serve kernels (kernels/serve_matmul.py) carry a dense (bm, bn)
+# weight-cache tile — int8 at 1 B/elt, widened to fp32 in VMEM — so
+# their VMEM high-water mark is the widened cache tile plus the fp32
+# accumulator, not factor slices. block_b stays small: decode batches
+# are tiny and a narrow activation tile leaves headroom for wide n
+# tiles that amortize cache-tile fetches. bm is kept a multiple of 32
+# (the int8 sublane minimum) and bn of 128 (lane minimum).
+
+# max(m, n) lower bound -> (block_b, block_m, block_n); first match wins.
+_SERVE_TABLE = (
+    # huge layers: wide tiles, ~1 MB widened cache tile in VMEM
+    (8192, (64, 512, 512)),
+    # large MXU-aligned layers
+    (1024, (64, 256, 512)),
+    # mid-size layers
+    (256, (32, 256, 256)),
+    # small layers (smoke-size models): one or two tiles per axis
+    (0, (8, 128, 128)),
+)
+
+
+def select_serve_blocks(m: int, n: int, r: int) -> Tuple[int, int, int]:
+    """(block_b, block_m, block_n) for the serve cache/residual kernels."""
+    del r  # residual factor slices ride in the minor dim
+    mn = max(m, n)
+    for min_mn, blocks in _SERVE_TABLE:
+        if mn >= min_mn:
+            return blocks
+    return _SERVE_TABLE[-1][1]
+
+
 # --------------------------------------------------- dequant-aggregate tiles
 #
 # The fused dequant-accumulate kernel (kernels/agg.py) reduces a

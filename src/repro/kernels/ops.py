@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import agg, blocks, fedpara_grad, ref
+from repro.kernels import agg, blocks, fedpara_grad, ref, serve_matmul
 from repro.kernels.fedpara_compose import fedpara_compose as _compose
 
 
@@ -107,6 +107,86 @@ def pfedpara_compose(x1, y1, x2, y2, *, interpret=None, **kw):
     return _compose(x1, y1, x2, y2, plus_one=True, interpret=interpret, **kw)
 
 
+def _serve_blocks(m, n, r, block_b, block_m, block_n):
+    tb, tm, tn = blocks.select_serve_blocks(m, n, r)
+    return block_b or tb, block_m or tm, block_n or tn
+
+
+def w8_matmul(x, w, scale=None, *, interpret=None, block_b=None,
+              block_m=None, block_n=None, out_dtype=None):
+    """y = (x @ W)·s against a pre-composed serving weight cache.
+
+    Args:
+        x: activations ``(B, m)``.
+        w: cached weight ``(m, n)`` — int8 (with ``scale``) or fp16/bf16.
+        scale: per-output-channel scales ``(1, n)`` fp32 (None for an
+            unquantized cache).
+        interpret: force Pallas interpret mode (default: auto).
+        block_b/block_m/block_n: tile overrides (default: the serve tile
+            table ``repro.kernels.blocks.select_serve_blocks``).
+        out_dtype: output dtype (default: x's dtype).
+
+    Returns:
+        ``(B, n)``. An int8 cache is widened only inside the kernel's
+        VMEM tiles — never in HBM (the serve program contract).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    bb, bm, bn = _serve_blocks(w.shape[0], w.shape[1], 0,
+                               block_b, block_m, block_n)
+    return serve_matmul.w8_matmul(
+        x, w, scale, block_b=bb, block_m=bm, block_n=bn,
+        interpret=interpret, out_dtype=out_dtype)
+
+
+def cache_residual_matmul(x, w, scale, x2, y2, *, interpret=None,
+                          block_b=None, block_m=None, block_n=None,
+                          out_dtype=None):
+    """pFedPara serve matmul: y = (x @ (W ⊙ (X2Y2ᵀ + 1)))·s, where W is
+    the shared composed-W1 cache (int8 or fp16) and (X2, Y2) are a
+    user's personal factors — the per-user weight never exists.
+
+    Args:
+        x: activations — ``(B, m)`` for one user, or ``(U, t, m)`` for U
+            distinct users (t tokens each, one launch total).
+        w: shared cache ``(m, n)``; ``scale``: ``(1, n)`` fp32 or None.
+        x2, y2: personal factors ``(m, r)``/``(n, r)``, with a leading
+            user axis in the many-user layout.
+        interpret / block_* / out_dtype: as :func:`w8_matmul`.
+
+    Returns:
+        ``(B, n)`` or ``(U, t, n)``.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    bb, bm, bn = _serve_blocks(w.shape[0], w.shape[1], x2.shape[-1],
+                               block_b, block_m, block_n)
+    return serve_matmul.cache_residual_matmul(
+        x, w, scale, x2, y2, block_b=bb, block_m=bm, block_n=bn,
+        interpret=interpret, out_dtype=out_dtype)
+
+
+def fedpara_gram_decode(x, x1, y1, x2, y2, *, kind=None, out_dtype=None):
+    """Decode-batch fused matmul via the Hadamard-Gram identity:
+    y = rowsum((Y1·(X1ᵀ diag(x) X2)) ⊙ Y2) — O(r²(m+n)) FLOPs per token,
+    factor bytes only, and NO dense (m, n) intermediate anywhere (so no
+    Pallas kernel is needed; XLA has nothing to materialize).
+
+    Args:
+        x: activations ``(B, m)``, or ``(U, t, m)`` with per-user
+            residual factors.
+        x1, y1: shared factors ``(m, r1)``/``(n, r1)``.
+        x2, y2: residual factors — shared ``(m, r2)``/``(n, r2)`` or
+            per-user ``(U, m, r2)``/``(U, n, r2)``.
+        kind: ``fedpara`` | ``pfedpara`` (the tanh variant is not
+            low-rank and is rejected).
+        out_dtype: output dtype (default: x's dtype).
+
+    Returns:
+        ``(B, n)`` or ``(U, t, n)``.
+    """
+    return serve_matmul.fedpara_gram_decode(
+        x, x1, y1, x2, y2, kind=resolve_kind(kind), out_dtype=out_dtype)
+
+
 def dequant_acc(acc, q, coeff, *, interpret=None, **kw):
     """acc += coeff @ dequant(q): fused streaming-aggregation reduction
     (interpret resolved like the matmul kernels)."""
@@ -124,5 +204,8 @@ pfedpara_compose_ref = ref.pfedpara_compose_ref
 fedpara_matmul_vjp_ref = ref.fedpara_matmul_vjp_ref
 dequant_acc_ref = ref.dequant_acc_ref
 tree_dequant_acc_ref = ref.tree_dequant_acc_ref
+w8_matmul_ref = ref.w8_matmul_ref
+cache_residual_ref = ref.cache_residual_ref
 select_blocks = blocks.select_blocks
 select_agg_blocks = blocks.select_agg_blocks
+select_serve_blocks = blocks.select_serve_blocks

@@ -98,6 +98,38 @@ def tree_dequant_acc_ref(acc_tree, wire, weights: jax.Array):
     return walk(acc_tree, wire)
 
 
+def w8_matmul_ref(x: jax.Array, w: jax.Array, scale: jax.Array = None, *,
+                  out_dtype=None) -> jax.Array:
+    """Dense oracle for the serve weight-cache matmul: y = (x @ W) · s,
+    dequantizing the whole cache to fp32 up front (the widening the
+    Pallas kernel must avoid outside VMEM)."""
+    wf = w.astype(jnp.float32)
+    if scale is not None:
+        wf = wf * scale.reshape(1, -1).astype(jnp.float32)
+    y = x.astype(jnp.float32) @ wf
+    return y.astype(out_dtype or x.dtype)
+
+
+def cache_residual_ref(x: jax.Array, w: jax.Array, scale: jax.Array,
+                       x2: jax.Array, y2: jax.Array, *,
+                       out_dtype=None) -> jax.Array:
+    """Dense oracle for the pFedPara cache+residual kernel: materialize
+    W_u = dequant(W) ⊙ (X2ᵤY2ᵤᵀ + 1) per user and contract. Handles the
+    single-user (x: (B, m)) and many-user (x: (U, t, m), per-user
+    factors) layouts."""
+    wf = w.astype(jnp.float32)
+    if scale is not None:
+        wf = wf * scale.reshape(1, -1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    x2f, y2f = x2.astype(jnp.float32), y2.astype(jnp.float32)
+    if x.ndim == 3:
+        wu = wf[None] * (jnp.einsum("umr,unr->umn", x2f, y2f) + 1.0)
+        y = jnp.einsum("utm,umn->utn", xf, wu)
+    else:
+        y = xf @ (wf * (x2f @ y2f.T + 1.0))
+    return y.astype(out_dtype or x.dtype)
+
+
 def fedpara_matmul_vjp_ref(
     x: jax.Array,
     x1: jax.Array,

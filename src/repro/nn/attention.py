@@ -265,6 +265,7 @@ def decode_attention(
     window,
     use_rope: bool = True,
     dtype=jnp.bfloat16,
+    use_pallas: bool = False,
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """One-token decode against the (possibly ring-buffered) KV cache."""
     B = x.shape[0]
@@ -275,7 +276,7 @@ def decode_attention(
     S_cache = ck.shape[1]
 
     pos_b = jnp.broadcast_to(pos, (B, 1)) if use_rope else None
-    q, k, v = _project_qkv(p, cfg, x, x, pos_b, pos_b, dtype, False)
+    q, k, v = _project_qkv(p, cfg, x, x, pos_b, pos_b, dtype, use_pallas)
 
     slot = pos % S_cache
     ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
@@ -299,7 +300,7 @@ def decode_attention(
     pbs = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", pbs.astype(cv.dtype), cv)
     out = out.reshape(B, 1, H * hd)
-    return dense(p["wo"], out, cfg.param, dtype, False), (ck, cv)
+    return dense(p["wo"], out, cfg.param, dtype, use_pallas), (ck, cv)
 
 
 def cross_decode_attention(
@@ -308,17 +309,18 @@ def cross_decode_attention(
     cfg: ArchConfig,
     kv: Tuple[jax.Array, jax.Array],   # precomputed encoder K/V (B, S_enc, Hkv, hd)
     dtype=jnp.bfloat16,
+    use_pallas: bool = False,
 ) -> jax.Array:
     B = x.shape[0]
     hd = cfg.resolved_head_dim()
     H, Hkv = cfg.n_heads, cfg.n_kv_heads
     G = H // Hkv
     k, v = kv
-    q = dense(p["wq"], x, cfg.param, dtype).reshape(B, Hkv, G, hd)
+    q = dense(p["wq"], x, cfg.param, dtype, use_pallas).reshape(B, Hkv, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", q, k).astype(jnp.float32)
     pbs = jax.nn.softmax(s / (hd ** 0.5), axis=-1)
     out = jnp.einsum("bkgs,bskh->bkgh", pbs.astype(v.dtype), v).reshape(B, 1, H * hd)
-    return dense(p["wo"], out, cfg.param, dtype)
+    return dense(p["wo"], out, cfg.param, dtype, use_pallas)
 
 
 def cross_kv(p: Dict, enc_out: jax.Array, cfg: ArchConfig, dtype=jnp.bfloat16):

@@ -45,6 +45,21 @@ def materialize_auto(sub: Dict[str, jax.Array], kind_hint: str, dtype=None) -> j
     raise ValueError(f"unrecognized parameterized weight keys: {list(sub)}")
 
 
+def quantize_int8(w: jax.Array) -> Dict[str, jax.Array]:
+    """Quantize a composed weight to int8 with per-output-channel scales
+    ({'w_q', 'scale'}). The scale reduces only the contraction dim (-2),
+    keeping scan-stacked leading dims (L, ...) intact. Non-matrix or
+    integer leaves pass through as {'w'}."""
+    if w.ndim < 2 or w.dtype == jnp.int32:
+        return {"w": w}
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    wq = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127
+                  ).astype(jnp.int8)
+    return {"w_q": wq, "scale": scale.astype(jnp.float32)}
+
+
 def should_factorize(m: int, n: int, pcfg: ParamCfg) -> bool:
     if pcfg.kind == "original":
         return False
@@ -77,15 +92,45 @@ def dense(
     fused differentiable matmul (``repro.kernels.ops.fedpara_matmul``, a
     custom-VJP pair of Pallas kernels), so neither the forward nor the
     ``jax.grad`` backward ever materializes the dense (m, n) weight.
+
+    The serving engine (``repro.serve``) adds three more node layouts:
+    ``{'w_q', 'scale'}`` (int8 pre-composed cache, routed through the
+    serve Pallas kernel so the int8 array is never widened outside
+    ``pallas_call``), ``{'w1_q'|'w1', 'scale', 'ux2', 'uy2'}`` (pFedPara
+    shared cache + injected per-user residual factors — the fused
+    cache+residual kernel, single- or many-user), and factor nodes with
+    injected ``ux2/uy2`` (the fully-fused per-user Gram path). At row
+    counts <= ``pcfg.gram_batch`` fused fedpara/pfedpara matmuls use the
+    Hadamard-Gram decode identity instead of the tile kernel.
     """
-    if ((use_pallas or pcfg.use_pallas) and "x1" in sub
+    pallas = use_pallas or pcfg.use_pallas
+    lead = x.shape[:-1]
+    m = x.shape[-1]
+    rows = 1
+    for d in lead:
+        rows *= int(d)
+
+    if "ux2" in sub:  # serve: per-user pFedPara residual injected
+        return _serve_personalized(sub, x, pcfg, dtype, pallas)
+    if pallas and "w_q" in sub and sub["w_q"].ndim == 2:
+        from repro.kernels import ops
+
+        y = ops.w8_matmul(x.reshape(-1, m).astype(dtype), sub["w_q"],
+                          sub["scale"], out_dtype=dtype)
+        return y.reshape(*lead, y.shape[-1])
+    if (pallas and "x1" in sub
             and sub["x1"].ndim == 2
             and pcfg.kind in ("fedpara", "fedpara_tanh", "pfedpara")):
         from repro.kernels import ops
 
-        lead = x.shape[:-1]
+        if pcfg.gram_batch >= rows > 0 and pcfg.kind != "fedpara_tanh":
+            y = ops.fedpara_gram_decode(
+                x.reshape(-1, m).astype(dtype),
+                sub["x1"], sub["y1"], sub["x2"], sub["y2"],
+                kind=pcfg.kind, out_dtype=dtype)
+            return y.reshape(*lead, y.shape[-1])
         y = ops.fedpara_matmul(
-            x.reshape(-1, x.shape[-1]).astype(dtype),
+            x.reshape(-1, m).astype(dtype),
             sub["x1"], sub["y1"], sub["x2"], sub["y2"],
             kind=pcfg.kind,
             out_dtype=dtype,
@@ -94,6 +139,43 @@ def dense(
     # materialize_auto already delivers ``dtype`` for every factor path
     w = materialize_auto(sub, pcfg.kind, dtype)
     return jnp.einsum("...m,mn->...n", x.astype(dtype), w)
+
+
+def _serve_personalized(sub, x, pcfg: ParamCfg, dtype, pallas: bool):
+    """Serve-time pFedPara node with injected per-user factors.
+
+    ``{'w1_q'|'w1', 'scale', 'ux2', 'uy2'}`` — cache + residual kernel;
+    ``{'x1', 'y1', 'ux2', 'uy2'}`` — fully-fused per-user Gram decode.
+    ``ux2`` 3-D means many users: x (..., m) regroups to (U, t, m).
+    """
+    from repro.kernels import ops
+
+    lead = x.shape[:-1]
+    m = x.shape[-1]
+    ux2, uy2 = sub["ux2"], sub["uy2"]
+    many = ux2.ndim == 3
+    if many:
+        U = ux2.shape[0]
+        xk = x.reshape(U, -1, m).astype(dtype)
+    else:
+        xk = x.reshape(-1, m).astype(dtype)
+
+    if "w1_q" in sub or "w1" in sub:
+        w1 = sub.get("w1_q", sub.get("w1"))
+        scale = sub.get("scale")
+        if pallas:
+            y = ops.cache_residual_matmul(xk, w1, scale, ux2, uy2,
+                                          out_dtype=dtype)
+        else:  # dense fallback (materializes per-user W; oracles/tests)
+            from repro.kernels import ref
+
+            y = ref.cache_residual_ref(xk, w1, scale, ux2, uy2,
+                                       out_dtype=dtype)
+        return y.reshape(*lead, y.shape[-1])
+    # fully fused: shared (x1, y1) + per-user residual, via the Gram path
+    y = ops.fedpara_gram_decode(xk, sub["x1"], sub["y1"], ux2, uy2,
+                                kind="pfedpara", out_dtype=dtype)
+    return y.reshape(*lead, y.shape[-1])
 
 
 def precompose_tree(params: Any, pcfg: ParamCfg, dtype=jnp.bfloat16,
@@ -106,23 +188,11 @@ def precompose_tree(params: Any, pcfg: ParamCfg, dtype=jnp.bfloat16,
     def is_param_leafdict(d):
         return isinstance(d, dict) and any(k in d for k in ("w", "x", "x1", "t", "t1"))
 
-    def quantize(w):
-        if w.ndim < 2 or w.dtype == jnp.int32:
-            return {"w": w}
-        # reduce only the contraction dim (-2): keeps scan-stacked leading
-        # dims (L, ...) intact and gives per-output-channel scales
-        scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2,
-                        keepdims=True) / 127.0
-        scale = jnp.maximum(scale, 1e-8)
-        wq = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127
-                      ).astype(jnp.int8)
-        return {"w_q": wq, "scale": scale.astype(jnp.float32)}
-
     def walk(node, name=""):
         if is_param_leafdict(node):
             w = materialize_auto(node, pcfg.kind, dtype)
             if int8 and name not in ("embed", "unembed"):
-                return quantize(w)
+                return quantize_int8(w)
             return {"w": w}
         if isinstance(node, dict):
             return {k: walk(v, k) for k, v in node.items()}

@@ -341,7 +341,8 @@ class DecoderLM:
                 v = attn.dequantize_kv(kvc["v_q"], kvc["v_s"], opts.dtype)
                 y, (ck, cv) = attn.decode_attention(
                     p["attn"], x, cfg, (k, v), pos,
-                    window=window, dtype=opts.dtype)
+                    window=window, dtype=opts.dtype,
+                    use_pallas=opts.use_pallas)
                 kq, ks = attn.quantize_kv(ck)
                 vq, vs = attn.quantize_kv(cv)
                 new_kvc = {"k_q": kq, "k_s": ks, "v_q": vq, "v_s": vs}
@@ -349,6 +350,7 @@ class DecoderLM:
                 y, (ck, cv) = attn.decode_attention(
                     p["attn"], x, cfg, (kvc["k"], kvc["v"]), pos,
                     window=window, dtype=opts.dtype,
+                    use_pallas=opts.use_pallas,
                 )
                 new_kvc = {"k": ck, "v": cv}
             h = h + y
@@ -356,7 +358,7 @@ class DecoderLM:
             if cfg.n_experts:
                 h = h + moe_mod.moe_ffn(p["moe"], x, cfg, opts.dtype)
             else:
-                h = h + mlp(p["mlp"], x, cfg, opts.dtype)
+                h = h + mlp(p["mlp"], x, cfg, opts.dtype, opts.use_pallas)
             return h, new_kvc
 
         h, cache = self._decode_layers(body, h, params, cache, windows)
@@ -443,10 +445,12 @@ class HybridSSM:
         elif mode == "prefill":
             y, new_kv = attn.prefill_attention(sp["attn"], x, cfg, cache_kv,
                                                window=0, chunk=opts.attn_chunk,
-                                               dtype=opts.dtype)
+                                               dtype=opts.dtype,
+                                               use_pallas=opts.use_pallas)
         else:
             y, new_kv = attn.decode_attention(sp["attn"], x, cfg, cache_kv, pos,
-                                              window=0, dtype=opts.dtype)
+                                              window=0, dtype=opts.dtype,
+                                              use_pallas=opts.use_pallas)
         h = h + y
         x = rms_norm(h, sp["ln2"], cfg.norm_eps)
         h = h + mlp(sp["mlp"], x, cfg, opts.dtype, opts.use_pallas)
@@ -806,15 +810,17 @@ class EncDecLM:
             y, kv = attn.prefill_attention(p["self_attn"], x, cfg,
                                            (kvc["self"]["k"], kvc["self"]["v"]),
                                            window=0, chunk=opts.attn_chunk,
-                                           use_rope=False, dtype=opts.dtype)
+                                           use_rope=False, dtype=opts.dtype,
+                                           use_pallas=opts.use_pallas)
             h = h + y
             ck, cv = attn.cross_kv(p["cross_attn"], enc_out, cfg, opts.dtype)
             x = rms_norm(h, p["ln_x"], cfg.norm_eps)
             h = h + attn.full_attention(p["cross_attn"], x, cfg, window=0,
                                         chunk=opts.attn_chunk, causal=False,
-                                        use_rope=False, xkv=enc_out, dtype=opts.dtype)
+                                        use_rope=False, xkv=enc_out, dtype=opts.dtype,
+                                        use_pallas=opts.use_pallas)
             x = rms_norm(h, p["ln2"], cfg.norm_eps)
-            h = h + mlp(p["mlp"], x, cfg, opts.dtype)
+            h = h + mlp(p["mlp"], x, cfg, opts.dtype, opts.use_pallas)
             return h, {"self": {"k": kv[0], "v": kv[1]}, "cross": {"k": ck, "v": cv}}
 
         def wrapped(c, px):
@@ -846,14 +852,15 @@ class EncDecLM:
             x = rms_norm(h, p["ln1"], cfg.norm_eps)
             y, (ck, cv) = attn.decode_attention(
                 p["self_attn"], x, cfg, (kvc["self"]["k"], kvc["self"]["v"]), pos,
-                window=0, use_rope=False, dtype=opts.dtype)
+                window=0, use_rope=False, dtype=opts.dtype,
+                use_pallas=opts.use_pallas)
             h = h + y
             x = rms_norm(h, p["ln_x"], cfg.norm_eps)
             h = h + attn.cross_decode_attention(p["cross_attn"], x, cfg,
                                                 (kvc["cross"]["k"], kvc["cross"]["v"]),
-                                                opts.dtype)
+                                                opts.dtype, opts.use_pallas)
             x = rms_norm(h, p["ln2"], cfg.norm_eps)
-            h = h + mlp(p["mlp"], x, cfg, opts.dtype)
+            h = h + mlp(p["mlp"], x, cfg, opts.dtype, opts.use_pallas)
             return h, {"self": {"k": ck, "v": cv}, "cross": kvc["cross"]}
 
         per_layer = {"self": cache["self"], "cross": cache["cross"]}

@@ -1,0 +1,36 @@
+"""Serving: planned precompose-vs-fused decode over FL checkpoints.
+
+See docs/serving.md. Entry points: :class:`ServeEngine` (load, plan,
+decode), :func:`load_fl_checkpoint`, the :class:`UserArena` many-user
+personalization store, and the :mod:`repro.serve.cost_model` planner.
+"""
+from repro.serve.cache import build_serve_params, serve_state_bytes
+from repro.serve.cost_model import (
+    LayerDecision,
+    crossover_batch,
+    decide,
+    decision_table,
+    measure_modes,
+    mode_costs,
+    plan_params,
+    predict_us,
+)
+from repro.serve.engine import ServeEngine, load_fl_checkpoint
+from repro.serve.user_arena import UserArena, inject_users
+
+__all__ = [
+    "ServeEngine",
+    "UserArena",
+    "LayerDecision",
+    "build_serve_params",
+    "serve_state_bytes",
+    "crossover_batch",
+    "decide",
+    "decision_table",
+    "inject_users",
+    "load_fl_checkpoint",
+    "measure_modes",
+    "mode_costs",
+    "plan_params",
+    "predict_us",
+]

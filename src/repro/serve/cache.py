@@ -1,0 +1,85 @@
+"""Load-time serve-weight construction from a decision plan.
+
+``build_serve_params`` walks the restored global params in lockstep
+with a ``{path: LayerDecision}`` plan (``cost_model.plan_params``) and
+rewrites each factor node to the layout its decision calls for:
+
+fused
+    factors kept verbatim — decode composes nothing, streaming tiles
+    through VMEM (tile kernel) or running the Gram identity.
+
+precompose
+    W composed once here and cached: fp16 ``{'w'}`` or int8
+    ``{'w_q', 'scale'}`` with per-output-channel scales. For pFedPara
+    layers only the *shared* half W1 = X1·Y1ᵀ is composed —
+    ``{'w1_q'|'w1', 'scale'}`` — because the per-user (X2, Y2) residual
+    is applied inside the fused cache+residual kernel at decode time;
+    no per-user W ever exists.
+
+Embeddings/unembed stay in their native dtype (int8 would quantize the
+logit head; the paper keeps these dense anyway).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.nn.layers import materialize_auto, quantize_int8
+from repro.serve.cost_model import LayerDecision
+
+_NO_QUANT = ("embed", "unembed", "pos_embed")
+
+
+def _personalized(node: Dict[str, Any], kind: str) -> bool:
+    """A pFedPara factor node whose personal half lives in the arena
+    (global checkpoint halves carry x1/y1 only)."""
+    return kind == "pfedpara" and "x1" in node and "x2" not in node
+
+
+def build_serve_params(params: Any, kind: str,
+                       plan: Dict[str, LayerDecision],
+                       cache_dtype: str = "int8") -> Any:
+    """Rewrite ``params`` per the plan. ``cache_dtype``: 'int8' | 'fp16'
+    for precomposed caches."""
+
+    def compose_cached(node, name):
+        if _personalized(node, kind):
+            # shared W1 only; residual factors arrive via inject_users
+            w1 = jnp.einsum("...mr,...nr->...mn",
+                            node["x1"].astype(jnp.float32),
+                            node["y1"].astype(jnp.float32))
+            if cache_dtype == "int8":
+                q = quantize_int8(w1)
+                return {"w1_q": q["w_q"], "scale": q["scale"]}
+            return {"w1": w1.astype(jnp.float16)}
+        w = materialize_auto(node, kind, jnp.float32)
+        if cache_dtype == "int8" and name not in _NO_QUANT:
+            return quantize_int8(w)
+        return {"w": w.astype(jnp.float16)}
+
+    def walk(node, path="", name=""):
+        dec = plan.get(path)
+        if dec is not None and isinstance(node, dict):
+            if dec.mode == "precompose":
+                return compose_cached(node, name)
+            return dict(node)           # fused / dense: leave verbatim
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}" if path else str(k), k)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v, f"{path}/{i}" if path else str(i),
+                                   name) for i, v in enumerate(node))
+        return node
+
+    return walk(params)
+
+
+def serve_state_bytes(params: Any) -> int:
+    """Device bytes of a serve-params tree (cache-size accounting for
+    the many-user flat-memory claim)."""
+    import jax
+
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree.leaves(params)
+                   if hasattr(leaf, "size")))

@@ -1,0 +1,315 @@
+"""Per-layer precompose-vs-fused decision model for the serve engine.
+
+For each factorized layer (m, n, r) at a given decode batch B, two
+weight layouts compete:
+
+precompose
+    W composed once at load time and cached — fp16 (2mn bytes/step) or
+    int8 with per-channel scales (mn bytes/step, the serve w8 kernel).
+    Step FLOPs are the dense 2Bmn.
+
+fused
+    Only factors live in HBM. Two implementations: the tile kernel
+    (compose (bm, bn) tiles in VMEM; ~4mnr compose FLOPs per bb-slab of
+    rows) and the Hadamard-Gram identity (O(r²(m+n)) FLOPs per token, no
+    (m, n) object anywhere — see ``repro.kernels.serve_matmul``). The
+    cost model picks the cheaper implementation per batch.
+
+Costs are rooflines — time = max(bytes/BW, flops/peak) — keyed on
+(m, n, r, batch), with optional direct measurement (jit, warm up, then
+median-of-k timing of the exact op each mode runs). ``auto`` takes the
+measured branch when measurements exist, the analytic one otherwise.
+The resulting per-layer decisions are recorded as a table (serialized
+into ``BENCH_serve.json`` and printed by ``launch/serve.py``).
+
+pFedPara layers with resident users compare the shared-cache + residual
+kernel ("precompose": one int8 W1 for every user, per-user factors
+streamed through VMEM) against the fully-fused per-user Gram path.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Roofline constants (TPU v5e: 819 GB/s HBM, ~197 bf16 TFLOP/s) — the
+# analytic model ranks modes by max(bytes/BW, flops/peak); absolute
+# numbers only matter relatively, so CPU runs still pick sane modes.
+HBM_GBPS = 819.0
+PEAK_TFLOPS = 197.0
+
+MODES = ("precompose", "fused")
+
+
+def predict_us(bytes_: float, flops: float, *, hbm_gbps: float = HBM_GBPS,
+               peak_tflops: float = PEAK_TFLOPS) -> float:
+    """Roofline latency (µs) for a step moving ``bytes_`` and doing
+    ``flops``."""
+    return max(bytes_ / (hbm_gbps * 1e3), flops / (peak_tflops * 1e6))
+
+
+def mode_costs(m: int, n: int, r: int, batch: int, *, kind: str = "fedpara",
+               weight_dtype: str = "int8", users: int = 0,
+               block_b: int = 64) -> Dict[str, Dict[str, float]]:
+    """{mode: {bytes, flops, impl}} for one layer at one decode batch.
+
+    ``users`` > 0 marks a personalized pFedPara layer serving that many
+    distinct users per step (batch rows are user rows).
+    """
+    act = 2.0 * batch * (m + n)  # bf16 activations in + out
+    wbytes = m * n * (1 if weight_dtype == "int8" else 2) + 4 * n
+    fbytes = 4.0 * 4 * r * (m + n)  # four fp32 factor panels
+    out: Dict[str, Dict[str, float]] = {}
+    if users > 0 and kind == "pfedpara":
+        ufac = 2.0 * 4 * r * (m + n) * users  # gathered (X2, Y2) slices
+        # cache+residual kernel: the shared W1 tile stream repeats per
+        # user (outermost grid axis); residual compose ~2mnr per user.
+        out["precompose"] = {
+            "bytes": users * wbytes + ufac + act,
+            "flops": users * (2.0 * m * n * (r + 1)) + 2.0 * batch * m * n,
+            "impl": "cache_residual",
+        }
+        out["fused"] = {
+            "bytes": fbytes + ufac + 8.0 * batch * r * (m + n),
+            "flops": 2.0 * batch * (r * r + r) * (m + n),
+            "impl": "gram",
+        }
+        return out
+    out["precompose"] = {
+        "bytes": wbytes + act,
+        "flops": 2.0 * batch * m * n,
+        "impl": "w8" if weight_dtype == "int8" else "einsum",
+    }
+    # fused: gram (when the variant allows it) vs tile kernel
+    slabs = -(-batch // block_b)
+    tile = {
+        "bytes": fbytes * slabs + act,
+        "flops": slabs * 4.0 * m * n * r + 2.0 * batch * m * n,
+        "impl": "tile",
+    }
+    if kind == "fedpara_tanh":
+        out["fused"] = tile
+        return out
+    gram = {
+        # factors + (B, m, r)/(B, n, r) intermediates written and read
+        "bytes": fbytes + 8.0 * batch * r * (m + n) + act,
+        "flops": 2.0 * batch * r * r * (m + n)
+        + (2.0 * batch * r * (m + n) if kind == "pfedpara" else 0.0),
+        "impl": "gram",
+    }
+    out["fused"] = min((gram, tile), key=lambda c: predict_us(c["bytes"],
+                                                              c["flops"]))
+    return out
+
+
+def crossover_batch(m: int, n: int, r: int, *, kind: str = "fedpara",
+                    weight_dtype: str = "int8", max_batch: int = 4096) -> int:
+    """Smallest batch where precompose's roofline beats fused (doubling
+    scan; ``max_batch`` when fused wins everywhere)."""
+    b = 1
+    while b <= max_batch:
+        c = mode_costs(m, n, r, b, kind=kind, weight_dtype=weight_dtype)
+        if (predict_us(**_bf(c["precompose"]))
+                < predict_us(**_bf(c["fused"]))):
+            return b
+        b *= 2
+    return max_batch
+
+
+def _bf(c):
+    return {"bytes_": c["bytes"], "flops": c["flops"]}
+
+
+# ------------------------------------------------------------- measurement
+
+def _median_time_us(fn, args, reps: int = 5) -> float:
+    jax.block_until_ready(fn(*args))  # warm-up / compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def measure_modes(m: int, n: int, r: int, batch: int, *,
+                  kind: str = "fedpara", weight_dtype: str = "int8",
+                  users: int = 0, dtype=jnp.bfloat16,
+                  reps: int = 5) -> Dict[str, float]:
+    """Measured µs per mode: jit + run the exact single-layer op each
+    serving mode would execute, median of ``reps``."""
+    from repro.kernels import ops
+    from repro.nn.layers import quantize_int8
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    fac = [(jax.random.normal(ks[i], s) * 0.1).astype(jnp.float32)
+           for i, s in zip(range(1, 5), ((m, r), (n, r), (m, r), (n, r)))]
+    x1, y1, x2, y2 = fac
+    costs = mode_costs(m, n, r, batch, kind=kind, weight_dtype=weight_dtype,
+                       users=users)
+    out: Dict[str, float] = {}
+
+    if users > 0 and kind == "pfedpara":
+        w1 = jnp.einsum("mr,nr->mn", x1, y1)
+        node = quantize_int8(w1) if weight_dtype == "int8" else {
+            "w": w1.astype(jnp.float16)}
+        w = node.get("w_q", node.get("w"))
+        s = node.get("scale")
+        t = max(1, batch // users)
+        xs = jax.random.normal(ks[5], (users, t, m)).astype(dtype)
+        ux2 = jnp.broadcast_to(x2, (users, m, r)) + 0.0
+        uy2 = jnp.broadcast_to(y2, (users, n, r)) + 0.0
+        pre = jax.jit(lambda a, b, c: ops.cache_residual_matmul(
+            a, w, s, b, c, out_dtype=dtype))
+        out["precompose"] = _median_time_us(pre, (xs, ux2, uy2), reps)
+        fus = jax.jit(lambda a, b, c: ops.fedpara_gram_decode(
+            a, x1, y1, b, c, kind="pfedpara", out_dtype=dtype))
+        out["fused"] = _median_time_us(fus, (xs, ux2, uy2), reps)
+        return out
+
+    xs = jax.random.normal(ks[5], (batch, m)).astype(dtype)
+    wd = ops.fedpara_compose_ref(x1, y1, x2, y2, kind=kind,
+                                 out_dtype=jnp.float32)
+    if weight_dtype == "int8":
+        node = quantize_int8(wd)
+        pre = jax.jit(lambda a: ops.w8_matmul(a, node["w_q"], node["scale"],
+                                              out_dtype=dtype))
+    else:
+        wh = wd.astype(jnp.float16)
+        pre = jax.jit(lambda a: jnp.einsum(
+            "bm,mn->bn", a.astype(dtype), wh.astype(dtype)))
+    out["precompose"] = _median_time_us(pre, (xs,), reps)
+
+    impl = costs["fused"]["impl"]
+    if impl == "tile" and jax.default_backend() != "tpu":
+        # off-TPU the tile kernel only exists as interpret emulation —
+        # timing it measures the emulator, not serving. Measure what the
+        # backend would actually run: the Gram identity, or (tanh) the
+        # compose-then-einsum fallback.
+        impl = "gram" if kind != "fedpara_tanh" else "einsum"
+    if impl == "gram":
+        fus = jax.jit(lambda a: ops.fedpara_gram_decode(
+            a, x1, y1, x2, y2, kind=kind, out_dtype=dtype))
+    elif impl == "tile":
+        fus = jax.jit(lambda a: ops.fedpara_matmul(
+            a, x1, y1, x2, y2, kind=kind, out_dtype=dtype))
+    else:
+        fus = jax.jit(lambda a: jnp.einsum(
+            "bm,mn->bn", a.astype(dtype),
+            ops.fedpara_compose_ref(x1, y1, x2, y2, kind=kind,
+                                    out_dtype=dtype)))
+    out["fused"] = _median_time_us(fus, (xs,), reps)
+    return out
+
+
+# ---------------------------------------------------------------- planning
+
+@dataclass
+class LayerDecision:
+    """One layer's serving decision (a decision-table row)."""
+
+    path: str
+    m: int
+    n: int
+    r: int
+    kind: str
+    mode: str            # precompose | fused | dense (unfactorized)
+    impl: str            # w8 | einsum | gram | tile | cache_residual | einsum
+    weight_dtype: str
+    predicted_us: Dict[str, float] = field(default_factory=dict)
+    measured_us: Dict[str, float] = field(default_factory=dict)
+    crossover_batch: int = 0
+
+    def as_row(self) -> Dict[str, Any]:
+        return {
+            "path": self.path, "m": self.m, "n": self.n, "r": self.r,
+            "kind": self.kind, "mode": self.mode, "impl": self.impl,
+            "weight_dtype": self.weight_dtype,
+            "predicted_us": self.predicted_us,
+            "measured_us": self.measured_us,
+            "crossover_batch": self.crossover_batch,
+        }
+
+
+def decide(path: str, m: int, n: int, r: int, *, batch: int,
+           kind: str = "fedpara", mode: str = "auto",
+           weight_dtype: str = "int8", users: int = 0,
+           measure: bool = False) -> LayerDecision:
+    """Resolve one layer's mode. ``mode`` precompose/fused forces the
+    layout; ``auto`` ranks by measured µs when ``measure`` else by the
+    analytic roofline."""
+    costs = mode_costs(m, n, r, batch, kind=kind, weight_dtype=weight_dtype,
+                       users=users)
+    predicted = {md: predict_us(**_bf(c)) for md, c in costs.items()}
+    measured = {}
+    if measure:
+        measured = measure_modes(m, n, r, batch, kind=kind,
+                                 weight_dtype=weight_dtype, users=users)
+    if mode in MODES:
+        chosen = mode
+    else:
+        ranking = measured or predicted
+        chosen = min(ranking, key=ranking.get)
+    return LayerDecision(
+        path=path, m=m, n=n, r=r, kind=kind, mode=chosen,
+        impl=costs[chosen]["impl"], weight_dtype=weight_dtype,
+        predicted_us=predicted, measured_us=measured,
+        crossover_batch=crossover_batch(m, n, r, kind=kind,
+                                        weight_dtype=weight_dtype),
+    )
+
+
+def _node_spec(node) -> Optional[Dict[str, int]]:
+    """(m, n, r) of a factor node, tolerating scan-stacked (L, ...)
+    leaves."""
+    from repro.core import parameterization as par
+
+    if not isinstance(node, dict) or "x1" not in node or "y1" not in node:
+        return None
+    probe = node
+    if getattr(node["x1"], "ndim", 0) == 3:
+        probe = {k: v[0] for k, v in node.items()}
+    return par.factor_spec(probe)
+
+
+def plan_params(params: Any, kind: str, *, batch: int, mode: str = "auto",
+                weight_dtype: str = "int8", users: int = 0,
+                measure: bool = False) -> Dict[str, LayerDecision]:
+    """Walk a params tree and produce {path: LayerDecision} for every
+    matrix factor node (dense {'w'} nodes become mode 'dense' rows)."""
+    plan: Dict[str, LayerDecision] = {}
+
+    def walk(node, path):
+        spec = _node_spec(node)
+        if spec is not None and spec.get("kind") == "matrix":
+            plan[path] = decide(path, spec["m"], spec["n"], spec["r"],
+                                batch=batch, kind=kind, mode=mode,
+                                weight_dtype=weight_dtype,
+                                users=users if kind == "pfedpara" else 0,
+                                measure=measure)
+            return
+        if isinstance(node, dict):
+            if "w" in node and getattr(node["w"], "ndim", 0) >= 2:
+                plan[path] = LayerDecision(
+                    path=path, m=int(node["w"].shape[-2]),
+                    n=int(node["w"].shape[-1]), r=0, kind=kind,
+                    mode="dense", impl="einsum", weight_dtype="native")
+                return
+            for k, v in node.items():
+                walk(v, f"{path}/{k}" if path else str(k))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}/{i}" if path else str(i))
+
+    walk(params, "")
+    return plan
+
+
+def decision_table(plan: Dict[str, LayerDecision]) -> List[Dict[str, Any]]:
+    """JSON-ready decision-table rows, sorted by path."""
+    return [plan[p].as_row() for p in sorted(plan)]

@@ -1,0 +1,224 @@
+"""The serve engine: checkpoint -> per-layer plan -> jitted decode.
+
+``ServeEngine`` glues the serving stack together:
+
+1. **Load** — ``load_fl_checkpoint`` rebuilds the FL server's trees
+   from a :class:`CheckpointManager` step without a target structure
+   (``unflatten_paths``): the trained ``global_params`` plus, for
+   pFedPara runs, every client's personal ``local_trees/<cid>`` half.
+2. **Plan** — ``cost_model.plan_params`` walks the factor nodes and
+   decides precompose-vs-fused per layer (measured or analytic roofline;
+   ``mode`` forces either branch). The table is queryable
+   (:meth:`decision_table`) and shipped with benchmark artifacts.
+3. **Cache** — ``cache.build_serve_params`` rewrites the tree per the
+   plan (int8/fp16 composed caches, verbatim factors, shared pFedPara
+   W1 cache). Per-user factors stack into a :class:`UserArena`.
+4. **Serve** — one jitted prefill and one jitted decode step. Position
+   AND user-row indices are traced arguments, so decoding 16 steps over
+   rotating user cohorts compiles exactly once; the KV cache is donated
+   so decode updates it in place.
+
+Many-user decode: ``decode_step(..., user_ids=[...])`` gathers the
+cohort's (X2, Y2) rows from the arena with one ``jnp.take`` and injects
+them as ``ux2/uy2`` (``inject_users``), which
+``repro.nn.layers.dense`` routes into the fused cache+residual kernel
+or the per-user Gram path — B distinct users served in one launch with
+zero per-user W materialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, unflatten_paths
+from repro.configs.base import ArchConfig
+from repro.nn.transformer import ModelOptions, build_model
+from repro.serve import cost_model
+from repro.serve.cache import build_serve_params, serve_state_bytes
+from repro.serve.user_arena import UserArena, inject_users
+
+
+def load_fl_checkpoint(path: str, step: Optional[int] = None
+                       ) -> Tuple[Any, Dict[int, Any], Dict, int]:
+    """Restore an FL training checkpoint for serving.
+
+    Returns ``(global_params, local_trees, extra, step)``:
+    ``global_params`` is the trained model (pFedPara: the global half
+    only), ``local_trees`` maps client id -> personal factor tree
+    (empty for non-personalized runs). Client ids are discovered from
+    the checkpoint's paths — no target structure needed.
+    """
+    mgr = CheckpointManager(path)
+    by_path, extra, step = mgr.restore_items(step)
+    global_params = unflatten_paths(by_path, prefix="global_params")
+    if global_params is None or global_params == {}:
+        raise ValueError(f"checkpoint at {path} has no global_params")
+    cids = sorted({p.split("/")[1] for p in by_path
+                   if p.startswith("local_trees/")}, key=int)
+    local_trees = {
+        int(c): unflatten_paths(by_path, prefix=f"local_trees/{c}")
+        for c in cids}
+    to_dev = lambda t: jax.tree.map(jnp.asarray, t)  # noqa: E731
+    return to_dev(global_params), to_dev(local_trees), extra, step
+
+
+class ServeEngine:
+    """Decode engine over a planned serve-params tree (module docstring).
+
+    Args:
+        cfg: the architecture the checkpoint was trained with.
+        global_params: trained global tree (factor nodes intact).
+        local_trees: optional ``{uid: personal_tree}`` (pFedPara).
+        mode: ``precompose`` | ``fused`` | ``auto`` — per-layer layout
+            (auto ranks by measured µs when ``measure`` else roofline).
+        cache_dtype: ``int8`` | ``fp16`` precomposed-cache precision.
+        batch: decode batch the plan optimizes for (and the cohort
+            width when users are resident).
+        use_pallas: route matmuls through the serve Pallas kernels
+            (default: only on TPU — interpret emulation elsewhere is
+            orders slower; the XLA fallbacks are numerically identical).
+        measure: time both branches per distinct (m, n, r) for ``auto``.
+        opts: ModelOptions overrides (dtype, chunks, scan_layers...).
+    """
+
+    def __init__(self, cfg: ArchConfig, global_params: Any,
+                 local_trees: Optional[Dict[Any, Any]] = None, *,
+                 mode: str = "auto", cache_dtype: str = "int8",
+                 batch: int = 1, use_pallas: Optional[bool] = None,
+                 measure: bool = False,
+                 opts: Optional[ModelOptions] = None):
+        if mode not in ("precompose", "fused", "auto"):
+            raise ValueError(f"mode must be precompose|fused|auto, got {mode}")
+        kind = cfg.param.kind
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.mode = mode
+        self.cache_dtype = cache_dtype
+        self.batch = int(batch)
+        self.arena = UserArena.create(local_trees) if local_trees else None
+        if kind == "pfedpara" and self.arena is not None:
+            # the checkpoint's global_params carries the SERVER's own
+            # x2/y2 copy (merge_pfedpara keeps the tree whole between
+            # rounds) — personalized serving replaces it per user, so
+            # the serve tree starts from the global half only
+            from repro.fl import comm
+
+            global_params = comm.split_pfedpara(global_params)[0]
+
+        self.plan = cost_model.plan_params(
+            global_params, kind, batch=self.batch, mode=mode,
+            weight_dtype=cache_dtype,
+            users=self.arena.n_users if self.arena else 0, measure=measure)
+        self.serve_params = jax.jit(
+            lambda p: build_serve_params(p, kind, self.plan, cache_dtype)
+        )(global_params)
+
+        # gram_batch: decode rows route fused layers through the Gram
+        # identity whenever the plan picked it (per-batch, so the knob
+        # equals the planned batch; prefill's larger row counts still
+        # take the tile path)
+        gram = any(d.mode == "fused" and d.impl == "gram"
+                   for d in self.plan.values())
+        cfg = dataclasses.replace(
+            cfg, param=dataclasses.replace(
+                cfg.param, gram_batch=self.batch if gram else 0))
+        self.cfg = cfg
+        base = opts or ModelOptions(attn_chunk=64, ssm_chunk=32,
+                                    logit_chunk=64)
+        self.opts = dataclasses.replace(base, use_pallas=use_pallas)
+        self.model = build_model(cfg, self.opts)
+
+        model = self.model
+
+        def _with_users(sp, arena_tree, rows):
+            if arena_tree is None:
+                return sp
+            gathered = jax.tree.map(lambda a: jnp.take(a, rows, axis=0),
+                                    arena_tree)
+            return inject_users(sp, gathered)
+
+        def _prefill(sp, arena_tree, cache, tokens, rows):
+            return model.prefill(_with_users(sp, arena_tree, rows),
+                                 tokens, cache)
+
+        def _decode(sp, arena_tree, cache, token, pos, rows):
+            return model.decode_step(_with_users(sp, arena_tree, rows),
+                                     cache, token, pos)
+
+        self._jit_prefill = jax.jit(_prefill)
+        self._jit_decode = jax.jit(_decode, donate_argnums=(2,))
+
+    # ------------------------------------------------------------- loading
+    @classmethod
+    def from_checkpoint(cls, path: str, cfg: ArchConfig, *,
+                        step: Optional[int] = None, **kw) -> "ServeEngine":
+        """Build an engine straight from an FL training checkpoint
+        directory (keyword args forwarded to the constructor)."""
+        global_params, local_trees, _extra, _step = load_fl_checkpoint(
+            path, step)
+        return cls(cfg, global_params, local_trees or None, **kw)
+
+    # -------------------------------------------------------------- compute
+    def _rows(self, user_ids: Optional[Sequence[Any]], batch: int):
+        if self.arena is None:
+            return None if user_ids is None else None
+        if user_ids is None:
+            user_ids = [self.arena.uids[0]] * batch
+        return self.arena.rows_for(user_ids)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return self.model.init_cache(batch, max_seq)
+
+    def prefill(self, tokens, cache, user_ids: Optional[Sequence] = None):
+        """Run the prompt through the model; returns (cache, logits)."""
+        rows = self._rows(user_ids, jnp.shape(tokens)[0])
+        return self._jit_prefill(
+            self.serve_params, self.arena.tree if self.arena else None,
+            cache, tokens, rows)
+
+    def decode_step(self, cache, token, pos,
+                    user_ids: Optional[Sequence] = None):
+        """One decode step. ``pos`` and the cohort's user rows are
+        traced — steps and cohorts reuse one compilation; the cache is
+        donated and updated in place. Returns (logits, cache)."""
+        rows = self._rows(user_ids, jnp.shape(token)[0])
+        return self._jit_decode(
+            self.serve_params, self.arena.tree if self.arena else None,
+            cache, token, jnp.int32(pos), rows)
+
+    def generate(self, prompts, gen_len: int,
+                 user_ids: Optional[Sequence] = None) -> np.ndarray:
+        """Greedy-decode ``gen_len`` tokens after prefilling
+        ``prompts`` (B, S); returns (B, gen_len) token ids."""
+        tokens = jnp.asarray(prompts)
+        B, S = tokens.shape
+        cache = self.init_cache(B, S + gen_len)
+        cache, logits = self.prefill(tokens, cache, user_ids)
+        out: List[np.ndarray] = []
+        tok = jnp.argmax(logits, -1)[:, None]
+        for i in range(gen_len):
+            out.append(np.asarray(tok)[:, 0])
+            logits, cache = self.decode_step(cache, tok, S + i, user_ids)
+            tok = jnp.argmax(logits, -1)[:, None]
+        return np.stack(out, 1)
+
+    # ------------------------------------------------------------ accounting
+    def decision_table(self) -> List[Dict[str, Any]]:
+        """Per-layer decision rows (path, dims, mode, impl, predicted /
+        measured µs, analytic crossover batch)."""
+        return cost_model.decision_table(self.plan)
+
+    def state_bytes(self) -> int:
+        """Device bytes of the shared serve weights (excludes the
+        per-user factor arena — see :meth:`arena_bytes`)."""
+        return serve_state_bytes(self.serve_params)
+
+    def arena_bytes(self) -> int:
+        """Device bytes of the stacked per-user factors (grows linearly
+        in residents at 2r(m+n) floats per layer per user; the shared
+        half stays flat — the many-user memory claim)."""
+        return self.arena.nbytes() if self.arena else 0

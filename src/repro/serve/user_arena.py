@@ -1,0 +1,112 @@
+"""Stacked per-user personalization factors for many-user serving.
+
+pFedPara keeps each user's (X2, Y2) factors on their device during
+training; at serve time the engine hosts thousands of such users at
+once. Materializing one dense W per user would cost O(users · m · n)
+HBM — instead the arena reuses the :class:`repro.fl.arena.ClientArena`
+indexing pattern: every personal tree lives ONCE as stacked device
+arrays with a leading user-row axis, a decode step gathers the cohort's
+rows with one vectorized ``jnp.take`` (user ids are *traced* — new
+cohorts never recompile), and the gathered (B, m, r)/(B, n, r) slices
+are injected next to the shared weights as ``ux2``/``uy2`` so
+``repro.nn.layers.dense`` streams them through the fused cache+residual
+kernel or the per-user Gram path. Resident memory grows only by the
+factor rows — 2r(m+n) floats per user per layer, never m·n.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _is_personal_node(node: Any) -> bool:
+    return isinstance(node, dict) and "x2" in node and "y2" in node \
+        and "x1" not in node
+
+
+class UserArena:
+    """Device-resident stacked per-user (X2, Y2) factor trees.
+
+    ``tree`` mirrors the *local* half of ``split_pfedpara`` (factor
+    nodes hold only ``x2``/``y2``), with every leaf stacked to
+    ``(U, ...)``. ``uids`` maps external user ids to rows; unknown
+    users resolve to row 0's factors (a "default personality" — the
+    first registered user, typically the global server round's
+    residents).
+    """
+
+    def __init__(self, tree: Any, uids: Sequence[Any]):
+        self.tree = tree
+        self.uids: List[Any] = list(uids)
+        self._row: Dict[Any, int] = {u: i for i, u in enumerate(self.uids)}
+
+    # -------------------------------------------------------------- build
+    @classmethod
+    def create(cls, local_trees: Dict[Any, Any]) -> "UserArena":
+        """Stack ``{uid: local_tree}`` (the FL server's per-client
+        personal halves) into one arena. All trees must share a
+        structure; uids keep their insertion order as rows."""
+        if not local_trees:
+            raise ValueError("UserArena.create: no users")
+        uids = list(local_trees)
+        stacked = jax.tree.map(
+            lambda *leaves: jnp.stack([jnp.asarray(x) for x in leaves]),
+            *[local_trees[u] for u in uids])
+        return cls(stacked, uids)
+
+    @property
+    def n_users(self) -> int:
+        return len(self.uids)
+
+    def nbytes(self) -> int:
+        """Total device bytes held by the stacked factors."""
+        return int(sum(leaf.size * leaf.dtype.itemsize
+                       for leaf in jax.tree.leaves(self.tree)
+                       if hasattr(leaf, "size")))
+
+    # ---------------------------------------------------------- addressing
+    def rows_for(self, uids: Sequence[Any]) -> jax.Array:
+        """(B,) int32 row indices for a request cohort (host-side id
+        lookup; the returned array is what gets traced)."""
+        return jnp.asarray(
+            np.asarray([self._row.get(u, 0) for u in uids], np.int32))
+
+    # ------------------------------------------------------------- gather
+    def gather(self, rows: jax.Array) -> Any:
+        """One vectorized row gather: the cohort's local trees stacked
+        along a leading (B,) axis. Safe under jit with traced rows."""
+        return jax.tree.map(lambda a: jnp.take(a, rows, axis=0), self.tree)
+
+
+def inject_users(serve_params: Any, gathered: Any) -> Any:
+    """Overlay a gathered cohort onto serve params: every personal
+    ``{'x2', 'y2'}`` node in ``gathered`` contributes ``ux2``/``uy2``
+    keys to the matching serve node (shared cache or global factors),
+    which ``dense`` recognizes as the many-user serve layouts.
+
+    Scan-stacked layers need one transpose: the model stacks layers
+    leading — serve leaves are (L, m, r) and ``lax.scan`` slices the
+    layer axis — while a gather stacks users leading, giving
+    (B, L, m, r). Gathered 4-D leaves are moved to (L, B, m, r) so the
+    scan still slices layers and each slice carries the cohort.
+    """
+    def overlay(sp, gp):
+        if _is_personal_node(gp):
+            if not isinstance(sp, dict):
+                raise ValueError("inject_users: serve tree misses a "
+                                 "personalized node present in the arena")
+            def orient(leaf):
+                return jnp.moveaxis(leaf, 0, 1) if leaf.ndim == 4 else leaf
+            return {**sp, "ux2": orient(gp["x2"]), "uy2": orient(gp["y2"])}
+        if isinstance(gp, dict):
+            return {k: overlay(sp[k], v) if k in sp else sp.get(k)
+                    for k, v in gp.items()} | {
+                        k: v for k, v in sp.items() if k not in gp}
+        if isinstance(gp, (list, tuple)):
+            return type(gp)(overlay(s, g) for s, g in zip(sp, gp))
+        return sp
+
+    return overlay(serve_params, gathered)

@@ -81,3 +81,32 @@ def test_cli_reports_without_failing():
 def test_cli_strict_fails_on_the_known_uncovered():
     assert kc.main(["--strict", "llama3-405b"]) == 1
     assert kc.main(["--strict", "qwen3-8b"]) == 0
+
+
+def test_serve_bodies_enumerated_for_every_config(results):
+    sv = [r for r in results if r.body in kc.SERVE_BODIES]
+    assert {r.config for r in sv} == set(ASSIGNED)
+    assert {r.body for r in sv} == set(kc.SERVE_BODIES)
+
+
+def test_serve_tiles_always_fit():
+    # unlike the dfy training body, the serve tile table covers every
+    # shipped shape within VMEM — no serve entry may join
+    # KNOWN_UNCOVERED without a deliberate pin here
+    sv = [r for r in kc.check_all() if r.body in kc.SERVE_BODIES]
+    bad = [r for r in sv if not (r.valid and r.fits)]
+    assert bad == [], "\n".join(r.render() for r in bad)
+
+
+def test_serve_vmem_model_matches_hand_count():
+    # w8 body, blocks (8, 32, 128): int8 weight tile streams at 1 B/elt
+    # next to fp32 x/scale/out; scratch = fp32 acc + widened weight copy
+    stream = 4 * 8 * 32 + 32 * 128 + 4 * 128 + 4 * 8 * 128
+    scratch = 4 * 8 * 128 + 4 * 32 * 128
+    assert kc.serve_kernel_vmem("w8", 8, 32, 128, 0) == (
+        kc.DOUBLE_BUFFER * stream + scratch)
+    # resid adds the per-user factor slices (fp32) and a second scratch
+    resid_stream = stream + 4 * (32 * 4 + 128 * 4)
+    resid_scratch = scratch + 4 * 32 * 128
+    assert kc.serve_kernel_vmem("resid", 8, 32, 128, 4) == (
+        kc.DOUBLE_BUFFER * resid_stream + resid_scratch)

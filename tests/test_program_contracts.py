@@ -92,3 +92,12 @@ def test_compile_counter_counts_fresh_compiles_only():
     with pc.CompileCounter() as cc2:
         g(jnp.ones((4,)))       # still cached
     assert cc2.count == 0
+
+
+@pytest.mark.slow
+def test_serve_decode_compiles_once_and_keeps_int8_narrow():
+    """The serve contracts: 16 decode steps over 2 user cohorts reuse
+    ONE compilation (position + user rows traced, cache donated), and
+    the int8 weight cache is never widened outside a pallas_call."""
+    for r in pc.check_serve():
+        assert r.ok, r.render()

@@ -1,0 +1,263 @@
+"""Serve engine: cost-model decisions, the user arena, the serve-params
+cache rewrite, engine-level mode parity, and the checkpoint->serve
+roundtrip from a REAL (miniature) pFedPara federation.
+"""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ParamCfg
+from repro.data import iid_partition, make_token_lm_dataset
+from repro.fl import comm
+from repro.nn.layers import init_dense
+from repro.nn.transformer import ModelOptions, build_model
+from repro.serve import (ServeEngine, UserArena, build_serve_params,
+                         crossover_batch, decide, inject_users,
+                         load_fl_checkpoint, mode_costs, plan_params)
+
+
+def _tiny_cfg(kind="pfedpara"):
+    cfg = get_arch("qwen3-8b").reduced()
+    return dataclasses.replace(cfg, n_layers=2, param=dataclasses.replace(
+        cfg.param, kind=kind, min_dim_for_factorization=8, gamma=0.5))
+
+
+_OPTS = ModelOptions(attn_chunk=8, ssm_chunk=8, logit_chunk=16,
+                     dtype=jnp.float32)
+
+
+# ----------------------------------------------------------- cost model
+
+def test_fused_reads_fewer_bytes_at_decode_batch():
+    # the headline regime: at B=1 the fused path streams factor bytes
+    # (16r(m+n)) against precompose's weight-cache bytes (~mn)
+    c = mode_costs(1024, 4096, 32, 1)
+    assert c["fused"]["bytes"] < c["precompose"]["bytes"]
+
+
+def test_crossover_shrinks_with_rank():
+    # larger rank -> more per-row fused work -> precompose wins earlier
+    assert (crossover_batch(1024, 4096, 128)
+            <= crossover_batch(1024, 4096, 32)
+            <= crossover_batch(1024, 4096, 8))
+
+
+def test_decide_forced_modes_and_impls():
+    for mode, impl in (("precompose", "w8"), ("fused", None)):
+        d = decide("p", 256, 512, 16, batch=1, mode=mode)
+        assert d.mode == mode
+        if impl:
+            assert d.impl == impl
+    d = decide("p", 256, 512, 16, batch=1, mode="precompose",
+               weight_dtype="fp16")
+    assert d.impl == "einsum"
+
+
+def test_tanh_never_takes_the_gram_identity():
+    c = mode_costs(512, 512, 32, 1, kind="fedpara_tanh")
+    assert c["fused"]["impl"] == "tile"
+
+
+def test_auto_picks_the_measured_faster_branch():
+    # pinned cases straddling the crossover: tiny batch favors fused,
+    # wide batch favors precompose — auto must take whichever branch
+    # its own measurements rank first, on every case
+    for batch in (1, 64):
+        d = decide("p", 256, 512, 8, batch=batch, mode="auto", measure=True)
+        assert set(d.measured_us) == {"precompose", "fused"}
+        assert d.mode == min(d.measured_us, key=d.measured_us.get)
+
+
+def test_pfedpara_user_costs_compare_cache_vs_gram():
+    c = mode_costs(256, 512, 8, 4, users=4, kind="pfedpara")
+    assert c["precompose"]["impl"] == "cache_residual"
+    assert c["fused"]["impl"] == "gram"
+
+
+def test_plan_params_walks_factors_and_dense():
+    cfg = _tiny_cfg("fedpara")
+    model = build_model(cfg, _OPTS)
+    params = model.init_params(jax.random.PRNGKey(0))
+    plan = plan_params(params, "fedpara", batch=1, mode="auto")
+    modes = {d.mode for d in plan.values()}
+    assert "dense" in modes                      # embed / unembed
+    assert modes - {"dense"}                     # factorized layers too
+    assert all(d.r > 0 for d in plan.values() if d.mode != "dense")
+
+
+# ----------------------------------------------------------- user arena
+
+def _local_tree(key, m, n, r):
+    k1, k2 = jax.random.split(key)
+    return {"lin": {"x2": jax.random.normal(k1, (m, r)) * 0.2,
+                    "y2": jax.random.normal(k2, (n, r)) * 0.2}}
+
+
+def test_arena_rows_and_gather():
+    trees = {uid: _local_tree(jax.random.PRNGKey(uid), 8, 12, 2)
+             for uid in (3, 7, 11)}
+    arena = UserArena.create(trees)
+    assert arena.n_users == 3
+    rows = arena.rows_for([7, 3, 99])   # unknown uid -> row 0
+    assert rows.tolist() == [1, 0, 0]
+    g = arena.gather(rows)
+    np.testing.assert_array_equal(np.asarray(g["lin"]["x2"][0]),
+                                  np.asarray(trees[7]["lin"]["x2"]))
+    assert g["lin"]["y2"].shape == (3, 12, 2)
+    assert arena.nbytes() == sum(x.size * 4 for x in jax.tree.leaves(
+        arena.tree))
+
+
+def test_inject_users_overlays_and_orients():
+    sp = {"lin": {"x1": jnp.zeros((8, 2)), "y1": jnp.zeros((12, 2))},
+          "scan": {"x1": jnp.zeros((4, 8, 2)), "y1": jnp.zeros((4, 12, 2))},
+          "embed": {"w": jnp.zeros((5, 8))}}
+    gathered = {
+        "lin": {"x2": jnp.ones((3, 8, 2)), "y2": jnp.ones((3, 12, 2))},
+        "scan": {"x2": jnp.ones((3, 4, 8, 2)), "y2": jnp.ones((3, 4, 12, 2))},
+    }
+    out = inject_users(sp, gathered)
+    assert out["lin"]["ux2"].shape == (3, 8, 2)      # users leading
+    assert out["scan"]["ux2"].shape == (4, 3, 8, 2)  # layers back leading
+    assert "x1" in out["lin"] and "w" in out["embed"]
+    assert "ux2" not in sp["lin"]                    # input untouched
+
+
+# ------------------------------------------------------ cache rewrite
+
+def test_build_serve_params_per_plan():
+    key = jax.random.PRNGKey(0)
+    pcfg = ParamCfg(kind="fedpara", gamma=0.4, min_dim_for_factorization=8)
+    params = {"a": init_dense(key, 64, 96, pcfg),
+              "b": init_dense(key, 64, 96, pcfg)}
+    plan = {"a": decide("a", 64, 96, params["a"]["x1"].shape[1],
+                        batch=1, mode="precompose"),
+            "b": decide("b", 64, 96, params["b"]["x1"].shape[1],
+                        batch=1, mode="fused")}
+    sp = build_serve_params(params, "fedpara", plan, "int8")
+    assert sp["a"]["w_q"].dtype == jnp.int8 and "scale" in sp["a"]
+    assert set(sp["b"]) == set(params["b"])  # fused: factors verbatim
+    sp16 = build_serve_params(params, "fedpara", plan, "fp16")
+    assert sp16["a"]["w"].dtype == jnp.float16
+
+
+def test_build_serve_params_personalized_shares_w1():
+    key = jax.random.PRNGKey(1)
+    pcfg = ParamCfg(kind="pfedpara", gamma=0.4, min_dim_for_factorization=8)
+    node = init_dense(key, 64, 96, pcfg)
+    glob = {k: v for k, v in node.items() if k in ("x1", "y1")}
+    r = glob["x1"].shape[1]
+    plan = {"a": decide("a", 64, 96, r, batch=2, kind="pfedpara",
+                        mode="precompose", users=3)}
+    sp = build_serve_params({"a": glob}, "pfedpara", plan, "int8")
+    # the shared W1 cache, NOT a composed per-user W
+    assert sp["a"]["w1_q"].shape == (64, 96)
+    assert sp["a"]["w1_q"].dtype == jnp.int8
+
+
+# -------------------------------------------- engine-level mode parity
+
+def test_engine_modes_match_dense_baseline_fedpara():
+    """fused vs precomposed vs the plain training-path model (which
+    materializes W): same checkpoint-free tiny model, same logits."""
+    cfg = _tiny_cfg("fedpara")
+    model = build_model(cfg, _OPTS)
+    params = model.init_params(jax.random.PRNGKey(0))
+    prompts = jnp.asarray(make_token_lm_dataset(2, 8, cfg.vocab_size,
+                                                seed=1))
+    cache = model.init_cache(2, 8)
+    _, base = jax.jit(model.prefill)(params, prompts, cache)
+    base = np.asarray(base)
+    tol = {"fused": 1e-4, "precompose/fp16": 5e-3, "precompose/int8": 8e-2}
+    for mode, dt in (("fused", "int8"), ("precompose", "fp16"),
+                     ("precompose", "int8")):
+        eng = ServeEngine(cfg, params, mode=mode, cache_dtype=dt,
+                          batch=2, use_pallas=False, opts=_OPTS)
+        _, logits = eng.prefill(prompts, eng.init_cache(2, 8))
+        rel = (np.abs(np.asarray(logits) - base).max()
+               / (np.abs(base).max() + 1e-9))
+        key = mode if mode == "fused" else f"{mode}/{dt}"
+        assert rel < tol[key], (mode, dt, rel)
+
+
+# --------------------------------- checkpoint -> serve roundtrip (slow)
+
+@pytest.fixture(scope="module")
+def trained_pfedpara(tmp_path_factory):
+    """A real 2-round pFedPara federation + its checkpoint directory."""
+    from repro.checkpoint import CheckpointManager
+    from repro.fl.client import ClientConfig
+    from repro.fl.server import FLServer, ServerConfig
+    from repro.fl.strategies import make_strategy
+
+    cfg = _tiny_cfg("pfedpara")
+    model = build_model(cfg, _OPTS)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = make_token_lm_dataset(36, 16, cfg.vocab_size, seed=0)
+    parts = iid_partition(len(toks), 3)
+    srv = FLServer(lambda p, b: model.loss(p, b), params,
+                   {"tokens": toks}, parts, make_strategy("fedavg"),
+                   ClientConfig(lr=0.05, batch=8, epochs=1),
+                   ServerConfig(clients=3, participation=1.0, rounds=2,
+                                personalization="pfedpara"))
+    srv.run()
+    d = str(tmp_path_factory.mktemp("ckpt"))
+    srv.save_checkpoint(CheckpointManager(d))
+    return d, cfg, model, srv
+
+
+@pytest.mark.slow
+def test_checkpoint_loader_rebuilds_all_trees(trained_pfedpara):
+    d, cfg, model, srv = trained_pfedpara
+    glob, locals_, _extra, _step = load_fl_checkpoint(d)
+    assert sorted(locals_) == sorted(srv.local_trees)
+    for cid, tree in srv.local_trees.items():
+        for a, b in zip(jax.tree.leaves(tree),
+                        jax.tree.leaves(locals_[cid])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # loader returns the checkpointed global tree verbatim
+    for a, b in zip(jax.tree.leaves(srv.global_params),
+                    jax.tree.leaves(glob)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode,cache_dtype,tol", [
+    ("fused", "int8", 1e-4),
+    ("precompose", "fp16", 5e-3),
+    ("precompose", "int8", 8e-2),
+])
+def test_checkpoint_to_serve_per_user_parity(trained_pfedpara, mode,
+                                             cache_dtype, tol):
+    """Serve each trained user from the checkpoint and match the oracle:
+    merge that user's personal half into the global tree and run the
+    plain training-path model."""
+    d, cfg, model, srv = trained_pfedpara
+    eng = ServeEngine.from_checkpoint(d, cfg, mode=mode,
+                                      cache_dtype=cache_dtype, batch=3,
+                                      use_pallas=False, opts=_OPTS)
+    uids = sorted(srv.local_trees)
+    prompts = jnp.asarray(make_token_lm_dataset(3, 8, cfg.vocab_size,
+                                                seed=2))
+    cache = eng.init_cache(3, 12)
+    cache, logits = eng.prefill(prompts, cache, user_ids=uids)
+    glob = comm.split_pfedpara(srv.global_params)[0]
+    for i, u in enumerate(uids):
+        full = comm.merge_pfedpara(glob, srv.local_trees[u])
+        c2 = model.init_cache(1, 12)
+        _, want = jax.jit(model.prefill)(full, prompts[i:i + 1], c2)
+        rel = (np.abs(np.asarray(logits[i]) - np.asarray(want[0])).max()
+               / (np.abs(np.asarray(want)).max() + 1e-9))
+        assert rel < tol, (mode, cache_dtype, u, rel)
+    # and decode advances without error for a rotating cohort
+    tok = jnp.argmax(logits, -1)[:, None]
+    for i in range(3):
+        logits, cache = eng.decode_step(cache, tok, 8 + i,
+                                        user_ids=uids[::-1])
+        tok = jnp.argmax(logits, -1)[:, None]
+    assert np.asarray(logits).shape == (3, cfg.vocab_size)

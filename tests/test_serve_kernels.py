@@ -1,0 +1,138 @@
+"""Serve Pallas kernel validation (interpret mode executes the kernel
+bodies on CPU): the int8/fp16 weight-cache matmul, the pFedPara
+cache+residual kernel (single- and many-user), and the Hadamard-Gram
+decode identity — each against its dense oracle, aligned and
+non-aligned shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+
+def _mats(key, B, m, n, r, dtype):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, m), dtype)
+    f = [jax.random.normal(k, (d, r), jnp.float32) * 0.2
+         for k, d in zip(ks[1:], (m, n, m, n))]
+    return x, f
+
+
+SERVE_SHAPES = [
+    (8, 64, 64, 4),
+    (17, 100, 50, 3),      # non-aligned everything
+    (1, 384, 128, 32),     # single decode row
+    (33, 128, 300, 7),
+]
+
+
+def _quant(w):
+    from repro.nn.layers import quantize_int8
+
+    node = quantize_int8(w)
+    return node["w_q"], node["scale"]
+
+
+@pytest.mark.parametrize("B,m,n,r", SERVE_SHAPES)
+@pytest.mark.parametrize("quant", [True, False])
+def test_w8_matmul_sweep(B, m, n, r, quant):
+    from repro.kernels import ref
+
+    key = jax.random.PRNGKey(B + m + n)
+    x, (x1, y1, x2, y2) = _mats(key, B, m, n, r, jnp.float32)
+    w = ops.fedpara_compose_ref(x1, y1, x2, y2, out_dtype=jnp.float32)
+    if quant:
+        wq, scale = _quant(w)
+    else:
+        wq, scale = w.astype(jnp.float16), None
+    got = ops.w8_matmul(x, wq, scale, interpret=True,
+                        out_dtype=jnp.float32)
+    want = ref.w8_matmul_ref(x, wq, scale, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,m,n,r", SERVE_SHAPES)
+@pytest.mark.parametrize("quant", [True, False])
+def test_cache_residual_single_user(B, m, n, r, quant):
+    from repro.kernels import ref
+
+    key = jax.random.PRNGKey(7 * B + m)
+    x, (x1, y1, x2, y2) = _mats(key, B, m, n, r, jnp.float32)
+    w1 = jnp.einsum("mr,nr->mn", x1, y1)
+    if quant:
+        wq, scale = _quant(w1)
+    else:
+        wq, scale = w1.astype(jnp.float16), None
+    got = ops.cache_residual_matmul(x, wq, scale, x2, y2, interpret=True,
+                                    out_dtype=jnp.float32)
+    want = ref.cache_residual_ref(x, wq, scale, x2, y2,
+                                  out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("U,t", [(1, 1), (3, 2), (5, 1)])
+def test_cache_residual_many_user_vs_merge_oracle(U, t):
+    """The many-user kernel vs the TRUE oracle: merge each user's
+    pFedPara factors into a dense W_u = W1 ⊙ (X2ᵤY2ᵤᵀ + 1) and
+    contract — the per-user weight the kernel never materializes."""
+    m, n, r = 96, 130, 5
+    key = jax.random.PRNGKey(U * 10 + t)
+    ks = jax.random.split(key, 5)
+    x1 = jax.random.normal(ks[0], (m, r), jnp.float32) * 0.2
+    y1 = jax.random.normal(ks[1], (n, r), jnp.float32) * 0.2
+    ux2 = jax.random.normal(ks[2], (U, m, r), jnp.float32) * 0.2
+    uy2 = jax.random.normal(ks[3], (U, n, r), jnp.float32) * 0.2
+    x = jax.random.normal(ks[4], (U, t, m), jnp.float32)
+    w1 = jnp.einsum("mr,nr->mn", x1, y1)
+    got = ops.cache_residual_matmul(x, w1.astype(jnp.float16), None,
+                                    ux2, uy2, interpret=True,
+                                    out_dtype=jnp.float32)
+    for u in range(U):
+        wu = w1.astype(jnp.float16).astype(jnp.float32) * (
+            ux2[u] @ uy2[u].T + 1.0)
+        want_u = x[u] @ wu
+        np.testing.assert_allclose(np.asarray(got[u]), np.asarray(want_u),
+                                   atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("B,m,n,r", SERVE_SHAPES)
+@pytest.mark.parametrize("kind", ["fedpara", "pfedpara"])
+def test_gram_decode_matches_dense(B, m, n, r, kind):
+    """The Hadamard-Gram decode identity vs compose-then-dense."""
+    key = jax.random.PRNGKey(B + n + r)
+    x, (x1, y1, x2, y2) = _mats(key, B, m, n, r, jnp.float32)
+    got = ops.fedpara_gram_decode(x, x1, y1, x2, y2, kind=kind,
+                                  out_dtype=jnp.float32)
+    w = ops.fedpara_compose_ref(x1, y1, x2, y2, kind=kind,
+                                out_dtype=jnp.float32)
+    want = x @ w
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_gram_decode_many_user_per_user_weights():
+    U, t, m, n, r = 4, 2, 64, 96, 6
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x1 = jax.random.normal(ks[0], (m, r), jnp.float32) * 0.2
+    y1 = jax.random.normal(ks[1], (n, r), jnp.float32) * 0.2
+    ux2 = jax.random.normal(ks[2], (U, m, r), jnp.float32) * 0.2
+    uy2 = jax.random.normal(ks[3], (U, n, r), jnp.float32) * 0.2
+    x = jax.random.normal(ks[4], (U, t, m), jnp.float32)
+    got = ops.fedpara_gram_decode(x, x1, y1, ux2, uy2, kind="pfedpara",
+                                  out_dtype=jnp.float32)
+    for u in range(U):
+        w = ops.fedpara_compose_ref(x1, y1, ux2[u], uy2[u],
+                                    kind="pfedpara", out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got[u]),
+                                   np.asarray(x[u] @ w),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_gram_decode_rejects_tanh():
+    x, (x1, y1, x2, y2) = _mats(jax.random.PRNGKey(0), 2, 16, 16, 2,
+                                jnp.float32)
+    with pytest.raises(ValueError):
+        ops.fedpara_gram_decode(x, x1, y1, x2, y2, kind="fedpara_tanh")
