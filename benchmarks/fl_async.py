@@ -1,0 +1,216 @@
+"""Async buffered federation vs synchronous streaming: virtual-clock
+convergence at equal wire bytes.
+
+The experiment the async engine exists for: under a heavy-tailed
+straggler model (lognormal compute latency), a synchronous round is a
+BARRIER priced at the slowest arrived upload — the whole cohort waits
+for the tail. The async engine (``engine="async"``, FedBuff-style)
+flushes after ``buffer_k`` arrivals, so a version bump costs roughly
+the cohort's latency MEDIAN; the tail's uploads still fold later at
+``tau >= 1`` with polynomially-decayed weight, so no wire bytes are
+wasted. Both engines run the SAME dispatch program, codec and cohort
+draws — the comparison isolates the barrier.
+
+Protocol (``run_bench``):
+
+1. Run the synchronous streaming engine for ``rounds_sync`` rounds;
+   its virtual clock is the running sum of each round's barrier
+   latency (``rec["round_latency"]`` = max arrived latency). The
+   convergence target is its mean-loss at the 75%-of-rounds mark.
+2. Run the async engine (same task, seed, codec; ``buffer_k`` = half
+   the cohort, ``poly:0.5`` staleness) version by version until its
+   mean loss reaches the target; its virtual clock is the event
+   queue's ``rec["virtual_time"]``.
+3. Report ``speedup`` = sync/async virtual time-to-target and
+   ``bytes_ratio`` = async/sync wire bytes at the crossing.
+   Acceptance (``ok``): speedup >= 1.5 at comparable wire bytes
+   (ratio <= 1.25) — the FedBuff claim on this substrate.
+
+``--smoke`` is the blocking-CI gate: a short genuinely-async run must
+produce >= 2 version bumps with a finite global model and compile ZERO
+new XLA programs across the bumps (``check_async_retrace``).
+
+Writes ``BENCH_async.json`` (canonical under benchmarks/artifacts/,
+mirrored to the repo root for the perf-trajectory tooling).
+
+Run: PYTHONPATH=src python -m benchmarks.fl_async [--rounds 10]
+     PYTHONPATH=src python -m benchmarks.fl_async --smoke
+"""
+import argparse
+import json
+
+
+def build_server(engine: str, *, clients: int = 32, participation: float = 0.5,
+                 rounds: int = 1, buffer_k: int = 0,
+                 straggler_sigma: float = 1.2, seed: int = 0):
+    """The shared task: a FedPara MLP on synthetic images with a
+    heavy-tailed straggler model. Sync and async build IDENTICAL
+    configs except the engine/buffer knobs."""
+    import jax
+
+    from repro.configs.base import ParamCfg
+    from repro.data import iid_partition, make_image_dataset, train_test_split
+    from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+    from repro.nn import recurrent as rec
+
+    ds = make_image_dataset(32 * clients + 256, 10, size=16, channels=1,
+                            noise=0.3, seed=seed)
+    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+    tr, _ = train_test_split(data)
+    cfg = rec.MLPConfig(in_dim=256, hidden=128, classes=10,
+                        param=ParamCfg(kind="fedpara", gamma=0.4,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(seed), cfg)
+    parts = iid_partition(len(tr["y"]), clients, seed)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    return FLServer(loss_fn, params, tr, parts, make_strategy("fedavg"),
+                    ClientConfig(lr=0.1, batch=16, epochs=1),
+                    ServerConfig(clients=clients, participation=participation,
+                                 rounds=rounds, engine=engine, client_chunk=8,
+                                 uplink_codec="int8",
+                                 straggler_sigma=straggler_sigma, seed=seed,
+                                 buffer_k=buffer_k, staleness="poly:0.5"))
+
+
+def _finite(srv) -> bool:
+    import jax
+    import numpy as np
+
+    return bool(np.isfinite(np.concatenate(
+        [np.asarray(x, np.float64).ravel()
+         for x in jax.tree.leaves(srv.global_params)])).all())
+
+
+def run_bench(rounds_sync: int = 10, max_versions: int = 40,
+              clients: int = 32, seed: int = 0) -> dict:
+    sync = build_server("streaming", clients=clients, rounds=rounds_sync,
+                        seed=seed)
+    hist_s = sync.run()
+    clock, sync_rows = 0.0, []
+    for r in hist_s:
+        if r.get("skipped"):
+            continue
+        clock += r["round_latency"]       # barrier: slowest arrived upload
+        sync_rows.append({"round": r["round"], "vtime": clock,
+                          "loss": r["mean_loss"], "comm_gb": r["comm_gb"]})
+    target = sync_rows[max(0, int(0.75 * len(sync_rows)) - 1)]["loss"]
+    s_hit = next(r for r in sync_rows if r["loss"] <= target)
+
+    cohort = max(1, int(round(clients * 0.5)))
+    asrv = build_server("async", clients=clients, rounds=max_versions,
+                        buffer_k=max(1, cohort // 2), seed=seed)
+    a_rows, a_hit = [], None
+    for _ in range(max_versions):
+        r = asrv.run_round()
+        if r.get("skipped"):
+            continue
+        a_rows.append({"version": r["version"], "vtime": r["virtual_time"],
+                       "loss": r["mean_loss"], "comm_gb": r["comm_gb"],
+                       "folded": r["folded"],
+                       "staleness_hist": r["staleness_hist"]})
+        if a_hit is None and r["mean_loss"] <= target:
+            a_hit = a_rows[-1]
+            break
+
+    art = {
+        "benchmark": "fl_async",
+        "what": "virtual-clock time-to-target-loss, async (FedBuff-style "
+                "buffer) vs synchronous streaming barrier, equal wire "
+                "bytes, lognormal stragglers",
+        "clients": clients,
+        "cohort": cohort,
+        "buffer_k": max(1, cohort // 2),
+        "straggler_sigma": 1.2,
+        "target_loss": target,
+        "sync": {"rows": sync_rows, "time_to_target": s_hit["vtime"],
+                 "bytes_at_target_gb": s_hit["comm_gb"]},
+        "async": {"rows": a_rows,
+                  "time_to_target": a_hit["vtime"] if a_hit else None,
+                  "bytes_at_target_gb": a_hit["comm_gb"] if a_hit else None,
+                  "reached_target": a_hit is not None,
+                  "finite": _finite(asrv)},
+    }
+    if a_hit is not None:
+        art["speedup"] = s_hit["vtime"] / a_hit["vtime"]
+        art["bytes_ratio"] = a_hit["comm_gb"] / max(s_hit["comm_gb"], 1e-12)
+        art["ok"] = (art["speedup"] >= 1.5 and art["bytes_ratio"] <= 1.25
+                     and art["async"]["finite"])
+    else:
+        art["ok"] = False
+    from benchmarks.common import write_artifact
+
+    write_artifact("BENCH_async.json", art)
+    return art
+
+
+def smoke() -> dict:
+    """Blocking-CI gate (seconds, not minutes): a genuinely-async run —
+    small buffer, heavy stragglers, delta codec — must bump the version
+    >= 2 times, keep the global model finite, and compile ZERO new XLA
+    programs across the bumps."""
+    from repro.analysis.program_check import check_async_retrace, \
+        make_mini_server
+
+    srv = make_mini_server("async", "dict", participation=1.0,
+                           uplink_codec="delta|topk0.5|int8", buffer_k=2,
+                           straggler_sigma=1.0, staleness="poly:0.5")
+    hist = [r for r in srv.run(rounds=4) if not r.get("skipped")]
+    retrace = check_async_retrace()[0]
+    out = {
+        "version_bumps": len(hist),
+        "finite_global": _finite(srv),
+        "stale_folds": sum(v for r in hist
+                           for k, v in r["staleness_hist"].items()
+                           if int(k) > 0),
+        "retrace_check": {"name": retrace.name, "ok": retrace.ok,
+                          "detail": retrace.detail},
+        "ok": len(hist) >= 2 and _finite(srv) and retrace.ok,
+    }
+    return out
+
+
+def csv_rows():
+    """Rows for benchmarks.run CSV: (name, us_per_call, derived)."""
+    art = run_bench()
+    a = art["async"]
+    rows = [("fl_sync_time_to_target",
+             art["sync"]["time_to_target"] * 1e6,
+             f"loss={art['target_loss']:.4f}")]
+    if a["reached_target"]:
+        rows.append(("fl_async_time_to_target", a["time_to_target"] * 1e6,
+                     f"speedup={art['speedup']:.2f}x,"
+                     f"bytes_ratio={art['bytes_ratio']:.2f}"))
+    else:
+        rows.append(("fl_async_time_to_target", 0.0, "ERROR:target_missed"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=10,
+                    help="synchronous reference rounds")
+    ap.add_argument("--max-versions", type=int, default=40)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="blocking CI gate: version bumps + finite global "
+                         "+ zero recompiles; exit 1 on failure")
+    args = ap.parse_args()
+    if args.smoke:
+        out = smoke()
+        print(json.dumps(out, indent=1))
+        if not out["ok"]:
+            raise SystemExit("async smoke failed: " + json.dumps(out))
+        return
+    art = run_bench(args.rounds, args.max_versions, args.clients)
+    print(json.dumps(art, indent=1))
+    if not art["ok"]:
+        raise SystemExit(
+            "async benchmark missed acceptance: "
+            f"speedup={art.get('speedup')}, bytes_ratio={art.get('bytes_ratio')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,7 @@ MODULES = (
     ("fl_hetero", ("hetero",)),
     ("fl_fleet_smoke", ("fleet",)),
     ("fl_faults", ("faults", "robust", "chaos")),
+    ("fl_async", ("async", "fedbuff")),
     ("serve_decode", ("serve", "decode", "serve_decode")),
 )
 

@@ -19,8 +19,11 @@ shapes and the jaxpr / post-compile HLO text is asserted on:
     none otherwise), and every callee is module/class-level (stable
     identity — the jaxpr-level mirror of lint rule FED005).
   * **retrace** — a second round at the same cohort shape compiles ZERO
-    new XLA programs, for all three engines and both state stores
-    (:class:`CompileCounter` hooks jax's dispatch logger).
+    new XLA programs, for all four engines and both state stores, and
+    for the async engine ACROSS VERSION BUMPS (arrival position / fold
+    weight / ref coefficients are traced or host-side data, never
+    program constants) — :class:`CompileCounter` hooks jax's dispatch
+    logger.
 
 Run locally::
 
@@ -348,6 +351,8 @@ RETRACE_MATRIX: Tuple[Tuple[str, str], ...] = (
     ("batched", "arena"),
     ("streaming", "dict"),
     ("streaming", "arena"),
+    ("async", "dict"),
+    ("async", "arena"),
 )
 
 
@@ -376,6 +381,25 @@ def check_retrace() -> List[CheckResult]:
             "0 recompiles in rounds 2-3" if not events
             else f"{len(events)} recompile(s): {sorted(set(events))}"))
     return out
+
+
+def check_async_retrace() -> List[CheckResult]:
+    """The version-bump contract (docs/async.md): a genuinely
+    asynchronous regime — small buffer, lognormal stragglers, delta
+    codec, so version bumps interleave with stale arrivals and
+    mid-version re-dispatches — must compile zero new XLA programs
+    after the warm-up versions. Arrival position, fold weight and the
+    host-float ref coefficients are traced/eager data; only cohort
+    SHAPES key the compiled programs."""
+    events = count_retrace(
+        "async", "dict", warmup=2, measured=2,
+        server_factory=lambda: make_mini_server(
+            "async", "dict", uplink_codec="delta|topk0.5|int8",
+            buffer_k=4, straggler_sigma=1.0, staleness="poly:0.5"))
+    return [CheckResult(
+        "retrace:async:version-bumps", not events,
+        "0 recompiles across version bumps 3-4" if not events
+        else f"{len(events)} recompile(s): {sorted(set(events))}")]
 
 
 def check_defense_retrace() -> List[CheckResult]:
@@ -478,7 +502,8 @@ def run_all(fast: bool = False) -> List[CheckResult]:
     results = (check_donation() + check_wire_dtype() + check_callbacks()
                + check_serve())
     if not fast:
-        results += check_retrace() + check_defense_retrace()
+        results += (check_retrace() + check_defense_retrace()
+                    + check_async_retrace())
     return results
 
 

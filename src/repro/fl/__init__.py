@@ -1,17 +1,21 @@
 """Federated learning: server/simulator, client, strategies, wire
-codecs, byte accounting, the batched/streaming round engines, and the
-fleet-scale substrate (device-resident client-state arena + availability
-traces).
+codecs, byte accounting, the batched/streaming/async round engines, and
+the fleet-scale substrate (device-resident client-state arena +
+availability traces).
 
 Start at :class:`FLServer` + :class:`ServerConfig`; see docs/engines.md
 for the engine decision table, docs/codecs.md for the codec grammar,
 docs/hetero.md for heterogeneous-capacity rank tiers, docs/fleet.md
-for the arena / trace / streamed-data fleet substrate and
+for the arena / trace / streamed-data fleet substrate,
 docs/robustness.md for fault injection, upload defenses and
-crash/resume.
+crash/resume, and docs/async.md for the event-driven buffered
+(FedBuff-style) engine with staleness weighting and broadcast-version
+pinning.
 """
 from repro.fl import (
     arena,
+    arrivals,
+    async_engine,
     batch_engine,
     client,
     codecs,
@@ -23,6 +27,20 @@ from repro.fl import (
     trace,
 )
 from repro.fl.arena import ClientArena
+from repro.fl.arrivals import (
+    arrival_events,
+    arrival_mask,
+    arrival_order,
+    fold_crashes,
+)
+from repro.fl.async_engine import (
+    ArrivalEvent,
+    AsyncDispatch,
+    AsyncState,
+    finalize_buffer,
+    fold_arrival,
+    make_staleness,
+)
 from repro.fl.batch_engine import (
     ClientBatch,
     assemble_client_params,
@@ -47,8 +65,11 @@ from repro.fl.stream_engine import StreamingRound
 from repro.fl.trace import FleetTrace, spawn_seeds
 
 __all__ = [
-    "arena", "batch_engine", "client", "codecs", "comm", "faults", "server",
-    "strategies", "stream_engine", "trace", "ClientArena", "ClientBatch",
+    "arena", "arrivals", "async_engine", "batch_engine", "client", "codecs",
+    "comm", "faults", "server", "strategies", "stream_engine", "trace",
+    "arrival_events", "arrival_mask", "arrival_order", "fold_crashes",
+    "ArrivalEvent", "AsyncDispatch", "AsyncState", "finalize_buffer",
+    "fold_arrival", "make_staleness", "ClientArena", "ClientBatch",
     "assemble_client_params", "batched_local_update",
     "batched_personalized_eval", "chunk_round_program", "select_upload",
     "ClientConfig", "init_client_state", "local_update", "Codec",

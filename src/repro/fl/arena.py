@@ -64,6 +64,15 @@ def _bump_rows(counts: jax.Array, rows: jax.Array,
     return counts.at[rows].add((mask > 0).astype(counts.dtype))
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pin_rows(versions: jax.Array, rows: jax.Array, mask: jax.Array,
+              version: jax.Array) -> jax.Array:
+    keep = mask > 0
+    return versions.at[rows].set(
+        jnp.where(keep, jnp.asarray(version, versions.dtype),
+                  versions[rows]))
+
+
 class ClientArena:
     """Stacked device-resident per-client state (see module docstring).
 
@@ -73,12 +82,18 @@ class ClientArena:
     """
 
     def __init__(self, n_clients: int, state: Any, residents: Any,
-                 participation: jax.Array):
+                 participation: jax.Array, versions: Any = None):
         self.n_clients = int(n_clients)
         self.scratch_row = int(n_clients)   # absorbs pad-slot scatters
         self.state = state                  # dict tree, leaves (R, ...)
         self.residents = residents          # tree or None, leaves (R, ...)
         self.participation = participation  # (R,) int32
+        # broadcast-version pinning (async engine, docs/async.md): the
+        # global version each row's state was produced against — the
+        # row's EF accumulator / delta reference / strategy state are
+        # KEYED by this version; -1 = never dispatched
+        self.versions = (versions if versions is not None
+                         else jnp.full(participation.shape, -1, jnp.int32))
 
     @classmethod
     def create(cls, n_clients: int, state_template: Any,
@@ -142,6 +157,15 @@ class ClientArena:
                                            new_residents, mask)
         self.participation = _bump_rows(self.participation, rows, mask)
 
+    def pin_versions(self, rows: jax.Array, version: int,
+                     arrived_mask) -> None:
+        """Record the broadcast version the masked rows' new state was
+        trained against (one masked ``.at[].set`` — the async engine
+        calls this alongside :meth:`scatter` at dispatch writeback)."""
+        self.versions = _pin_rows(self.versions, rows,
+                                  jnp.asarray(arrived_mask, jnp.float32),
+                                  jnp.int32(int(version)))
+
     # ------------------------------------------------------------ sharding
     def shard_rows(self, mesh, axis: str = "clients") -> None:
         """Shard every arena leaf's row axis over ``mesh[axis]`` (no-op
@@ -162,6 +186,7 @@ class ClientArena:
         if self.residents is not None:
             self.residents = put(self.residents)
         self.participation = jax.device_put(self.participation, sharding)
+        self.versions = jax.device_put(self.versions, sharding)
 
     # ------------------------------------------------------------- readout
     def client_state(self, cid: int) -> Any:
@@ -181,3 +206,8 @@ class ClientArena:
         """(clients,) int array: rounds each client arrived in (the
         scratch row is excluded)."""
         return np.asarray(self.participation)[: self.n_clients]
+
+    def client_versions(self) -> np.ndarray:
+        """(clients,) int array: the pinned broadcast version of each
+        row's state (-1 = never dispatched; scratch row excluded)."""
+        return np.asarray(self.versions)[: self.n_clients]

@@ -1,0 +1,81 @@
+"""Shared arrival-ordering model: one code path prices latency for
+every engine.
+
+The synchronous engines need a *round-scoped* answer — "which of the
+sampled clients are among the first ``n_target`` arrivals?" — while the
+async engine (``repro.fl.async_engine``) needs the *stream* itself:
+each admitted client's absolute arrival time on the virtual clock, in
+arrival order. Both derive from the same latency vector drawn in
+``FLServer._select_round`` (legacy RNG or ``FleetTrace``), and both
+MUST sort it the same way: a stable argsort on latency, so ties break
+by sampling position identically everywhere. Before this module the
+mask sort lived in ``server.py`` and the fault crash-fold reimplemented
+its own arrival assumptions inline; an engine that priced latency
+differently could silently diverge from the recorded
+``arrived_mask``/byte charges.
+
+Helpers:
+  ``arrival_order``   stable latency sort (ties: sampling order),
+  ``arrival_mask``    first-``n_target``-arrivals boolean mask over the
+                      sampled order (the sync engines' participation
+                      record),
+  ``arrival_events``  the async arrival stream: ``(time, position)``
+                      pairs in arrival order on the virtual clock,
+  ``fold_crashes``    crash-before-upload folding into the effective
+                      mask (shared by the sync round loop and the async
+                      event queue — a crashed client never arrives).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+def arrival_order(lat: np.ndarray) -> np.ndarray:
+    """Sampling-order positions sorted by simulated latency. The sort is
+    STABLE: equal latencies (e.g. ``straggler_sigma=0`` instant
+    arrivals) keep sampling order, which is what makes the async
+    engine's arrival stream bitwise-reproducible against the sync
+    engines' masks."""
+    return np.argsort(np.asarray(lat), kind="stable")
+
+
+def arrival_mask(ok: np.ndarray, lat: np.ndarray, n_target: int) -> np.ndarray:
+    """Keep the first ``n_target`` *arrivals*: among clients that
+    survived dropout and the deadline (``ok``), the ``n_target`` with
+    the smallest simulated latency — not the first in sampling order.
+    Returned in sampling order (boolean mask over the sampled array)."""
+    order = arrival_order(lat)
+    keep_sorted = ok[order] & (np.cumsum(ok[order]) <= n_target)
+    mask = np.zeros_like(ok)
+    mask[order] = keep_sorted
+    return mask
+
+
+def arrival_events(mask: np.ndarray, lat: np.ndarray,
+                   t0: float = 0.0) -> List[Tuple[float, int]]:
+    """The arrival stream of one dispatch: ``(absolute_time, position)``
+    pairs for every admitted client (``mask``), in arrival order.
+    ``t0`` is the dispatch instant on the virtual clock; a client's
+    upload lands at ``t0 + lat[position]``. Ordering matches
+    :func:`arrival_order` exactly (stable on ties), so the first
+    ``n_target`` events of a full dispatch are precisely the clients
+    :func:`arrival_mask` selects."""
+    lat = np.asarray(lat, np.float64)
+    mask = np.asarray(mask, bool)
+    return [(float(t0 + lat[p]), int(p))
+            for p in arrival_order(lat) if mask[p]]
+
+
+def fold_crashes(mask: np.ndarray,
+                 crash: Optional[np.ndarray]) -> np.ndarray:
+    """Effective arrival mask after crash-before-upload faults: the
+    client trained and vanished — no upload, no state writeback, zero
+    aggregation weight. ``crash=None`` (fault-free) returns ``mask``
+    unchanged. Sync engines fold this into the round's aggregation
+    weights; the async engine never enqueues the arrival at all — the
+    same helper guarantees both price the crash identically."""
+    if crash is None:
+        return mask
+    return mask & ~np.asarray(crash, bool)

@@ -1,0 +1,441 @@
+"""Event-driven asynchronous buffered federation (FedBuff-style).
+
+The synchronous engines make a round a BARRIER: sample a cohort, wait
+(straggler-masked) for its arrivals, aggregate, advance. Real fleets of
+millions never synchronize — each client trains against whatever
+broadcast version it last received and reports whenever it finishes.
+``ServerConfig.engine="async"`` models exactly that regime on top of
+the streaming substrate:
+
+  1. A **dispatch** broadcasts the current global version to an
+     admitted cohort (``FLServer._select_round`` — the same host RNG /
+     ``FleetTrace`` draws as the sync engines) and runs their local
+     training as ONE jitted chunk-scan program (:class:`AsyncDispatch`,
+     the streaming engine's chunk program minus the aggregation carry).
+     The encoded uploads come back as a stacked wire tree; each
+     client's arrival time is its simulated latency on the virtual
+     clock (``repro.fl.arrivals.arrival_events``).
+  2. The server drains the arrival queue ONE event at a time: each
+     upload folds into the streaming fp32 accumulator via the fused
+     dequant-aggregate kernel (:func:`fold_arrival`), weighted by
+     ``s(tau) * n_samples * valid * clip`` where ``tau`` is the
+     client's staleness in versions and ``s`` the configured staleness
+     function (:func:`make_staleness`).
+  3. When the buffer reaches ``K`` folded arrivals
+     (``ServerConfig.buffer_k``), the server finalizes the weighted
+     mean (:func:`finalize_buffer`), applies the strategy's
+     ``server_update``, bumps the global version, and re-admits drained
+     clients at the next dispatch. Clients still in flight keep
+     training against their pinned version; their uploads fold later
+     with ``tau >= 1`` (or are dropped past ``max_staleness``).
+
+Version pinning: a delta-codec upload decodes as
+``linear(wire) + ref_d`` where ``ref_d`` is the decoded broadcast of
+the client's pinned dispatch ``d`` (each dispatch broadcasts exactly
+one version). The fold accumulates only the linear part; the server
+keeps per-tier, per-dispatch host-float ref weights and re-attaches
+``sum_d (refw[t][d] / W) * ref_d`` at
+finalize. With a single live dispatch the ratio is EXACTLY 1.0 (the
+same host-float additions build numerator and denominator), which is
+what makes ``K = cohort`` instant-arrival async reproduce the
+streaming engine's ``Codec.agg_finalize`` bit-for-bit on the ref-add
+step — the staleness->0 parity contract of ``tests/test_fl_async.py``.
+
+Why ``defense="trimmed"`` cannot run here: a coordinate-wise trimmed
+mean is an order statistic over the FULL client axis — it needs every
+upload resident simultaneously, but the whole point of the async fold
+is that an upload is consumed (and freed) the moment it arrives.
+``clip`` survives because it stays linear: the per-client scale folds
+into the arrival's scalar weight and the clipped-away broadcast
+remainder rides in the same per-version ref weights.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.parameterization import apply_rank_mask
+from repro.fl import faults as faults_lib
+from repro.fl.batch_engine import assemble_client_params, chunk_round_program
+from repro.fl.client import ClientConfig
+from repro.fl.codecs import Codec, make_codec
+from repro.fl.strategies import Strategy
+from repro.kernels import agg as agg_kernels
+
+
+# ------------------------------------------------------------ staleness
+def make_staleness(spec: str) -> Callable[[int], float]:
+    """Parse a staleness-weight spec into ``s(tau) -> float``:
+
+      ``constant``     s(tau) = 1 (FedAsync's alpha-only limit),
+      ``poly[:a]``     s(tau) = (1 + tau)^-a (FedBuff's polynomial;
+                       default a = 0.5),
+      ``hinge[:b]``    s(tau) = 1 for tau <= b, else 1 / (1 + tau - b)
+                       (flat grace window, hyperbolic decay past it;
+                       default b = 4).
+
+    Every function returns exactly 1.0 at ``tau = 0``, so the
+    staleness->0 parity regime is weight-identical to the sync engines
+    for ANY spec.
+    """
+    name, _, arg = str(spec).partition(":")
+    name = name.strip().lower()
+    if name == "constant":
+        return lambda tau: 1.0
+    if name == "poly":
+        a = float(arg) if arg else 0.5
+        return lambda tau: float((1.0 + tau) ** (-a))
+    if name == "hinge":
+        b = float(arg) if arg else 4.0
+        return lambda tau: 1.0 if tau <= b else float(1.0 / (1.0 + tau - b))
+    raise ValueError(
+        f"unknown staleness spec {spec!r} "
+        "(expected constant | poly[:a] | hinge[:b])")
+
+
+# ------------------------------------------------------ dispatch program
+@dataclass
+class AsyncDispatch:
+    """The jitted dispatch program: local training + uplink encoding for
+    one admitted cohort, WITHOUT aggregation.
+
+    Structurally this is ``repro.fl.stream_engine.StreamingRound`` with
+    the accumulator carry removed: the same ``chunk_round_program``
+    scan step (local epochs, payload selection, per-client encoding,
+    fault injection, chunk-block defense gating), so a dispatched
+    client's trained state, EF accumulator and encoded wire are
+    bitwise-identical to what the streaming engine would produce from
+    the same inputs. The encoded uploads and per-client defense
+    verdicts (validity gate + clip scale) return as scan ys; the SERVER
+    folds each wire row at its arrival time — training cost is paid at
+    dispatch, aggregation cost at arrival, exactly the async split.
+    """
+
+    loss_fn: Callable
+    strategy: Strategy
+    client_cfg: ClientConfig
+    personalization: str = "none"
+    uplink_codec: Optional[Codec] = None
+    fedper_local_keys: Tuple[str, ...] = ()
+    chunk: int = 16
+    mesh: Optional[Mesh] = None
+    mesh_axis: str = "clients"
+    defense: str = "none"
+    defense_z: float = 3.0
+    defense_clip: float = 1.0
+    flip_bits: int = 4
+
+    def __post_init__(self):
+        if self.defense not in ("none", "clip"):
+            raise ValueError(
+                f"async engine supports defense 'none' | 'clip', got "
+                f"{self.defense!r} (coordinate-wise trimming needs all "
+                "uploads resident along the client axis — an order "
+                "statistic cannot fold one arrival at a time; see "
+                "docs/async.md)")
+        if self.uplink_codec is None:
+            self.uplink_codec = make_codec("")
+        self._program = jax.jit(self._dispatch_program,
+                                donate_argnums=(0, 1))
+
+    def _assemble(self, resident_chunk, down_payload, chunk: int):
+        return assemble_client_params(down_payload, resident_chunk, chunk,
+                                      self.personalization,
+                                      self.fedper_local_keys)
+
+    def _dispatch_program(self, state_xs, resident_xs, batches_xs,
+                          step_mask_xs, mask_xs, sizes_xs, quant_keys_xs,
+                          lr, down_payload, tier_xs, tier_payload_masks,
+                          tier_full_masks, fault_xs=None, stale_ref=None):
+        codec = self.uplink_codec
+        mode = self.personalization
+        mesh, axis = self.mesh, self.mesh_axis
+        chunk = step_mask_xs.shape[1]
+        hetero = tier_payload_masks is not None
+
+        def chunk_step(carry, xs):
+            (state_c, resident_c, batches_c, smask_c, mask_c, sizes_c,
+             keys_c, tier_c, fault_c) = xs
+            params_c = self._assemble(resident_c, down_payload, chunk)
+            col_masks = None
+            if hetero:
+                full_m = jax.tree.map(
+                    lambda m: jnp.take(m, tier_c, axis=0), tier_full_masks)
+                params_c = apply_rank_mask(params_c, full_m)
+                col_masks = jax.tree.map(
+                    lambda m: jnp.take(m, tier_c, axis=0),
+                    tier_payload_masks)
+            new_p, new_state, upload, local, last_loss, n_steps = \
+                chunk_round_program(
+                    params_c, state_c, batches_c, smask_c, keys_c,
+                    down_payload,
+                    loss_fn=self.loss_fn, client_cfg=self.client_cfg,
+                    strategy_name=self.strategy.name, personalization=mode,
+                    fedper_local_keys=self.fedper_local_keys,
+                    uplink_codec=codec, lr=lr, mesh=mesh, axis=axis,
+                    encoded_upload=True, col_masks=col_masks,
+                    fault=fault_c, stale_ref=stale_ref,
+                    flip_bits=self.flip_bits)
+            valid_c = jnp.ones_like(mask_c)
+            clip_c = jnp.ones_like(mask_c)
+            if upload is not None and self.defense != "none":
+                # same chunk-block screening as the streaming engine
+                # (the statistics block is the dispatch chunk): rejected
+                # clients carry zero fold weight and a sanitized wire
+                lin = jax.vmap(
+                    lambda u: faults_lib.linear_decode(codec, u))(upload)
+                dev = faults_lib.deviation_tree(lin, down_payload,
+                                                codec.has_delta)
+                if hetero:
+                    dev = apply_rank_mask(dev, col_masks)
+                cand = (mask_c > 0).astype(jnp.float32)
+                norms, finite = faults_lib.upload_stats(dev)
+                valid_c = faults_lib.validity_gate(norms, finite, cand,
+                                                   self.defense_z)
+                upload = faults_lib.sanitize_stacked(upload, valid_c)
+                if self.defense == "clip":
+                    clip_c = faults_lib.clip_scales(norms, valid_c, cand,
+                                                    self.defense_clip)
+            del new_p   # reassembled from the broadcast at next dispatch
+            ys = (new_state, local, last_loss, n_steps, valid_c, clip_c,
+                  upload)
+            return carry, ys
+
+        xs = (state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
+              sizes_xs, quant_keys_xs, tier_xs, fault_xs)
+        _, (state_ys, local_ys, loss_ys, steps_ys, valid_ys, clip_ys,
+            upload_ys) = jax.lax.scan(chunk_step, (), xs)
+        return (state_ys, local_ys, loss_ys, steps_ys, valid_ys, clip_ys,
+                upload_ys)
+
+    def run(self, state_xs, resident_xs, batches_xs, step_mask_xs, mask_xs,
+            sizes_xs, quant_keys_xs, lr, down_payload, tier_xs=None,
+            tier_payload_masks=None, tier_full_masks=None, fault_xs=None,
+            stale_ref=None):
+        """Execute one dispatch over chunk-stacked xs (the same layout
+        as ``StreamingRound.run``). Returns ``(state_ys, local_ys,
+        loss_ys, steps_ys, valid_ys, clip_ys, upload_ys)`` with leading
+        ``(n_chunks, chunk)`` axes; ``upload_ys`` is the stacked
+        encoded-for-aggregation wire tree (``None`` in
+        ``personalization='local'`` mode)."""
+        return self._program(
+            state_xs, resident_xs,
+            None if batches_xs is None
+            else jax.tree.map(jnp.asarray, batches_xs),
+            jnp.asarray(step_mask_xs, jnp.float32),
+            jnp.asarray(mask_xs, jnp.float32),
+            jnp.asarray(sizes_xs, jnp.float32),
+            quant_keys_xs, jnp.asarray(lr, jnp.float32),
+            down_payload,
+            None if tier_xs is None else jnp.asarray(tier_xs, jnp.int32),
+            tier_payload_masks, tier_full_masks, fault_xs, stale_ref)
+
+
+# -------------------------------------------------------- arrival folds
+@functools.partial(jax.jit, donate_argnums=(0,),
+                   static_argnames=("use_pallas",))
+def fold_arrival(acc_tree, wires, pos, weight, *, use_pallas=True):
+    """Fold ONE arrival into the running fp32 accumulator: gather row
+    ``pos`` of the dispatch's stacked wire tree and dequant-accumulate
+    it with scalar ``weight`` via the fused kernel. ``pos`` and
+    ``weight`` are traced, so every arrival of every dispatch with the
+    same cohort shape reuses ONE compiled program — the zero-recompile
+    contract across version bumps (``repro.analysis.program_check``).
+    The accumulator is donated: XLA updates it in place."""
+    row = jax.tree.map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, pos, 0, keepdims=True),
+        wires)
+    w = jnp.reshape(jnp.asarray(weight, jnp.float32), (1,))
+    return agg_kernels.tree_dequant_acc(acc_tree, row, w,
+                                        use_pallas=use_pallas)
+
+
+def finalize_buffer(accs, wtots, refws, refs, *, codec, agg_target,
+                    tier_payload_masks=None, defense="none"):
+    """Weighted mean of the buffered folds, with per-version delta
+    references re-attached.
+
+    ``accs``/``wtots``/``refws`` are per-tier: fp32 accumulator trees,
+    host-float weight totals, and ``{dispatch_id: host-float}`` ref
+    weights (a dispatch belongs to exactly one version, but a version
+    can re-broadcast mid-drain, so the delta reference is pinned per
+    DISPATCH — ``refs`` maps each live dispatch id to the decoded
+    broadcast its clients trained against). Homogeneous
+    (``tier_payload_masks=None``)::
+
+        mean = acc / max(W, eps) + sum_d (refw[d] / max(W, eps)) * ref_d
+
+    Heterogeneous: per-column num/den reduction over the tier masks
+    exactly as the streaming finalize, with the ref coefficient a
+    per-column array ``sum_t M_t * refw[t][d] / max(den, eps)``;
+    columns no fold covered keep ``agg_target``. The single-live-
+    dispatch ratios are exactly 1.0 (numerator and denominator are the
+    same host-float sums), reproducing ``Codec.agg_finalize``.
+    """
+    if tier_payload_masks is None:
+        wtot = float(wtots[0])
+        if wtot <= 0.0:
+            # a fully-rejected (or empty) buffer keeps the current
+            # global — zero accepted weight must not zero the model
+            return jax.tree.map(lambda t: t.astype(jnp.float32), agg_target)
+        denom = max(wtot, 1e-12)
+        mean = jax.tree.map(lambda a: a / jnp.float32(denom), accs[0])
+        return codec.agg_finalize_pinned(
+            mean, refs, {d: float(w) / denom for d, w in refws[0].items()})
+
+    n_tiers = len(accs)
+    masks_t = [jax.tree.map(lambda m: m[t], tier_payload_masks)
+               for t in range(n_tiers)]
+    num = functools.reduce(
+        lambda a, b: jax.tree.map(jnp.add, a, b),
+        [jax.tree.map(lambda m, a: m * a, masks_t[t], accs[t])
+         for t in range(n_tiers)])
+    den = functools.reduce(
+        lambda a, b: jax.tree.map(jnp.add, a, b),
+        [jax.tree.map(lambda m: m * jnp.float32(float(wtots[t])), masks_t[t])
+         for t in range(n_tiers)])
+    mean = jax.tree.map(lambda nm, d: nm / jnp.maximum(d, 1e-12), num, den)
+    versions = sorted(set().union(*[set(r) for r in refws]))
+    for v in versions:
+        if all(refws[t].get(v, 0.0) == 0.0 for t in range(n_tiers)):
+            continue
+        coef = functools.reduce(
+            lambda a, b: jax.tree.map(jnp.add, a, b),
+            [jax.tree.map(
+                lambda m: m * jnp.float32(float(refws[t].get(v, 0.0))),
+                masks_t[t]) for t in range(n_tiers)])
+        mean = jax.tree.map(
+            lambda a, cf, d, r: a + cf / jnp.maximum(d, 1e-12)
+            * r.astype(a.dtype), mean, coef, den, refs[v])
+    # columns no folded arrival covers keep the current global value
+    return jax.tree.map(
+        lambda d, mn, tgt: jnp.where(d > 0, mn, tgt.astype(mn.dtype)),
+        den, mean, agg_target)
+
+
+# ------------------------------------------------------- event machinery
+@dataclass
+class ArrivalEvent:
+    """One in-flight upload: everything the fold needs, host-side.
+    ``valid``/``clip`` are the dispatch program's defense verdicts for
+    this client; ``up_cost`` its tier-priced uplink wire bytes, charged
+    at arrival (a crash never creates an event, so a crashed client is
+    never charged uplink bytes)."""
+
+    t: float          # absolute arrival time on the virtual clock
+    seq: int          # global tie-break: equal times pop in enqueue order
+    cid: int          # fleet client id
+    version: int      # pinned broadcast version the client trained from
+    did: int          # dispatch id (keys the stacked wire tree)
+    pos: int          # row in the dispatch's stacked cohort
+    tier: int         # capacity tier (-1 = homogeneous)
+    weight: float     # n_samples aggregation weight
+    valid: float      # defense validity gate (1.0 = accepted)
+    clip: float       # defense clip scale (1.0 = unclipped)
+    loss: float       # client's last local loss (flush bookkeeping)
+    up_cost: int      # exact uplink wire bytes for this arrival
+
+    def as_list(self) -> list:
+        """Flatten to a plain numeric row (checkpoint wire format)."""
+        return [self.t, self.seq, self.cid, self.version, self.did,
+                self.pos, self.tier, self.weight, self.valid, self.clip,
+                self.loss, self.up_cost]
+
+    @classmethod
+    def from_list(cls, row) -> "ArrivalEvent":
+        """Rebuild from an ``as_list`` row, restoring field dtypes."""
+        return cls(t=float(row[0]), seq=int(row[1]), cid=int(row[2]),
+                   version=int(row[3]), did=int(row[4]), pos=int(row[5]),
+                   tier=int(row[6]), weight=float(row[7]),
+                   valid=float(row[8]), clip=float(row[9]),
+                   loss=float(row[10]), up_cost=int(row[11]))
+
+
+@dataclass
+class AsyncState:
+    """The async server's mutable event-loop state: the virtual clock,
+    the arrival heap, per-dispatch wire stacks, per-version broadcast
+    refs, and the streaming accumulator with its host-float weight
+    bookkeeping. Everything here round-trips through the checkpoint
+    (``FLServer.save_checkpoint``) so a mid-buffer crash/resume is
+    bitwise; ``in_flight`` and the wire/ref refcounts are derived from
+    the pending events on restore rather than serialized."""
+
+    n_clients: int
+    n_tiers: int = 1
+    clock: float = 0.0
+    flush_t0: float = 0.0          # clock at the previous version bump
+    seq: int = 0
+    buffer: int = 0
+    total_dispatches: int = 0
+    n_dispatches: int = 0          # dispatches within the current version
+    accs: Optional[List[Any]] = None      # per-tier fp32 payload trees
+    wtot: List[float] = field(default_factory=list)
+    refw: List[Dict[int, float]] = field(default_factory=list)
+    events: List[Tuple[float, int]] = field(default_factory=list)  # heap
+    pending: Dict[int, ArrivalEvent] = field(default_factory=dict)
+    wires: Dict[int, Any] = field(default_factory=dict)
+    wire_left: Dict[int, int] = field(default_factory=dict)
+    refs: Dict[int, Any] = field(default_factory=dict)
+    in_flight: Optional[np.ndarray] = None
+    up_bytes: int = 0              # charged since the last flush
+    down_bytes: int = 0
+    stale_hist: Dict[int, int] = field(default_factory=dict)
+    dropped_stale: int = 0
+    losses: List[float] = field(default_factory=list)
+    window: Optional[Dict[str, Any]] = None  # current version's first
+    #                                          dispatch (sampled, mask, ...)
+
+    def __post_init__(self):
+        if not self.wtot:
+            self.wtot = [0.0] * self.n_tiers
+        if not self.refw:
+            self.refw = [dict() for _ in range(self.n_tiers)]
+        if self.in_flight is None:
+            self.in_flight = np.zeros(self.n_clients, bool)
+
+    def reset_buffer(self, payload_template: Any) -> None:
+        """Flush epilogue: zero the accumulator (reallocated — the fold
+        donates it), the weight totals, ref weights and per-flush
+        bookkeeping. Pending events, wires and still-pinned refs
+        survive — they belong to future buffers. ``payload_template=
+        None`` (personalization='local': nothing aggregates) keeps the
+        accumulator unallocated."""
+        self.accs = None if payload_template is None else [jax.tree.map(
+            lambda x: jnp.zeros(jnp.shape(x), jnp.float32),
+            payload_template) for _ in range(self.n_tiers)]
+        self.wtot = [0.0] * self.n_tiers
+        self.refw = [dict() for _ in range(self.n_tiers)]
+        self.buffer = 0
+        self.n_dispatches = 0
+        self.up_bytes = 0
+        self.down_bytes = 0
+        self.stale_hist = {}
+        self.dropped_stale = 0
+        self.losses = []
+        self.window = None
+
+    def prune_refs(self) -> None:
+        """Drop broadcast refs no pending event is pinned to (the flush
+        already consumed their ref weights). Refs are keyed by dispatch
+        id — a version that re-broadcasts mid-drain has one ref per
+        dispatch."""
+        live = {ev.did for ev in self.pending.values()}
+        for d in [d for d in self.refs if d not in live]:
+            del self.refs[d]
+
+    def release_wire(self, did: int) -> None:
+        """One event of dispatch ``did`` was consumed; free the stacked
+        wire tree once its last in-flight row is gone."""
+        if did not in self.wire_left:
+            return
+        self.wire_left[did] -= 1
+        if self.wire_left[did] <= 0:
+            del self.wire_left[did]
+            self.wires.pop(did, None)

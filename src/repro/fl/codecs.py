@@ -47,7 +47,7 @@ from __future__ import annotations
 import math
 import os
 from dataclasses import dataclass
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -312,6 +312,29 @@ class Codec:
                 raise ValueError("delta stage requires a reference tree")
             return jax.tree.map(lambda d, r: d + r.astype(d.dtype), mean, ref)
         return mean
+
+    @staticmethod
+    def agg_finalize_pinned(mean: Any, refs: Dict[int, Any],
+                            coefs: Dict[int, float]) -> Any:
+        """Multi-reference :meth:`agg_finalize` for version-pinned
+        asynchronous folds (docs/async.md): arrivals in one buffer may
+        decode against DIFFERENT pinned broadcasts, so the mean
+        re-attaches ``sum_d coefs[d] * refs[d]`` where ``d`` ranges
+        over live dispatch ids and ``coefs[d]`` is that dispatch's
+        accumulated fold weight over the total (host floats — with a
+        single live dispatch the ratio is exactly 1.0 and this
+        reproduces ``agg_finalize`` bitwise). The clip defense's
+        non-delta slack — the clipped-away ``(1-clip)`` remainder of
+        each pinned broadcast — rides the same linear re-attachment."""
+        out = mean
+        for d in sorted(coefs):
+            c = float(coefs[d])
+            if c == 0.0:
+                continue
+            cc = jnp.float32(c)
+            out = jax.tree.map(lambda a, r: a + cc * r.astype(a.dtype),
+                               out, refs[d])
+        return out
 
     # ---------------------------------------------------------- accounting
     def wire_bytes(self, payload: Any) -> int:

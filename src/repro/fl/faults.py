@@ -135,6 +135,16 @@ class FaultPlan:
     def draw(self, round_idx: int, n: int, attempt: int = 0) -> Dict:
         """Host-side fault draw for one round's ``n`` sampled clients.
 
+        ``attempt`` salts the stream: sync rounds use it for recovery
+        retries, the async engine for the dispatch index within a
+        version (each re-admission broadcast is a fresh cohort with its
+        own fault draw). Crash-before-upload folds into the effective
+        arrival mask on every path via
+        :func:`repro.fl.arrivals.fold_crashes` — the sync engines zero
+        the crashed clients' aggregation weights, the async engine
+        never enqueues their arrival events, and both charge downlink
+        only.
+
         Returns a dict of plain per-client numpy arrays (the round
         program consumes them as data — no recompile when the rate or
         the drawn set changes):

@@ -5,8 +5,8 @@ from a lognormal compute + payload/bandwidth communication model; the
 server over-samples by ``oversample`` and aggregates whoever arrives
 before the deadline (quantile of expected latency). Clients that miss
 the deadline are dropped from the round — a dropped pod costs a round
-of its data, never a crash. Async (staleness-weighted) aggregation is
-available as ``staleness_mix``.
+of its data, never a crash. ``staleness_mix`` is a legacy sync mixing
+knob; true event-driven asynchrony is ``engine="async"`` below.
 
 Execution engines (``ServerConfig.engine``):
   sequential  — reference implementation: a Python loop over arrived
@@ -26,6 +26,17 @@ Execution engines (``ServerConfig.engine``):
                 O(chunk · model + model) — participation becomes a
                 time axis, so cohorts the stacked engine cannot hold
                 (1024+ simulated clients on one host) stream through.
+  async       — ``repro.fl.async_engine``: event-driven FedBuff-style
+                buffered federation. A virtual clock drains an arrival
+                queue (the same latency model the sync engines mask
+                on); each upload folds into the streaming accumulator
+                AT ARRIVAL, weighted by a staleness function ``s(tau)``
+                (``ServerConfig.staleness``), and ``buffer_k`` folded
+                arrivals trigger a version bump + re-broadcast. With
+                ``buffer_k`` = participation target and every arrival
+                landing before the next dispatch, it reproduces the
+                streaming engine to fp32 tolerance with bitwise masks
+                (see docs/async.md).
 
 Masked-aggregation semantics: both engines derive the SAME boolean
 arrived-mask over the sampled clients from host-side RNG draws
@@ -80,6 +91,7 @@ it to fp32 tolerance with bitwise-identical arrival masks.
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
@@ -92,6 +104,7 @@ from repro.core import rank_policy
 from repro.data.loader import client_epochs, stack_client_epochs
 from repro.fl import codecs, comm
 from repro.fl import faults as faults_lib
+from repro.fl.arrivals import arrival_events, arrival_mask, fold_crashes
 from repro.fl.client import ClientConfig, init_client_state, local_update
 from repro.fl.strategies import (
     Strategy, tree_broadcast, tree_hetero_wmean_stacked,
@@ -131,16 +144,11 @@ def _to_plain(obj):
     return obj
 
 
-def arrival_mask(ok: np.ndarray, lat: np.ndarray, n_target: int) -> np.ndarray:
-    """Keep the first ``n_target`` *arrivals*: among clients that
-    survived dropout and the deadline (``ok``), the ``n_target`` with
-    the smallest simulated latency — not the first in sampling order.
-    Returned in sampling order (boolean mask over the sampled array)."""
-    order = np.argsort(lat, kind="stable")
-    keep_sorted = ok[order] & (np.cumsum(ok[order]) <= n_target)
-    mask = np.zeros_like(ok)
-    mask[order] = keep_sorted
-    return mask
+# ``arrival_mask`` now lives in ``repro.fl.arrivals`` (one arrival-
+# ordering code path shared with the async engine's event queue); it is
+# re-imported above so existing ``from repro.fl.server import
+# arrival_mask`` call sites keep working.
+assert arrival_mask is not None
 
 
 @dataclass
@@ -176,7 +184,16 @@ class ServerConfig:
     dropout_prob: float = 0.0          # random client failure per round
     staleness_mix: float = 0.0         # >0: async staleness-weighted mixing
     engine: str = "sequential"         # sequential | batched | streaming
-    client_chunk: int = 16             # streaming: clients per scan step
+                                       # | async (event-driven buffered
+                                       # federation — docs/async.md)
+    client_chunk: int = 16             # streaming/async: clients per scan step
+    buffer_k: int = 0                  # async: folded arrivals per version
+                                       # bump; 0 = the participation target
+                                       # (K = cohort, the sync-parity limit)
+    staleness: str = "constant"        # async staleness weight s(tau):
+                                       # constant | poly[:a] | hinge[:b]
+    max_staleness: int = -1            # async: drop arrivals staler than
+                                       # this many versions; -1 = never
     state_store: str = "dict"          # dict | arena: host dicts (the
                                        # reference) or the device-resident
                                        # index-addressed fleet arena
@@ -318,7 +335,22 @@ class FLServer:
                 "defense='trimmed' requires the batched engine: the "
                 "coordinate-wise trim needs every upload resident along "
                 "the client axis (see docs/robustness.md); the streaming "
-                "fold and the sequential reference use defense='clip'")
+                "fold, the async event loop and the sequential reference "
+                "use defense='clip'")
+        if server_cfg.engine == "async":
+            if server_cfg.staleness_mix > 0:
+                raise ValueError(
+                    "staleness_mix is the legacy sync mixing knob; the "
+                    "async engine weights every arrival by its real "
+                    "staleness s(tau) — use ServerConfig.staleness")
+            if server_cfg.recover_retries > 0:
+                raise ValueError(
+                    "recover_retries (round-level cohort re-sampling) is "
+                    "a synchronous-round notion; the async engine "
+                    "recovers by dispatching fresh cohorts whenever the "
+                    "arrival queue runs dry before buffer_k")
+            if server_cfg.buffer_k < 0:
+                raise ValueError("buffer_k must be >= 0")
         plan = server_cfg.faults
         if plan is not None and not isinstance(plan, faults_lib.FaultPlan):
             raise ValueError(
@@ -331,6 +363,10 @@ class FLServer:
         self._mesh, self._mesh_axis = mesh, mesh_axis
         self._engine = None
         self._stream = None
+        self._adispatch = None
+        self._async = None            # async engine event-loop state
+        self._staleness_fn = None
+        self._client_versions: Dict[int, int] = {}   # dict-mode pinning
         if server_cfg.engine == "batched":
             from repro.fl.batch_engine import ClientBatch
 
@@ -359,10 +395,25 @@ class FLServer:
                 defense_z=server_cfg.defense_z,
                 defense_clip=server_cfg.defense_clip,
                 flip_bits=plan.flip_bits if plan is not None else 4)
+        elif server_cfg.engine == "async":
+            from repro.fl.async_engine import AsyncDispatch, make_staleness
+
+            self._staleness_fn = make_staleness(server_cfg.staleness)
+            self._adispatch = AsyncDispatch(
+                loss_fn=loss_fn, strategy=strategy, client_cfg=client_cfg,
+                personalization=server_cfg.personalization,
+                uplink_codec=self.uplink_codec,
+                fedper_local_keys=FEDPER_LOCAL_KEYS,
+                chunk=max(1, int(server_cfg.client_chunk)),
+                mesh=mesh, mesh_axis=mesh_axis,
+                defense=server_cfg.defense,
+                defense_z=server_cfg.defense_z,
+                defense_clip=server_cfg.defense_clip,
+                flip_bits=plan.flip_bits if plan is not None else 4)
         elif server_cfg.engine != "sequential":
             raise ValueError(
                 f"unknown engine {server_cfg.engine!r} "
-                "(expected sequential | batched | streaming)")
+                "(expected sequential | batched | streaming | async)")
 
     # ------------------------------------------------------------ payload
     def _download_payload(self, cid: int) -> Any:
@@ -633,7 +684,7 @@ class FLServer:
         ok = alive & (lat <= deadline)
         mask = arrival_mask(ok, lat, n_target)
         seeds = spawn_seeds(scfg.seed, self.round_idx, len(sampled))
-        return sampled, mask, seeds, lr, probe_payload
+        return sampled, mask, seeds, lr, probe_payload, lat
 
     def _quant_keys(self, n: int) -> jax.Array:
         """Per-client quantization keys: ``fold_in(key(round), i)`` for
@@ -683,7 +734,9 @@ class FLServer:
         writebacks, aggregation and wire charges commit."""
         scfg = self.scfg
         plan = scfg.faults
-        sampled, mask, seeds, lr, probe = self._select_round()
+        if scfg.engine == "async":
+            return self._run_async_round()
+        sampled, mask, seeds, lr, probe, lat = self._select_round()
         if not mask.any():   # everyone failed: skip round (fault tolerance)
             self.round_idx += 1
             return {"round": self.round_idx, "participants": 0, "skipped": True}
@@ -695,7 +748,8 @@ class FLServer:
             # crash-before-upload folds into the EFFECTIVE arrival mask
             # host-side: the client trained and vanished — no upload, no
             # state writeback, zero aggregation weight
-            eff = (mask & ~fault["crash"]) if fault is not None else mask
+            eff = fold_crashes(
+                mask, fault["crash"] if fault is not None else None)
             if eff.any():
                 if self._stream is not None:
                     runner = self._run_round_streaming
@@ -730,10 +784,15 @@ class FLServer:
                     # discard the attempt (nothing committed) and rerun
                     # the round on the replacement cohort
                     attempt += 1
-                    sampled, mask, seeds, lr, _ = nxt
+                    sampled, mask, seeds, lr, _, lat = nxt
                     continue
             break
         commit()
+        # virtual seconds the sync barrier costs: the round completes
+        # when its LAST arrival lands (the async engine's benchmark
+        # baseline — see benchmarks/fl_async.py)
+        rec["round_latency"] = float(
+            np.max(np.asarray(lat)[mask.astype(bool)]))
         rec["comm_gb"] = self.comm_log.total_gb
         self.round_idx += 1
         rec["round"] = self.round_idx
@@ -1275,6 +1334,371 @@ class FLServer:
         }
         return rec, commit, valid
 
+    # ------------------------------------------------- async event loop
+    def _ensure_async(self):
+        """Lazily create the async event-loop state (docs/async.md)."""
+        if self._async is None:
+            from repro.fl.async_engine import AsyncState
+
+            n_tiers = len(self.tiers.gammas) if self.tiers is not None else 1
+            self._async = AsyncState(self.scfg.clients, n_tiers=n_tiers)
+
+    def client_versions(self) -> np.ndarray:
+        """(clients,) pinned broadcast version per client (-1 = never
+        dispatched): the version whose decoded broadcast the client's
+        current state (EF accumulator, strategy state, residents) was
+        produced against. Arena mode reads the device-resident row;
+        dict mode the host-side pinning map."""
+        if self.arena is not None:
+            return self.arena.client_versions()
+        out = np.full(self.scfg.clients, -1, np.int64)
+        for c, v in self._client_versions.items():
+            out[int(c)] = int(v)
+        return out
+
+    def _async_dispatch(self) -> int:
+        """One broadcast + training dispatch at the current version:
+        sample a cohort (same host RNG / trace draws as the sync
+        engines, salted by the dispatch index within the version),
+        exclude clients still in flight, encode ONE downlink, run the
+        jitted :class:`repro.fl.async_engine.AsyncDispatch` program,
+        commit the trained state immediately (dispatch-atomic: the
+        client HAS trained — only its upload is in flight), pin the
+        cohort's broadcast version, and enqueue one arrival event per
+        admitted client at ``clock + latency``. Returns the number of
+        events enqueued (0 = nothing admitted / everyone crashed)."""
+        from repro.data.loader import client_step_count
+        from repro.fl import async_engine as async_lib
+        from repro.fl.stream_engine import chunk_layout, from_chunks, to_chunks
+
+        scfg = self.scfg
+        st = self._async
+        plan = scfg.faults
+        mode = scfg.personalization
+        attempt = st.n_dispatches
+        st.n_dispatches += 1
+        sampled, mask, seeds, _lr, probe, lat = self._select_round(attempt)
+        # an in-flight client keeps training against its pinned version;
+        # it is only re-admissible once its upload lands (or is dropped)
+        mask = mask & ~st.in_flight[np.asarray(sampled, np.int64)]
+        if not mask.any():
+            return 0
+        if st.window is None:
+            # the version's first ADMITTING dispatch is its participation
+            # record (the parity analogue of a sync round's sampled/mask)
+            st.window = {"sampled": [int(c) for c in sampled],
+                         "mask": [int(v) for v in mask.astype(int)]}
+        version = self.round_idx
+        did = st.total_dispatches
+        st.total_dispatches += 1
+        down_dec, down_bytes = self._encode_downlink(probe)
+        fault = (plan.draw(version, len(sampled), attempt)
+                 if plan is not None else None)
+        # a crashed client trained and vanished: downlink is charged,
+        # no state writeback, and NO arrival event is ever enqueued
+        eff = fold_crashes(mask,
+                           fault["crash"] if fault is not None else None)
+
+        cids = [int(c) for c in sampled]
+        C = len(cids)
+        chunk, n_chunks, pad = chunk_layout(C, scfg.client_chunk)
+        cids_pad = cids + cids[:1] * pad
+        hetero = self.tiers is not None
+        tc = self._tier_state(down_dec) if hetero else None
+        tier_pad = self._cohort_tiers(cids_pad) if hetero else None
+        arena = scfg.state_store == "arena"
+
+        if arena:
+            self._ensure_arena()
+            rows = self.arena.rows_for(cids, pad=pad)
+            stacked_state, stacked_res = self.arena.gather(rows)
+            stacked_state = self._stacked_state_fixups(
+                stacked_state, C + pad, tier_pad)
+        else:
+            states, residents = [], []
+            for pos, cid in enumerate(cids_pad):
+                params = self._client_full_params(cid, down_dec)
+                states.append(self._prep_client_state(
+                    cid, params, down_dec,
+                    tier=int(tier_pad[pos]) if hetero else -1))
+                if mode == "pfedpara":
+                    residents.append(comm.split_pfedpara(params)[1])
+                elif mode == "fedper":
+                    residents.append({k: params[k] for k in FEDPER_LOCAL_KEYS
+                                      if k in params})
+                elif mode == "local":
+                    residents.append(params)
+            stacked_state = tree_stack(states) if states and states[0] else {}
+            stacked_res = tree_stack(residents) if residents else None
+
+        S = max(client_step_count(len(self.partitions[c]), self.ccfg.batch,
+                                  self.ccfg.epochs) for c in cids)
+        batches, step_mask = stack_client_epochs(
+            self.data, self.partitions, cids, self.ccfg.batch,
+            self.ccfg.epochs, [int(s) for s in seeds],
+            pad_steps=max(S, 1), pad_clients=pad)
+        batches_xs = to_chunks(jax.tree.map(jnp.asarray, batches),
+                               n_chunks, chunk)
+        eff_pad = np.zeros(C + pad, np.float32)
+        eff_pad[:C] = eff
+        sizes = np.asarray([len(self.partitions[c]) for c in cids],
+                           np.float32)
+        sizes_pad = np.zeros(C + pad, np.float32)
+        sizes_pad[:C] = sizes
+
+        fault_xs = None
+        stale_ref = None
+        if fault is not None:
+            def _pad1(a, fill, dtype):
+                out = np.full((C + pad,) + np.shape(a)[1:], fill, dtype)
+                out[:C] = a
+                return out
+            fault_pad = {
+                "nan": _pad1(fault["nan"], 0.0, np.float32),
+                "poison": _pad1(fault["poison"], 0.0, np.float32),
+                "byz": _pad1(fault["byz"], 1.0, np.float32),
+                "stale": _pad1(fault["stale"], 0.0, np.float32),
+                "flip": _pad1(fault["flip"], 0.0, np.float32),
+                "flip_keys": _pad1(fault["flip_keys"], 0, np.uint32),
+            }
+            fault_xs = jax.tree.map(
+                lambda a: to_chunks(a, n_chunks, chunk),
+                faults_lib.device_fault_args(fault_pad))
+            stale_ref = (self._stale_ref if self._stale_ref is not None
+                         else down_dec)
+
+        lr = self.ccfg.lr * (scfg.lr_decay ** version)
+        (state_ys, local_ys, loss_ys, _steps, valid_ys, clip_ys,
+         upload_ys) = self._adispatch.run(
+            to_chunks(stacked_state, n_chunks, chunk),
+            to_chunks(stacked_res, n_chunks, chunk)
+            if stacked_res is not None else None,
+            batches_xs,
+            to_chunks(jnp.asarray(step_mask, jnp.float32), n_chunks, chunk),
+            to_chunks(jnp.asarray(eff_pad), n_chunks, chunk),
+            to_chunks(jnp.asarray(sizes_pad), n_chunks, chunk),
+            to_chunks(self._quant_keys(C + pad), n_chunks, chunk),
+            lr, down_dec,
+            tier_xs=(to_chunks(jnp.asarray(tier_pad), n_chunks, chunk)
+                     if hetero else None),
+            tier_payload_masks=tc["payload_masks"] if hetero else None,
+            tier_full_masks=tc["full_masks"] if hetero else None,
+            fault_xs=fault_xs, stale_ref=stale_ref)
+
+        new_state = from_chunks(state_ys) if state_ys else {}
+        local = from_chunks(local_ys) if local_ys is not None else None
+
+        # dispatch-atomic writeback: trained state/EF/residents commit
+        # now, pinned to this version — the upload is what stays in
+        # flight. A crashed client keeps its PREVIOUS row/pin.
+        if arena:
+            self.arena.scatter(rows, new_state, local, eff_pad)
+            self.arena.pin_versions(rows, version, eff_pad)
+        else:
+            for pos in np.nonzero(eff)[0]:
+                cid = cids[int(pos)]
+                self.client_states[cid] = (
+                    tree_index(new_state, int(pos)) if new_state else {})
+                if local is not None:
+                    self.local_trees[cid] = tree_index(local, int(pos))
+                self._client_versions[cid] = version
+
+        losses = np.asarray(from_chunks(loss_ys), np.float64)
+        valid = np.asarray(from_chunks(valid_ys), np.float32)
+        clips = np.asarray(from_chunks(clip_ys), np.float32)
+
+        if mode != "local" and upload_ys is not None:
+            st.wires[did] = from_chunks(upload_ys)
+            st.refs[did] = down_dec
+            if st.accs is None:
+                st.accs = [jax.tree.map(
+                    lambda x: jnp.zeros(jnp.shape(x), jnp.float32),
+                    down_dec) for _ in range(st.n_tiers)]
+
+        # downlink charged at dispatch time, uplink at each arrival
+        rd, _ = self._round_bytes(sampled, mask, down_bytes, down_dec,
+                                  up_mask=np.zeros(len(sampled), bool))
+        st.down_bytes += int(rd)
+        cohort_tiers = tier_pad[:C] if hetero else None
+        if mode == "local":
+            up_cost = np.zeros(C, np.int64)
+        elif hetero:
+            up_cost = np.asarray(tc["up_bytes"], np.int64)[cohort_tiers]
+        else:
+            up_cost = np.full(C, int(self.uplink_codec.wire_bytes(down_dec)),
+                              np.int64)
+
+        n_events = 0
+        for t_abs, pos in arrival_events(eff, lat, t0=st.clock):
+            ev = async_lib.ArrivalEvent(
+                t=float(t_abs), seq=st.seq, cid=cids[pos], version=version,
+                did=did, pos=int(pos),
+                tier=int(cohort_tiers[pos]) if hetero else 0,
+                weight=float(sizes[pos]), valid=float(valid[pos]),
+                clip=float(clips[pos]), loss=float(losses[pos]),
+                up_cost=int(up_cost[pos]))
+            st.pending[ev.seq] = ev
+            heapq.heappush(st.events, (ev.t, ev.seq))
+            st.in_flight[ev.cid] = True
+            st.seq += 1
+            n_events += 1
+        if mode != "local" and upload_ys is not None:
+            if n_events:
+                st.wire_left[did] = n_events
+            else:
+                # every admitted client crashed: nothing will ever
+                # consume this dispatch's wires or pin its ref
+                st.wires.pop(did, None)
+                st.refs.pop(did, None)
+        # the NEXT dispatch's stale-replay faults re-upload THIS broadcast
+        self._stale_ref = down_dec
+        return n_events
+
+    def _async_step(self) -> bool:
+        """Consume the earliest arrival: advance the virtual clock,
+        charge its uplink bytes, record its staleness, and — unless it
+        is past ``max_staleness`` — fold its wire row into the
+        accumulator with weight ``s(tau) * n_samples * valid * clip``.
+        Returns True iff the arrival counted toward the buffer."""
+        from repro.fl import async_engine as async_lib
+
+        scfg = self.scfg
+        st = self._async
+        t, seq = heapq.heappop(st.events)
+        ev = st.pending.pop(seq)
+        st.clock = max(st.clock, float(t))
+        st.in_flight[ev.cid] = False
+        tau = self.round_idx - ev.version
+        st.up_bytes += int(ev.up_cost)
+        st.stale_hist[tau] = st.stale_hist.get(tau, 0) + 1
+        folded = False
+        if scfg.max_staleness >= 0 and tau > scfg.max_staleness:
+            st.dropped_stale += 1
+        elif scfg.personalization == "local":
+            # no uploads to aggregate: the arrival only paces the loop
+            st.losses.append(ev.loss)
+            st.buffer += 1
+            folded = True
+        else:
+            s = float(self._staleness_fn(tau))
+            base = s * ev.weight * ev.valid
+            wf = base * ev.clip
+            st.accs[ev.tier] = async_lib.fold_arrival(
+                st.accs[ev.tier], st.wires[ev.did], ev.pos, wf)
+            st.wtot[ev.tier] += base
+            if self.uplink_codec.has_delta:
+                # delta wires decode as linear + ref: the pinned
+                # broadcast re-attaches at finalize with this weight
+                st.refw[ev.tier][ev.did] = (
+                    st.refw[ev.tier].get(ev.did, 0.0) + base)
+            elif scfg.defense == "clip":
+                # clipped non-delta upload: the clipped-away remainder
+                # is (1-clip) of the client's pinned broadcast
+                st.refw[ev.tier][ev.did] = (
+                    st.refw[ev.tier].get(ev.did, 0.0)
+                    + base * (1.0 - ev.clip))
+            st.losses.append(ev.loss)
+            st.buffer += 1
+            folded = True
+        st.release_wire(ev.did)
+        return folded
+
+    def _async_flush(self) -> Dict:
+        """Buffer threshold reached: finalize the staleness-weighted
+        mean, apply the strategy's server update, bump the global
+        version, record the version's history row (staleness histogram
+        + exact per-version wire bytes), and reset the buffer. Pending
+        arrivals survive — they fold into future buffers at tau >= 1."""
+        from repro.fl import async_engine as async_lib
+
+        scfg = self.scfg
+        st = self._async
+        mode = scfg.personalization
+        version = self.round_idx
+        if mode != "local" and st.buffer > 0:
+            agg_target = (self.global_params if mode == "none"
+                          else self._download_payload(-1))
+            hetero = self.tiers is not None
+            mean = async_lib.finalize_buffer(
+                st.accs, st.wtot, st.refw, st.refs,
+                codec=self.uplink_codec, agg_target=agg_target,
+                tier_payload_masks=(
+                    self._tier_state(self._download_payload(-1))
+                    ["payload_masks"] if hetero else None),
+                defense=scfg.defense)
+            new_global, self.server_state = self.strategy.server_update(
+                self.server_state, agg_target, mean)
+            self._apply_aggregated(new_global, agg_target)
+        self.comm_log.log_round(st.down_bytes, st.up_bytes)
+        mean_loss, nonfinite = _loss_stats(st.losses)
+        window = st.window or {}
+        rec = {
+            "participants": int(np.sum(window.get("mask", [0]))),
+            "mean_loss": mean_loss,
+            "nonfinite_losses": nonfinite,
+            "down_bytes": int(st.down_bytes),
+            "up_bytes": int(st.up_bytes),
+            "lr": float(self.ccfg.lr * (scfg.lr_decay ** version)),
+            "version": int(version),
+            "folded": int(st.buffer),
+            "dispatches": int(st.n_dispatches),
+            "virtual_time": float(st.clock),
+            "round_latency": float(st.clock - st.flush_t0),
+            "staleness_hist": {str(k): int(v)
+                               for k, v in sorted(st.stale_hist.items())},
+            "dropped_stale": int(st.dropped_stale),
+            "in_flight": int(len(st.pending)),
+        }
+        rec["comm_gb"] = self.comm_log.total_gb
+        st.flush_t0 = float(st.clock)
+        self.round_idx += 1
+        rec["round"] = self.round_idx
+        rec["arrived_mask"] = [int(v) for v in window.get("mask", [])]
+        rec["sampled"] = [int(c) for c in window.get("sampled", [])]
+        if self.eval_fn is not None:
+            rec["eval"] = self.eval_fn(self.global_params)
+        self.history.append(rec)
+        st.reset_buffer(None if mode == "local"
+                        else self._download_payload(-1))
+        st.prune_refs()
+        return rec
+
+    def _run_async_round(self) -> Dict:
+        """One async 'round' = one buffer window: dispatch at the
+        current version (re-admission broadcast), drain arrivals until
+        ``buffer_k`` of them folded (dispatching fresh cohorts whenever
+        the queue runs dry first), then flush. ``buffer_k=0`` defaults
+        K to the sync participation target, which is what makes the
+        instant-arrival regime a bitwise parity reference."""
+        scfg = self.scfg
+        self._ensure_async()
+        st = self._async
+        K = int(scfg.buffer_k) or max(
+            1, int(round(scfg.participation * scfg.clients)))
+        self._async_dispatch()
+        dry = 0
+        while st.buffer < K:
+            if st.events:
+                self._async_step()
+                continue
+            admitted = self._async_dispatch()
+            if admitted == 0:
+                dry += 1
+                if not st.events:
+                    break        # arrival stream exhausted: partial flush
+                if dry >= 16:
+                    break        # admission starved: flush what we have
+            else:
+                dry = 0
+        if st.buffer == 0 and st.dropped_stale == 0 and st.window is None:
+            # nothing admitted, nothing arrived: skip the round
+            # (mirrors the sync engines' everyone-failed skip)
+            st.n_dispatches = 0
+            self.round_idx += 1
+            return {"round": self.round_idx, "participants": 0,
+                    "skipped": True}
+        return self._async_flush()
+
     # --------------------------------------------------- crash / resume
     def _checkpoint_tree(self) -> Dict:
         """Every array-valued piece of server state, as one dict tree
@@ -1296,10 +1720,26 @@ class FLServer:
                                    in self.local_trees.items()}
         if self.arena is not None:
             ar = {"state": self.arena.state,
-                  "participation": self.arena.participation}
+                  "participation": self.arena.participation,
+                  "versions": self.arena.versions}
             if self.arena.residents is not None:
                 ar["residents"] = self.arena.residents
             tree["arena"] = ar
+        if self._async is not None:
+            # mid-buffer async state: the accumulator, every live
+            # dispatch's stacked wires and pinned broadcast ref — the
+            # array half of a bitwise event-loop resume (host half in
+            # save_checkpoint's extra)
+            st = self._async
+            az: Dict[str, Any] = {}
+            if st.accs is not None:
+                az["acc"] = {str(t): a for t, a in enumerate(st.accs)}
+            if st.wires:
+                az["wires"] = {str(d): w for d, w in st.wires.items()}
+            if st.refs:
+                az["refs"] = {str(d): r for d, r in st.refs.items()}
+            if az:
+                tree["async"] = az
         return tree
 
     def save_checkpoint(self, manager) -> str:
@@ -1317,6 +1757,31 @@ class FLServer:
                      int(self.comm_log.rounds)],
             "history": _to_plain(self.history),
         }
+        if self._async is not None:
+            ast = self._async
+            extra["async"] = {
+                "clock": float(ast.clock),
+                "flush_t0": float(ast.flush_t0),
+                "seq": int(ast.seq),
+                "buffer": int(ast.buffer),
+                "total_dispatches": int(ast.total_dispatches),
+                "n_dispatches": int(ast.n_dispatches),
+                "wtot": [float(w) for w in ast.wtot],
+                "refw": [{str(d): float(w) for d, w in rw.items()}
+                         for rw in ast.refw],
+                "events": [ast.pending[seq].as_list()
+                           for _, seq in sorted(ast.events)],
+                "up_bytes": int(ast.up_bytes),
+                "down_bytes": int(ast.down_bytes),
+                "stale_hist": {str(k): int(v)
+                               for k, v in ast.stale_hist.items()},
+                "dropped_stale": int(ast.dropped_stale),
+                "losses": [float(v) for v in ast.losses],
+                "window": _to_plain(ast.window),
+            }
+        if self._client_versions:
+            extra["client_versions"] = {str(c): int(v) for c, v
+                                        in self._client_versions.items()}
         return manager.save(self.round_idx, self._checkpoint_tree(),
                             extra=extra)
 
@@ -1352,9 +1817,53 @@ class FLServer:
             if "state" in ar:
                 self.arena.state = ar["state"]
             self.arena.participation = ar["participation"]
+            if "versions" in ar:
+                self.arena.versions = ar["versions"]
             if "residents" in ar:
                 self.arena.residents = ar["residents"]
         self.round_idx = int(extra["round_idx"])
+        self._client_versions = {int(c): int(v) for c, v
+                                 in extra.get("client_versions",
+                                              {}).items()}
+        ext_async = extra.get("async")
+        if ext_async is not None:
+            from repro.fl.async_engine import ArrivalEvent
+
+            self._async = None
+            self._ensure_async()
+            ast = self._async
+            ast.clock = float(ext_async["clock"])
+            ast.flush_t0 = float(ext_async["flush_t0"])
+            ast.seq = int(ext_async["seq"])
+            ast.buffer = int(ext_async["buffer"])
+            ast.total_dispatches = int(ext_async["total_dispatches"])
+            ast.n_dispatches = int(ext_async["n_dispatches"])
+            ast.wtot = [float(w) for w in ext_async["wtot"]]
+            ast.refw = [{int(d): float(w) for d, w in rw.items()}
+                        for rw in ext_async["refw"]]
+            ast.up_bytes = int(ext_async["up_bytes"])
+            ast.down_bytes = int(ext_async["down_bytes"])
+            ast.stale_hist = {int(k): int(v) for k, v
+                              in ext_async["stale_hist"].items()}
+            ast.dropped_stale = int(ext_async["dropped_stale"])
+            ast.losses = [float(v) for v in ext_async["losses"]]
+            ast.window = ext_async["window"]
+            evs = [ArrivalEvent.from_list(r) for r in ext_async["events"]]
+            ast.pending = {ev.seq: ev for ev in evs}
+            ast.events = [(ev.t, ev.seq) for ev in evs]
+            heapq.heapify(ast.events)
+            # in_flight and the wire refcounts are derived, not stored
+            ast.in_flight = np.zeros(self.scfg.clients, bool)
+            ast.wire_left = {}
+            for ev in evs:
+                ast.in_flight[ev.cid] = True
+                ast.wire_left[ev.did] = ast.wire_left.get(ev.did, 0) + 1
+            az = root.get("async", {})
+            acc = az.get("acc")
+            if acc is not None:
+                ast.accs = [acc[str(t)] for t in range(ast.n_tiers)]
+            ast.wires = {int(d): w for d, w in az.get("wires", {}).items()}
+            ast.refs = {int(d): r for d, r in az.get("refs", {}).items()}
         r = extra["rng"]
         self.rng.set_state((r[0], np.asarray(r[1], np.uint32), int(r[2]),
                             int(r[3]), float(r[4])))

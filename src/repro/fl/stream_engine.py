@@ -55,6 +55,16 @@ an O(T · model) term, T = number of tiers, and each chunk's wire tiles
 are re-read once per tier (T× the homogeneous kernel's single-pass wire
 traffic — the coefficients differ per tier, the data does not; a
 multi-row-coefficient kernel variant would restore the single read).
+
+This module is also the async engine's substrate
+(``repro.fl.async_engine``, docs/async.md): ``AsyncDispatch`` is this
+chunk-scan program with the aggregation carry removed (training +
+encoding at dispatch time, the encoded wires returned as ys), and the
+async server folds each wire row into the SAME fp32 accumulator via
+the same fused kernel — at arrival time instead of inside the scan.
+The finalize math here (per-tier num/den, agg_finalize ref add) is the
+single-version special case of the async engine's version-pinned
+``finalize_buffer``; keep the two in lockstep when changing either.
 """
 from __future__ import annotations
 

@@ -197,3 +197,27 @@ class FleetTrace:
         comm_s = 8.0 * np.asarray(payload_bytes, np.float64) / (
             bandwidth_mbps * 1e6)
         return comp + comm_s
+
+    def arrival_stream(self, round_idx: int, k: int, payload_bytes,
+                       sigma: float, bandwidth_mbps: float,
+                       t0: float = 0.0, salt: int = 0):
+        """One dispatch's deterministic arrival stream, in arrival order:
+        ``(cohort_ids, [(absolute_time, position), ...])`` where a
+        position indexes the returned cohort. Everything replays from
+        ``(trace seed, round_idx, salt)`` alone — the same re-keying
+        contract as :meth:`round_rng` — so two servers (or a crashed and
+        a resumed one) asking for the same round's stream get identical
+        cohorts AND identical event timing regardless of what either
+        drew before. This is the async engine's dispatch draw
+        (``repro.fl.arrivals.arrival_events`` orders the admitted
+        subset); the sync engines consume the same draws as a
+        round-scoped arrival mask."""
+        from repro.fl.arrivals import arrival_events
+
+        rng = self.round_rng(round_idx, salt=salt)
+        cohort = self.sample_cohort(rng, k)
+        lat = self.latency(rng, payload_bytes, len(cohort), sigma,
+                           bandwidth_mbps)
+        alive = rng.random(len(cohort)) < self.availability(cohort,
+                                                            round_idx)
+        return cohort, arrival_events(alive, lat, t0=t0)

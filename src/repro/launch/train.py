@@ -169,7 +169,8 @@ def train_fl(args):
 
     parts = dirichlet_partition(tr["y"], args.clients, 0.5, seed=args.seed)
     mesh = None
-    if args.engine in ("batched", "streaming") and len(jax.devices()) > 1:
+    if (args.engine in ("batched", "streaming", "async")
+            and len(jax.devices()) > 1):
         mesh = Mesh(np.array(jax.devices()), ("clients",))
     gamma_tiers = tuple(float(g) for g in args.gamma_tiers.split(",")
                         if g.strip()) if args.gamma_tiers else ()
@@ -189,7 +190,10 @@ def train_fl(args):
                                 state_store=args.state_store,
                                 data_stream=args.data_stream,
                                 defense=args.defense, faults=plan,
-                                recover_retries=args.recover_retries),
+                                recover_retries=args.recover_retries,
+                                buffer_k=args.buffer_k,
+                                staleness=args.staleness,
+                                max_staleness=args.max_staleness),
                    eval_fn=eval_fn, mesh=mesh)
     ckpt = (CheckpointManager(args.ckpt_dir, keep=2)
             if args.ckpt_dir else None)
@@ -244,11 +248,25 @@ def main():
                     help="downlink codec spec (same grammar); applied to "
                          "the payload clients actually train on")
     ap.add_argument("--engine", default="batched",
-                    choices=["sequential", "batched", "streaming"],
+                    choices=["sequential", "batched", "streaming", "async"],
                     help="FL round engine: sequential reference loop, the "
-                         "client-batched vmap/shard_map program, or the "
+                         "client-batched vmap/shard_map program, the "
                          "streaming chunked scan (O(chunk) round memory — "
-                         "use for cohorts the stacked engine cannot hold)")
+                         "use for cohorts the stacked engine cannot hold), "
+                         "or the event-driven async buffered engine "
+                         "(FedBuff-style; see docs/async.md and "
+                         "--buffer-k/--staleness/--max-staleness)")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="async engine: folded arrivals per version bump "
+                         "(0 = the sync participation target, the parity "
+                         "regime)")
+    ap.add_argument("--staleness", default="constant",
+                    help="async engine staleness weight s(tau): constant, "
+                         "poly[:a] = (1+tau)^-a, or hinge[:b] (flat up to "
+                         "b versions, hyperbolic decay past it)")
+    ap.add_argument("--max-staleness", type=int, default=-1,
+                    help="async engine: drop arrivals staler than this "
+                         "many versions (-1 = never drop)")
     ap.add_argument("--client-chunk", type=int, default=16,
                     help="streaming engine: clients per scan step; round "
                          "memory peaks at O(client_chunk * model)")

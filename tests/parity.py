@@ -1,0 +1,170 @@
+"""Shared cross-engine FL parity harness (not a test module).
+
+The engine-parity suites — ``test_fl_batched.py`` (sequential vs
+batched), ``test_fl_streaming.py`` (batched vs streaming),
+``test_fl_arena.py`` (dict vs arena store) and ``test_fl_async.py``
+(streaming vs async at staleness -> 0) — all drive the same tiny
+image task through :class:`repro.fl.FLServer` and assert the same
+contract. This module holds the single copy of that machinery:
+
+  * :func:`get_task` — module-cached dataset + dirichlet partition
+    (one build for the whole pytest session, every suite shares it),
+  * :func:`make_model` — the 256-64-10 fedpara/pfedpara MLP,
+  * :func:`run_server` — construct + run one configured ``FLServer``,
+  * :func:`assert_parity` — the parity contract, store-agnostic: it
+    reads client state through ``client_state_of``/``resident_of`` so
+    a dict-store reference checks against an arena-store run as-is,
+  * :func:`state_bytes` / :func:`hist_key` — the bitwise crash/resume
+    fingerprints (``test_fl_resume.py``, ``test_fl_async.py``),
+  * a ``hypothesis`` import shim so property tests degrade to skips
+    when hypothesis is not installed.
+
+Tolerance policy: engines reassociate the same fp32 weighted sum, so
+params agree only to accumulation-order tolerance — ``DEFAULT_ATOL =
+1e-4`` for the unnormalized streaming/async/arena accumulators,
+``5e-5`` for the batched-vs-sequential pair which normalizes earlier
+(each suite picks its bound). Everything discrete must match exactly:
+arrival masks are bitwise, wire bytes to 1e-12 GB, losses to 1e-4.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ParamCfg
+from repro.data import dirichlet_partition, make_image_dataset, train_test_split
+from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
+from repro.nn import recurrent as rec
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # only the property tests need hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):          # no-op decorators so modules still load
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    settings = given
+
+    class st:  # noqa: N801
+        sampled_from = staticmethod(lambda *a, **k: None)
+        integers = staticmethod(lambda *a, **k: None)
+
+DEFAULT_ATOL = 1e-4   # fp32 accumulation-order tolerance (running sums)
+
+N_CLIENTS = 8
+
+_TASK = {}
+
+
+def get_task():
+    """The shared parity task: 1200-sample synthetic image classification
+    flattened to 256 features, split 8 ways by a dirichlet(0.5) draw.
+    Cached at module level — the first suite to ask builds it, every
+    later suite (and hypothesis re-entry) reuses the same arrays."""
+    if not _TASK:
+        ds = make_image_dataset(1200, 10, size=16, channels=1, noise=0.3)
+        data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
+        tr, te = train_test_split(data)
+        _TASK.update(tr=tr, te=te,
+                     parts=dirichlet_partition(tr["y"], N_CLIENTS, 0.5))
+    return _TASK
+
+
+def make_model(kind):
+    """The parity model: a 256-64-10 MLP under the given factorization
+    (``fedpara`` / ``pfedpara`` / ...). Returns (cfg, params, loss_fn);
+    init is keyed on PRNGKey(0) so every engine starts identically."""
+    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
+                        param=ParamCfg(kind=kind, gamma=0.3,
+                                       min_dim_for_factorization=8))
+    params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
+
+    def loss_fn(p, b):
+        return rec.mlp_loss(p, cfg, b)
+
+    return cfg, params, loss_fn
+
+
+def run_server(task, engine, *, chunk=None, strategy="fedavg",
+               personalization="none", rounds=2, participation=0.5,
+               lr=0.1, batch=16, epochs=1, eval_fn=None, **server_kw):
+    """Construct one FLServer on the shared task and run it to
+    completion. ``chunk=None`` leaves ``client_chunk`` at its default
+    (the sequential/batched engines ignore it); extra ``server_kw``
+    forward to :class:`ServerConfig`."""
+    kind = "pfedpara" if personalization == "pfedpara" else "fedpara"
+    cfg, params, loss_fn = make_model(kind)
+    if chunk is not None:
+        server_kw.setdefault("client_chunk", chunk)
+    srv = FLServer(loss_fn, params, task["tr"], task["parts"],
+                   make_strategy(strategy),
+                   ClientConfig(lr=lr, batch=batch, epochs=epochs),
+                   ServerConfig(clients=N_CLIENTS, participation=participation,
+                                rounds=rounds, engine=engine,
+                                personalization=personalization,
+                                **server_kw),
+                   eval_fn=eval_fn)
+    srv.run()
+    return srv
+
+
+def maxdiff(a, b):
+    leaves = jax.tree.leaves(
+        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b))
+    return max(leaves) if leaves else 0.0
+
+
+def assert_parity(ref, got, *, check_residents=False, atol=DEFAULT_ATOL):
+    """The cross-engine parity contract.
+
+    ``ref`` must be a dict-store server (its ``client_states`` /
+    ``local_trees`` dicts drive the iteration); ``got`` may use any
+    state store — client state is read through the store-agnostic
+    ``client_state_of`` / ``resident_of`` accessors. Masks and wire
+    bytes are exact, params fp32-tolerance, losses to 1e-4.
+    ``check_residents`` additionally requires dict-store resident key
+    sets to coincide (arena rows exist for every client by design).
+    """
+    assert ([r.get("arrived_mask") for r in ref.history]
+            == [r.get("arrived_mask") for r in got.history])
+    assert maxdiff(ref.global_params, got.global_params) < atol
+    assert maxdiff(ref.server_state, got.server_state) < atol
+    if ref.arena is None and got.arena is None:
+        assert set(ref.client_states) == set(got.client_states)
+    for cid in ref.client_states:
+        assert maxdiff(ref.client_states[cid],
+                       got.client_state_of(cid)) < atol, cid
+    if check_residents and ref.arena is None and got.arena is None:
+        assert set(ref.local_trees) == set(got.local_trees)
+    for cid in ref.local_trees:
+        resident = got.resident_of(cid)
+        assert resident is not None, cid
+        assert maxdiff(ref.local_trees[cid], resident) < atol, cid
+    for rr, rg in zip(ref.history, got.history):
+        assert abs(rr["mean_loss"] - rg["mean_loss"]) < 1e-4
+        assert abs(rr["comm_gb"] - rg["comm_gb"]) < 1e-12
+
+
+# ----------------------------------------------------- resume fingerprints
+def state_bytes(srv):
+    """Every aggregate-relevant array, as one bytes blob (bitwise)."""
+    trees = [srv.global_params, srv.server_state]
+    for cid in sorted(srv.client_states):
+        trees.append(srv.client_states[cid])
+    for cid in sorted(srv.local_trees):
+        trees.append(srv.local_trees[cid])
+    if srv.arena is not None:
+        trees += [srv.arena.state, srv.arena.participation,
+                  srv.arena.versions]
+        if srv.arena.residents is not None:
+            trees.append(srv.arena.residents)
+    return b"".join(np.asarray(x).tobytes()
+                    for t in trees for x in jax.tree.leaves(t))
+
+
+def hist_key(hist):
+    return [(r["round"], r["mean_loss"], r.get("down_bytes"),
+             r.get("up_bytes"), tuple(r.get("arrived_mask", ())),
+             r.get("rejected"), r.get("retries")) for r in hist]

@@ -7,110 +7,39 @@ for every strategy × personalization mode × codec (error feedback
 threaded through the stacked rows), with identical wire bytes. The
 streamed data path (``ChunkBatchSource``) must materialize bit-identical
 batches to the eager full-cohort stack, and the pre-sized pad slots must
-equal what the old concatenate path produced.
+equal what the old concatenate path produced. Shared harness:
+``tests/parity.py``.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ParamCfg
+from parity import (
+    HAVE_HYPOTHESIS,
+    N_CLIENTS,
+    assert_parity,
+    get_task,
+    given,
+    maxdiff,
+    run_server,
+    settings,
+    st,
+)
 from repro.data import (
     ChunkBatchSource,
     VirtualPartitions,
-    dirichlet_partition,
-    make_image_dataset,
     stack_client_epochs,
-    train_test_split,
 )
-from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
-from repro.nn import recurrent as rec
-
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # only the property test needs hypothesis
-    HAVE_HYPOTHESIS = False
-
-    def given(**kw):          # no-op decorators so the module still loads
-        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
-
-    settings = given
-
-    class st:  # noqa: N801
-        sampled_from = staticmethod(lambda *a: None)
-
-ATOL = 1e-4
-
-N_CLIENTS = 8
-
-
-_TASK = {}
-
-
-def _get_task():
-    if not _TASK:
-        ds = make_image_dataset(1200, 10, size=16, channels=1, noise=0.3)
-        data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
-        tr, te = train_test_split(data)
-        _TASK.update(tr=tr, te=te,
-                     parts=dirichlet_partition(tr["y"], N_CLIENTS, 0.5))
-    return _TASK
 
 
 @pytest.fixture(scope="module")
 def task():
-    return _get_task()
+    return get_task()
 
 
-def _make(kind):
-    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
-                        param=ParamCfg(kind=kind, gamma=0.3,
-                                       min_dim_for_factorization=8))
-    params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
-
-    def loss_fn(p, b):
-        return rec.mlp_loss(p, cfg, b)
-
-    return cfg, params, loss_fn
-
-
-def _run(task, engine, *, chunk=3, strategy="fedavg", personalization="none",
-         rounds=2, **server_kw):
-    kind = "pfedpara" if personalization == "pfedpara" else "fedpara"
-    cfg, params, loss_fn = _make(kind)
-    srv = FLServer(loss_fn, params, task["tr"], task["parts"],
-                   make_strategy(strategy),
-                   ClientConfig(lr=0.1, batch=16, epochs=1),
-                   ServerConfig(clients=N_CLIENTS, participation=0.5,
-                                rounds=rounds, engine=engine,
-                                client_chunk=chunk,
-                                personalization=personalization,
-                                **server_kw))
-    srv.run()
-    return srv
-
-
-def _maxdiff(a, b):
-    leaves = jax.tree.leaves(
-        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b))
-    return max(leaves) if leaves else 0.0
-
-
-def _assert_substrate_parity(ref, got):
-    """ref = dict-store engine, got = same engine on the arena."""
-    assert ([r.get("arrived_mask") for r in ref.history]
-            == [r.get("arrived_mask") for r in got.history])
-    assert _maxdiff(ref.global_params, got.global_params) < ATOL
-    assert _maxdiff(ref.server_state, got.server_state) < ATOL
-    for cid in ref.client_states:
-        assert _maxdiff(ref.client_states[cid],
-                        got.client_state_of(cid)) < ATOL, cid
-    for cid in ref.local_trees:
-        assert _maxdiff(ref.local_trees[cid], got.resident_of(cid)) < ATOL
-    for rr, rg in zip(ref.history, got.history):
-        assert abs(rr["mean_loss"] - rg["mean_loss"]) < 1e-4
-        assert abs(rr["comm_gb"] - rg["comm_gb"]) < 1e-12
+def _run(task, engine, *, chunk=3, **kw):
+    return run_server(task, engine, chunk=chunk, **kw)
 
 
 # ------------------------------------------------------------------ tentpole
@@ -124,11 +53,11 @@ def test_arena_roundtrip_property(engine, strategy, mode, codec):
     """Acceptance: gather → local-update → scatter equals the dict path
     for random strategy × personalization × codec draws, EF accumulators
     threaded through the stacked arena rows."""
-    task = _get_task()
+    task = get_task()
     kw = dict(strategy=strategy, personalization=mode, uplink_codec=codec)
     ref = _run(task, engine, **kw)
     got = _run(task, engine, state_store="arena", **kw)
-    _assert_substrate_parity(ref, got)
+    assert_parity(ref, got)
 
 
 @pytest.mark.parametrize("engine,strategy,mode,codec", [
@@ -143,7 +72,7 @@ def test_arena_roundtrip_matrix(task, engine, strategy, mode, codec):
     kw = dict(strategy=strategy, personalization=mode, uplink_codec=codec)
     ref = _run(task, engine, **kw)
     got = _run(task, engine, state_store="arena", **kw)
-    _assert_substrate_parity(ref, got)
+    assert_parity(ref, got)
 
 
 @pytest.mark.parametrize("engine", ["batched", "streaming"])
@@ -153,7 +82,7 @@ def test_arena_parity_ef_both_links(task, engine):
               downlink_codec="delta|topk0.1|int8", rounds=3)
     ref = _run(task, engine, **kw)
     got = _run(task, engine, state_store="arena", **kw)
-    _assert_substrate_parity(ref, got)
+    assert_parity(ref, got)
 
 
 def test_arena_parity_hetero_tiers(task):
@@ -162,7 +91,7 @@ def test_arena_parity_hetero_tiers(task):
     for engine in ("batched", "streaming"):
         ref = _run(task, engine, **kw)
         got = _run(task, engine, state_store="arena", **kw)
-        _assert_substrate_parity(ref, got)
+        assert_parity(ref, got)
 
 
 def test_arena_participation_counters(task):
@@ -200,7 +129,7 @@ def test_chunked_data_stream_bitwise(task):
         got = _run(task, "streaming", rounds=3, **kw)
         assert ([r.get("arrived_mask") for r in ref.history]
                 == [r.get("arrived_mask") for r in got.history])
-        assert _maxdiff(ref.global_params, got.global_params) == 0.0
+        assert maxdiff(ref.global_params, got.global_params) == 0.0
 
 
 def test_chunk_batch_source_matches_eager_stack(task):

@@ -1,0 +1,375 @@
+"""Async buffered federation (FedBuff-style): parity, properties, resume.
+
+The async engine (``repro.fl.async_engine`` + ``engine="async"``) is
+the event-driven fourth engine; its contracts against the sync family:
+
+  * **staleness -> 0 parity** — with instant arrivals and ``buffer_k``
+    = the participation target, one dispatch fills exactly one buffer
+    at ``tau = 0`` where every staleness spec weighs 1.0, so the async
+    fold must reproduce the STREAMING engine bitwise in the arrival
+    masks / wire bytes and to fp32 accumulation-order tolerance in
+    params — across strategies, codecs (incl. error feedback), rank
+    tiers, personalization, defenses and both state stores.
+  * **fold order-invariance** — the buffered accumulator is a weighted
+    sum: folding the same arrivals in any order changes nothing but
+    fp32 reassociation (hypothesis property over permutations).
+  * **version-pinned refs** — a delta-codec upload re-attaches the
+    broadcast its client trained against; with a single live dispatch
+    the re-attach coefficient is EXACTLY 1.0 (same host-float sums in
+    numerator and denominator), reproducing ``Codec.agg_finalize``
+    bitwise.
+  * **bitwise crash/resume mid-buffer** — killing the server with
+    uploads still in flight and restoring from the checkpoint replays
+    the uninterrupted run bit-for-bit (heap, wires, refs, clock).
+  * **trace re-keying** — ``FleetTrace.arrival_stream`` replays from
+    ``(seed, round, salt)`` alone, independent of prior draws.
+
+Shared harness: ``tests/parity.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from parity import (
+    assert_parity,
+    get_task,
+    given,
+    hist_key,
+    maxdiff,
+    run_server,
+    settings,
+    st,
+    state_bytes,
+)
+from repro.analysis.program_check import make_mini_server
+from repro.checkpoint import CheckpointManager
+from repro.fl import ClientConfig, make_strategy
+from repro.fl.arrivals import (
+    arrival_events,
+    arrival_mask,
+    arrival_order,
+    fold_crashes,
+)
+from repro.fl.async_engine import (
+    AsyncDispatch,
+    finalize_buffer,
+    fold_arrival,
+    make_staleness,
+)
+from repro.fl.codecs import Codec, make_codec
+from repro.fl.trace import FleetTrace
+
+EF_CODEC = "delta|topk0.5|int8"
+
+
+@pytest.fixture(scope="module")
+def task():
+    return get_task()
+
+
+# ----------------------------------------------------- staleness -> 0 parity
+PARITY_CELLS = [
+    pytest.param(dict(), id="fedavg"),
+    pytest.param(dict(strategy="scaffold"), id="scaffold"),
+    pytest.param(dict(strategy="feddyn"), id="feddyn"),
+    pytest.param(dict(uplink_codec="delta|topk0.1|int8",
+                      downlink_codec="delta|topk0.1|int8", rounds=3),
+                 id="ef-both-links"),
+    pytest.param(dict(gamma_tiers=(0.2, 0.4)), id="hetero-tiers"),
+    pytest.param(dict(state_store="arena",
+                      uplink_codec="delta|topk0.2|int8"), id="arena-delta"),
+    pytest.param(dict(personalization="pfedpara"), id="pfedpara"),
+    pytest.param(dict(defense="clip"), id="clip-defense"),
+    pytest.param(dict(uplink_codec="delta|lowrank2|int8"), id="lowrank"),
+]
+
+
+@pytest.mark.parametrize("kw", PARITY_CELLS)
+def test_staleness_zero_parity(task, kw):
+    """Acceptance: the async engine with instant arrivals reproduces the
+    streaming engine — bitwise arrival masks and wire bytes, fp32-tol
+    params — for every cell of the strategy × codec × tier × store ×
+    personalization matrix. ``buffer_k=0`` defaults K to the sync
+    participation target; the default (deadline-free) config admits the
+    whole cohort so one dispatch fills exactly one buffer at tau=0."""
+    kw = dict(kw)
+    mode = kw.get("personalization", "none")
+    ref = run_server(task, "streaming", chunk=3, **kw)
+    got = run_server(task, "async", chunk=3, **kw)
+    assert_parity(ref, got, check_residents=(mode != "none"))
+    for r in got.history:
+        assert r["version"] + 1 == r["round"]
+        assert r["dispatches"] == 1 and r["in_flight"] == 0
+        assert set(r["staleness_hist"]) == {"0"}   # nothing ever stale
+
+
+@pytest.mark.parametrize("spec", ["constant", "poly:0.5", "hinge:4"])
+def test_staleness_zero_parity_any_spec(task, spec):
+    """Every staleness family weighs tau=0 arrivals at exactly 1.0, so
+    the parity contract is spec-independent."""
+    ref = run_server(task, "streaming", chunk=3)
+    got = run_server(task, "async", chunk=3, staleness=spec)
+    assert_parity(ref, got)
+
+
+# ------------------------------------------------------ fold order-invariance
+_K = 6
+
+
+def _toy_wires(seed):
+    """A dispatch wire stack with both leaf kinds the fused fold
+    handles: an int8 {"q","scale"} node and a dense fp32 leaf."""
+    rng = np.random.default_rng(seed)
+    wires = {
+        "w": {"q": jnp.asarray(
+                  rng.integers(-127, 128, size=(_K, 8, 6)), jnp.int8),
+              "scale": jnp.asarray(
+                  rng.uniform(0.01, 0.1, size=(_K,)), jnp.float32)},
+        "b": jnp.asarray(rng.normal(size=(_K, 6)), jnp.float32),
+    }
+    weights = rng.uniform(0.5, 2.0, size=_K)
+    return wires, weights
+
+
+def _fold_in_order(wires, weights, order):
+    acc = {"w": jnp.zeros((8, 6), jnp.float32),
+           "b": jnp.zeros((6,), jnp.float32)}
+    for p in order:
+        acc = fold_arrival(acc, wires, int(p), float(weights[p]))
+    return acc
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), perm_seed=st.integers(0, 1000))
+def test_fold_order_invariance(seed, perm_seed):
+    """Property: folding one buffer's arrivals in ANY order gives the
+    same accumulator up to fp32 reassociation — and matches the dense
+    numpy reference sum(w_c * dequant(wire_c))."""
+    wires, weights = _toy_wires(seed)
+    order = np.random.default_rng(perm_seed).permutation(_K)
+    fwd = _fold_in_order(wires, weights, range(_K))
+    perm = _fold_in_order(wires, weights, order)
+    assert maxdiff(fwd, perm) < 1e-5
+    q = np.asarray(wires["w"]["q"], np.float64)
+    s = np.asarray(wires["w"]["scale"], np.float64)
+    ref_w = np.einsum("c,ckl->kl", weights * s, q)
+    ref_b = np.einsum("c,ck->k", weights, np.asarray(wires["b"], np.float64))
+    np.testing.assert_allclose(np.asarray(fwd["w"]), ref_w, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fwd["b"]), ref_b, atol=1e-4)
+
+
+# ------------------------------------------------------- version-pinned refs
+def test_agg_finalize_pinned_matches_manual():
+    mean = {"a": jnp.full((3,), 2.0, jnp.float32)}
+    refs = {0: {"a": jnp.arange(3, dtype=jnp.float32)},
+            2: {"a": jnp.full((3,), -1.0, jnp.float32)}}
+    # dispatch 1 has zero coefficient and NO ref entry: must be skipped
+    out = Codec.agg_finalize_pinned(mean, refs, {0: 0.25, 1: 0.0, 2: 0.5})
+    want = 2.0 + 0.25 * np.arange(3) + 0.5 * (-1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]), want, rtol=1e-6)
+
+
+def test_single_dispatch_ref_coefficient_is_bitwise():
+    """With one live dispatch the pinned re-attach coefficient is built
+    from the SAME host-float sum as the mean's denominator, so it is
+    exactly 1.0 and ``finalize_buffer`` equals ``Codec.agg_finalize``
+    bit-for-bit — the mechanism behind the staleness->0 parity."""
+    rng = np.random.default_rng(0)
+    codec = make_codec("delta|int8")
+    acc = {"a": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    ref = {"a": jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)}
+    w = 0.1 + 3.6  # a non-trivial host-float accumulation
+    out = finalize_buffer([acc], [w], [{7: w}], {7: ref}, codec=codec,
+                          agg_target={"a": jnp.zeros((4, 5), jnp.float32)})
+    mean = jax.tree.map(lambda a: a / jnp.float32(w), acc)
+    want = codec.agg_finalize(mean, ref=ref)
+    assert np.asarray(out["a"]).tobytes() == np.asarray(want["a"]).tobytes()
+
+
+def test_finalize_empty_buffer_keeps_target():
+    """Zero accepted weight (fully-rejected buffer) must return the
+    aggregation target unchanged, never a zeroed model."""
+    tgt = {"a": jnp.asarray([[1.5, -2.0]], jnp.float32)}
+    acc = {"a": jnp.zeros((1, 2), jnp.float32)}
+    out = finalize_buffer([acc], [0.0], [{}], {}, codec=make_codec(""),
+                          agg_target=tgt)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tgt["a"]))
+
+
+# -------------------------------------------------------- staleness weights
+def test_make_staleness_specs():
+    assert make_staleness("constant")(0) == 1.0
+    assert make_staleness("constant")(9) == 1.0
+    assert make_staleness("poly:1.0")(3) == pytest.approx(0.25)
+    assert make_staleness("poly")(0) == 1.0          # default a = 0.5
+    assert make_staleness("poly")(3) == pytest.approx(0.5)
+    hinge = make_staleness("hinge")                  # default b = 4
+    assert hinge(0) == 1.0 and hinge(4) == 1.0
+    assert hinge(6) == pytest.approx(1.0 / 3.0)
+    # tau = 0 weighs exactly 1.0 under EVERY family (the parity anchor)
+    for spec in ("constant", "poly:0.3", "poly:2", "hinge:1", "hinge:8"):
+        assert make_staleness(spec)(0) == 1.0
+    with pytest.raises(ValueError, match="staleness"):
+        make_staleness("warp")
+
+
+# --------------------------------------------------- configuration rejection
+def test_async_config_rejections():
+    with pytest.raises(ValueError, match="defense"):
+        make_mini_server("async", defense="trimmed")
+    with pytest.raises(ValueError, match="staleness_mix"):
+        make_mini_server("async", staleness_mix=0.5)
+    with pytest.raises(ValueError, match="recover_retries"):
+        make_mini_server("async", recover_retries=1)
+    with pytest.raises(ValueError, match="buffer_k"):
+        make_mini_server("async", buffer_k=-1)
+    with pytest.raises(ValueError, match="staleness"):
+        make_mini_server("async", staleness="warp")
+
+
+def test_async_dispatch_rejects_order_statistic_defense():
+    with pytest.raises(ValueError, match="clip"):
+        AsyncDispatch(loss_fn=lambda p, b: 0.0,
+                      strategy=make_strategy("fedavg"),
+                      client_cfg=ClientConfig(), defense="trimmed")
+
+
+# ----------------------------------------- genuinely-async history accounting
+_ASYNC_KW = dict(participation=1.0, uplink_codec=EF_CODEC, buffer_k=2,
+                 straggler_sigma=1.0, staleness="poly:0.5")
+
+
+def test_async_history_accounting():
+    """The per-version history row's shape algebra: every popped arrival
+    lands in the staleness histogram as either a fold or a stale drop,
+    wire bytes reconcile with the comm log, and the virtual clock is the
+    running sum of the per-version latencies."""
+    srv = make_mini_server("async", "dict", **_ASYNC_KW)
+    hist = srv.run(rounds=4)
+    hist = [r for r in hist if not r.get("skipped")]
+    assert hist
+    for r in hist:
+        assert sum(r["staleness_hist"].values()) == (
+            r["folded"] + r["dropped_stale"])
+        assert all(isinstance(k, str) and int(k) >= 0
+                   for k in r["staleness_hist"])
+        assert r["folded"] >= 1
+        assert r["round_latency"] >= 0.0
+    assert [r["version"] for r in hist] == list(range(len(hist)))
+    vt = [r["virtual_time"] for r in hist]
+    assert vt == sorted(vt)
+    assert vt[-1] == pytest.approx(sum(r["round_latency"] for r in hist))
+    # per-version wire bytes reconcile with the cumulative comm log
+    assert sum(r["up_bytes"] for r in hist) == srv.comm_log.up_bytes
+    assert sum(r["down_bytes"] for r in hist) == srv.comm_log.down_bytes
+    # buffer_k < cohort: some uploads straddle a version bump
+    assert any(int(k) > 0 for r in hist for k in r["staleness_hist"])
+    versions = srv.client_versions()
+    assert versions.shape == (srv.scfg.clients,)
+    assert versions.max() >= 0 and versions.max() < srv.round_idx
+    assert np.isfinite(np.concatenate(
+        [np.asarray(x, np.float64).ravel()
+         for x in jax.tree.leaves(srv.global_params)])).all()
+
+
+def test_max_staleness_drops_arrivals():
+    srv = make_mini_server("async", "dict", max_staleness=0, **_ASYNC_KW)
+    hist = [r for r in srv.run(rounds=4) if not r.get("skipped")]
+    assert sum(r["dropped_stale"] for r in hist) > 0
+    # dropped arrivals still pay uplink bytes but never fold
+    for r in hist:
+        assert sum(r["staleness_hist"].values()) == (
+            r["folded"] + r["dropped_stale"])
+    assert np.isfinite(np.concatenate(
+        [np.asarray(x, np.float64).ravel()
+         for x in jax.tree.leaves(srv.global_params)])).all()
+
+
+# ------------------------------------------------ bitwise crash/resume
+@pytest.mark.parametrize("store", ["dict", "arena"])
+def test_async_resume_is_bitwise_mid_buffer(tmp_path, store):
+    """Kill the async server at a version boundary with uploads still in
+    flight (pending heap, pinned wires/refs, fractional clock) and
+    resume: the continuation must be bitwise — state, history, comm
+    totals and the per-client version pins."""
+    kw = dict(participation=0.75, uplink_codec=EF_CODEC, strategy="fedavg",
+              defense="clip", fault_rate=0.3, buffer_k=4,
+              straggler_sigma=1.0, staleness="poly:0.5")
+    srv_a = make_mini_server("async", store, **kw)
+    hist_a = srv_a.run(rounds=5)
+
+    d = str(tmp_path / "ck")
+    srv_b = make_mini_server("async", store, **kw)
+    srv_b.run(rounds=3, ckpt=CheckpointManager(d))
+    assert srv_b._async.pending   # mid-buffer: uploads in flight at save
+    del srv_b
+
+    srv_c = make_mini_server("async", store, **kw)
+    assert srv_c.restore_checkpoint(CheckpointManager(d)) == 3
+    hist_c = srv_c.run(rounds=5, ckpt=CheckpointManager(d))
+
+    assert hist_key(hist_a) == hist_key(hist_c)
+    assert state_bytes(srv_a) == state_bytes(srv_c)
+    np.testing.assert_array_equal(srv_a.client_versions(),
+                                  srv_c.client_versions())
+    assert srv_a.comm_log.up_bytes == srv_c.comm_log.up_bytes
+    assert srv_a.comm_log.down_bytes == srv_c.comm_log.down_bytes
+    assert srv_a.round_idx == srv_c.round_idx
+
+
+# ------------------------------------------------------- arrival machinery
+def test_arrival_helpers_consistency():
+    lat = np.array([3.0, 1.0, 2.0, 1.0, 5.0])
+    ok = np.ones(5, bool)
+    order = arrival_order(lat)
+    np.testing.assert_array_equal(order, [1, 3, 2, 0, 4])  # stable tie 1<3
+    mask = arrival_mask(ok, lat, 3)
+    np.testing.assert_array_equal(mask, [False, True, True, True, False])
+    # the first n_target events ARE the arrival_mask clients
+    events = arrival_events(ok, lat, t0=10.0)
+    assert [p for _, p in events] == list(order)
+    assert [t for t, _ in events] == [10.0 + lat[p] for p in order]
+    assert set(p for _, p in events[:3]) == set(np.where(mask)[0])
+    # masked-out clients never produce events
+    some = arrival_events(mask, lat)
+    assert [p for _, p in some] == [1, 3, 2]
+    # crash folding: a crashed client never arrives; None is a no-op
+    crash = np.array([False, True, False, False, False])
+    eff = fold_crashes(mask, crash)
+    np.testing.assert_array_equal(eff, [False, False, True, True, False])
+    assert fold_crashes(mask, None) is mask
+
+
+def test_trace_arrival_stream_rekeying():
+    """``arrival_stream`` replays from (seed, round, salt) alone: a
+    fresh trace that made unrelated draws first produces the identical
+    cohort AND event stream — the crash/resume determinism contract —
+    and it decomposes into exactly the ``_select_round`` draw order
+    (sample -> latency -> availability)."""
+    def mk():
+        return FleetTrace(clients=64, seed=9, dropout=0.2,
+                          diurnal_amplitude=0.3)
+    t1 = mk()
+    cohort_a, ev_a = t1.arrival_stream(5, 12, 3000.0, 1.0, 10.0, t0=2.5)
+    t2 = mk()
+    t2.round_rng(0).random(1000)   # unrelated draws must not matter
+    _ = t2.arrival_stream(4, 12, 3000.0, 1.0, 10.0)
+    cohort_b, ev_b = t2.arrival_stream(5, 12, 3000.0, 1.0, 10.0, t0=2.5)
+    np.testing.assert_array_equal(cohort_a, cohort_b)
+    assert ev_a == ev_b
+    # stream shape: sorted times, distinct valid positions, offset by t0
+    times = [t for t, _ in ev_a]
+    assert times == sorted(times) and all(t >= 2.5 for t in times)
+    pos = [p for _, p in ev_a]
+    assert len(set(pos)) == len(pos) and all(0 <= p < 12 for p in pos)
+    # draw-order contract: identical to _select_round's trace path
+    rng = mk().round_rng(5)
+    cohort_m = mk().sample_cohort(rng, 12)
+    lat = mk().latency(rng, 3000.0, 12, 1.0, 10.0)
+    alive = rng.random(12) < mk().availability(cohort_m, 5)
+    np.testing.assert_array_equal(cohort_a, cohort_m)
+    assert ev_a == arrival_events(alive, lat, t0=2.5)
+    # a salt opens a genuinely different stream at the same round
+    _, ev_s = mk().arrival_stream(5, 12, 3000.0, 1.0, 10.0, t0=2.5, salt=1)
+    assert ev_s != ev_a

@@ -4,20 +4,24 @@ The client-batched engine (`repro.fl.batch_engine`) must reproduce the
 sequential reference: bitwise-identical aggregation masks (both derive
 them from the same host RNG draws) and fp32-tolerance-identical global
 params / client residents, for every strategy and personalization mode,
-including straggler/dropout masking and quantized uplinks.
+including straggler/dropout masking and quantized uplinks. Shared
+harness: ``tests/parity.py``.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import ParamCfg
-from repro.data import (
-    dirichlet_partition,
-    iid_partition,
-    make_image_dataset,
-    train_test_split,
+from parity import (
+    N_CLIENTS,
+    assert_parity,
+    get_task,
+    make_model,
+    maxdiff,
+    run_server,
 )
+from repro.configs.base import ParamCfg
+from repro.data import dirichlet_partition, iid_partition
 from repro.data.loader import client_epochs, stack_client_epochs
 from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
 from repro.nn import recurrent as rec
@@ -27,91 +31,38 @@ ATOL = 5e-5  # fp32 accumulation-order tolerance
 
 @pytest.fixture(scope="module")
 def task():
-    ds = make_image_dataset(1200, 10, size=16, channels=1, noise=0.3)
-    data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
-    tr, te = train_test_split(data)
-    return dict(tr=tr, te=te)
+    return get_task()
 
 
-def _make(task, kind):
-    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
-                        param=ParamCfg(kind=kind, gamma=0.3,
-                                       min_dim_for_factorization=8))
-    params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
-
-    def loss_fn(p, b):
-        return rec.mlp_loss(p, cfg, b)
-
-    return cfg, params, loss_fn
-
-
-def _run_pair(task, *, strategy="fedavg", personalization="none",
-              rounds=1, **server_kw):
-    kind = "pfedpara" if personalization == "pfedpara" else "fedpara"
-    cfg, params, loss_fn = _make(task, kind)
-    parts = dirichlet_partition(task["tr"]["y"], 8, 0.5)
-    servers = []
-    for engine in ("sequential", "batched"):
-        srv = FLServer(loss_fn, params, task["tr"], parts,
-                       make_strategy(strategy),
-                       ClientConfig(lr=0.1, batch=16, epochs=1),
-                       ServerConfig(clients=8, participation=0.5,
-                                    rounds=rounds, engine=engine,
-                                    personalization=personalization,
-                                    **server_kw))
-        srv.run()
-        servers.append(srv)
-    return servers
-
-
-def _maxdiff(a, b):
-    leaves = jax.tree.leaves(
-        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b))
-    return max(leaves) if leaves else 0.0
-
-
-def _assert_parity(seq, bat, check_residents=False):
-    # bitwise-consistent aggregation masks
-    assert ([r.get("arrived_mask") for r in seq.history]
-            == [r.get("arrived_mask") for r in bat.history])
-    assert _maxdiff(seq.global_params, bat.global_params) < ATOL
-    assert _maxdiff(seq.server_state, bat.server_state) < ATOL
-    for cid in seq.client_states:
-        assert _maxdiff(seq.client_states[cid],
-                        bat.client_states.get(cid, {})) < ATOL
-    if check_residents:
-        assert set(seq.local_trees) == set(bat.local_trees)
-        for cid in seq.local_trees:
-            assert _maxdiff(seq.local_trees[cid], bat.local_trees[cid]) < ATOL
-    for rs, rb in zip(seq.history, bat.history):
-        assert abs(rs["mean_loss"] - rb["mean_loss"]) < 1e-4
-        assert abs(rs["comm_gb"] - rb["comm_gb"]) < 1e-12
+def _run_pair(task, *, rounds=1, **kw):
+    return [run_server(task, engine, rounds=rounds, **kw)
+            for engine in ("sequential", "batched")]
 
 
 @pytest.mark.parametrize("strategy", ["fedavg", "fedprox", "scaffold",
                                       "feddyn"])
 def test_strategy_parity(task, strategy):
     seq, bat = _run_pair(task, strategy=strategy)
-    _assert_parity(seq, bat)
+    assert_parity(seq, bat, atol=ATOL)
 
 
 @pytest.mark.parametrize("mode", ["none", "pfedpara", "fedper"])
 def test_personalization_parity(task, mode):
     seq, bat = _run_pair(task, personalization=mode, rounds=2)
-    _assert_parity(seq, bat, check_residents=(mode != "none"))
+    assert_parity(seq, bat, check_residents=(mode != "none"), atol=ATOL)
 
 
 def test_straggler_masking_parity(task):
     seq, bat = _run_pair(task, rounds=3, oversample=0.5,
                          deadline_quantile=0.5, dropout_prob=0.3, seed=3)
-    _assert_parity(seq, bat)
+    assert_parity(seq, bat, atol=ATOL)
     masks = [r["arrived_mask"] for r in bat.history]
     assert any(0 in m for m in masks)  # masking actually exercised
 
 
 def test_quantized_uplink_parity(task):
     seq, bat = _run_pair(task, uplink_quant="int8")
-    _assert_parity(seq, bat)
+    assert_parity(seq, bat, atol=ATOL)
 
 
 def test_full_codec_stack_parity(task):
@@ -121,7 +72,7 @@ def test_full_codec_stack_parity(task):
     seq, bat = _run_pair(task, rounds=3,
                          uplink_codec="delta|topk0.1|int8",
                          downlink_codec="delta|topk0.1|int8")
-    _assert_parity(seq, bat)
+    assert_parity(seq, bat, atol=ATOL)
     # error feedback is live: accumulators exist and are non-zero
     efs = [st["_ef_up"] for st in seq.client_states.values()]
     assert efs and any(float(jnp.abs(l).max()) > 0
@@ -132,23 +83,19 @@ def test_codec_parity_with_personalization(task):
     seq, bat = _run_pair(task, rounds=2, personalization="pfedpara",
                          uplink_codec="delta|topk0.2|int8",
                          downlink_codec="fp16")
-    _assert_parity(seq, bat, check_residents=True)
+    assert_parity(seq, bat, check_residents=True, atol=ATOL)
 
 
 def test_batched_engine_learns(task):
-    cfg, params, loss_fn = _make(task, "fedpara")
-    parts = dirichlet_partition(task["tr"]["y"], 8, 0.5)
+    cfg, _, _ = make_model("fedpara")
     te = task["te"]
 
     def eval_fn(p):
         return float(rec.mlp_accuracy(p, cfg, {"x": te["x"][:300],
                                                "y": te["y"][:300]}))
 
-    srv = FLServer(loss_fn, params, task["tr"], parts, make_strategy("fedavg"),
-                   ClientConfig(lr=0.1, batch=16, epochs=2),
-                   ServerConfig(clients=8, participation=0.5, rounds=4,
-                                engine="batched"), eval_fn=eval_fn)
-    hist = srv.run()
+    srv = run_server(task, "batched", rounds=4, epochs=2, eval_fn=eval_fn)
+    hist = srv.history
     assert hist[-1]["eval"] > hist[0]["eval"]
     assert hist[-1]["eval"] > 0.3
 
@@ -170,17 +117,16 @@ def test_stack_client_epochs_matches_generator(task):
 
 def test_batched_personalized_eval_matches_sequential(task):
     from repro.fl.batch_engine import batched_personalized_eval
-    from repro.fl.strategies import tree_stack
 
     seq, bat = _run_pair(task, personalization="fedper", rounds=2)
-    cfg, _, _ = _make(task, "fedpara")
+    cfg, _, _ = make_model("fedpara")
     tr = task["tr"]
-    parts = iid_partition(len(tr["y"]), 8, 0)
+    parts = iid_partition(len(tr["y"]), N_CLIENTS, 0)
 
     def metric(p, batch):
         return rec.mlp_accuracy(p, cfg, batch)
 
-    eval_data = {k: np.stack([v[parts[c][:40]] for c in range(8)])
+    eval_data = {k: np.stack([v[parts[c][:40]] for c in range(N_CLIENTS)])
                  for k, v in tr.items()}
 
     def batch_eval(stacked, cids):
@@ -234,8 +180,8 @@ def test_use_pallas_parity_both_engines(task):
             results[(engine, pallas)] = srv.global_params
     # fused-vs-materialize: fp32 tile-accumulation-order tolerance
     for engine in ("sequential", "batched"):
-        assert _maxdiff(results[(engine, False)],
-                        results[(engine, True)]) < 2e-3, engine
+        assert maxdiff(results[(engine, False)],
+                       results[(engine, True)]) < 2e-3, engine
     # engine-vs-engine on the fused path: the usual parity contract
-    assert _maxdiff(results[("sequential", True)],
-                    results[("batched", True)]) < 2e-3
+    assert maxdiff(results[("sequential", True)],
+                   results[("batched", True)]) < 2e-3

@@ -17,31 +17,12 @@ import jax
 import numpy as np
 import pytest
 
+from parity import hist_key as _hist_key
+from parity import state_bytes as _state_bytes
 from repro.analysis.program_check import make_mini_server
 from repro.checkpoint import CheckpointManager
 
 EF_CODEC = "delta|topk0.5|int8"
-
-
-def _state_bytes(srv):
-    """Every aggregate-relevant array, as one bytes blob (bitwise)."""
-    trees = [srv.global_params, srv.server_state]
-    for cid in sorted(srv.client_states):
-        trees.append(srv.client_states[cid])
-    for cid in sorted(srv.local_trees):
-        trees.append(srv.local_trees[cid])
-    if srv.arena is not None:
-        trees += [srv.arena.state, srv.arena.participation]
-        if srv.arena.residents is not None:
-            trees.append(srv.arena.residents)
-    return b"".join(np.asarray(x).tobytes()
-                    for t in trees for x in jax.tree.leaves(t))
-
-
-def _hist_key(hist):
-    return [(r["round"], r["mean_loss"], r.get("down_bytes"),
-             r.get("up_bytes"), tuple(r.get("arrived_mask", ())),
-             r.get("rejected"), r.get("retries")) for r in hist]
 
 
 MATRIX = [

@@ -6,120 +6,47 @@ masks — both derive them from the same host RNG draws) to fp32
 accumulation-order tolerance, for every personalization mode and for
 non-identity uplink codecs with error feedback threaded across chunks.
 Aggregation must be invariant to the chunk size: chunking only
-reassociates the fp32 weighted sum.
+reassociates the fp32 weighted sum. Shared harness: ``tests/parity.py``.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs.base import ParamCfg
-from repro.data import dirichlet_partition, make_image_dataset, train_test_split
+from parity import (
+    N_CLIENTS,
+    assert_parity,
+    get_task,
+    given,
+    make_model,
+    run_server,
+    settings,
+    st,
+)
 from repro.fl import ClientConfig, FLServer, ServerConfig, make_strategy
 from repro.nn import recurrent as rec
-
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ImportError:  # only the property test needs hypothesis
-    HAVE_HYPOTHESIS = False
-
-    def given(**kw):          # no-op decorators so the module still loads
-        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
-
-    settings = given
-
-    class st:  # noqa: N801
-        sampled_from = staticmethod(lambda *a: None)
-
-ATOL = 1e-4  # fp32 accumulation-order tolerance (unnormalized running
-             # sums peak higher than the batched engine's normalized mean)
-
-N_CLIENTS = 8
-
-
-_TASK = {}
-
-
-def _get_task():
-    if not _TASK:
-        ds = make_image_dataset(1200, 10, size=16, channels=1, noise=0.3)
-        data = {"x": ds["x"].reshape(len(ds["y"]), -1), "y": ds["y"]}
-        tr, te = train_test_split(data)
-        _TASK.update(tr=tr, te=te,
-                     parts=dirichlet_partition(tr["y"], N_CLIENTS, 0.5))
-    return _TASK
 
 
 @pytest.fixture(scope="module")
 def task():
-    return _get_task()
+    return get_task()
 
 
-def _make(kind):
-    cfg = rec.MLPConfig(in_dim=256, hidden=64, classes=10,
-                        param=ParamCfg(kind=kind, gamma=0.3,
-                                       min_dim_for_factorization=8))
-    params = rec.init_mlp_model(jax.random.PRNGKey(0), cfg)
-
-    def loss_fn(p, b):
-        return rec.mlp_loss(p, cfg, b)
-
-    return cfg, params, loss_fn
-
-
-def _run(task, engine, *, chunk=3, strategy="fedavg", personalization="none",
-         rounds=2, **server_kw):
-    kind = "pfedpara" if personalization == "pfedpara" else "fedpara"
-    cfg, params, loss_fn = _make(kind)
-    srv = FLServer(loss_fn, params, task["tr"], task["parts"],
-                   make_strategy(strategy),
-                   ClientConfig(lr=0.1, batch=16, epochs=1),
-                   ServerConfig(clients=N_CLIENTS, participation=0.5,
-                                rounds=rounds, engine=engine,
-                                client_chunk=chunk,
-                                personalization=personalization,
-                                **server_kw))
-    srv.run()
-    return srv
-
-
-def _maxdiff(a, b):
-    leaves = jax.tree.leaves(
-        jax.tree.map(lambda x, y: float(jnp.abs(x - y).max()), a, b))
-    return max(leaves) if leaves else 0.0
-
-
-def _assert_parity(ref, got, check_residents=False, atol=ATOL):
-    assert ([r.get("arrived_mask") for r in ref.history]
-            == [r.get("arrived_mask") for r in got.history])
-    assert _maxdiff(ref.global_params, got.global_params) < atol
-    assert _maxdiff(ref.server_state, got.server_state) < atol
-    assert set(ref.client_states) == set(got.client_states)
-    for cid in ref.client_states:
-        assert _maxdiff(ref.client_states[cid],
-                        got.client_states.get(cid, {})) < atol
-    if check_residents:
-        assert set(ref.local_trees) == set(got.local_trees)
-        for cid in ref.local_trees:
-            assert _maxdiff(ref.local_trees[cid], got.local_trees[cid]) < atol
-    for rr, rg in zip(ref.history, got.history):
-        assert abs(rr["mean_loss"] - rg["mean_loss"]) < 1e-4
-        assert abs(rr["comm_gb"] - rg["comm_gb"]) < 1e-12
+def _run(task, engine, *, chunk=3, **kw):
+    return run_server(task, engine, chunk=chunk, **kw)
 
 
 @pytest.mark.parametrize("strategy", ["fedavg", "scaffold", "feddyn"])
 def test_strategy_parity(task, strategy):
     bat = _run(task, "batched", strategy=strategy)
     stream = _run(task, "streaming", strategy=strategy)
-    _assert_parity(bat, stream)
+    assert_parity(bat, stream)
 
 
 @pytest.mark.parametrize("mode", ["none", "pfedpara", "fedper", "local"])
 def test_personalization_parity(task, mode):
     bat = _run(task, "batched", personalization=mode)
     stream = _run(task, "streaming", personalization=mode)
-    _assert_parity(bat, stream, check_residents=(mode != "none"))
+    assert_parity(bat, stream, check_residents=(mode != "none"))
 
 
 def test_codec_with_error_feedback_parity(task):
@@ -130,7 +57,7 @@ def test_codec_with_error_feedback_parity(task):
               downlink_codec="delta|topk0.1|int8", rounds=3)
     bat = _run(task, "batched", **kw)
     stream = _run(task, "streaming", **kw)
-    _assert_parity(bat, stream)
+    assert_parity(bat, stream)
     efs = [s["_ef_up"] for s in stream.client_states.values()]
     assert efs and any(float(jnp.abs(l).max()) > 0
                        for e in efs for l in jax.tree.leaves(e))
@@ -141,7 +68,7 @@ def test_lowrank_codec_parity(task):
     inside the chunk — still never a (C, model) stack."""
     bat = _run(task, "batched", uplink_codec="delta|lowrank2|int8")
     stream = _run(task, "streaming", uplink_codec="delta|lowrank2|int8")
-    _assert_parity(bat, stream)
+    assert_parity(bat, stream)
 
 
 def test_straggler_masking_parity(task):
@@ -154,7 +81,7 @@ def test_straggler_masking_parity(task):
               dropout_prob=0.3, seed=3)
     bat = _run(task, "batched", **kw)
     stream = _run(task, "streaming", **kw)
-    _assert_parity(bat, stream, atol=1e-3)
+    assert_parity(bat, stream, atol=1e-3)
     assert any(0 in r["arrived_mask"] for r in stream.history)
 
 
@@ -165,7 +92,7 @@ def test_chunk_sizes_match_batched(task, chunk):
     kw = dict(uplink_codec="delta|topk0.2|int8", rounds=2)
     bat = _run(task, "batched", **kw)
     stream = _run(task, "streaming", chunk=chunk, **kw)
-    _assert_parity(bat, stream)
+    assert_parity(bat, stream)
 
 
 _INVARIANCE_REF = {}
@@ -180,37 +107,33 @@ def test_chunk_size_invariance(chunk, codec):
     client states and EF accumulators to fp32 tolerance (chunking only
     reassociates the weighted sum). The chunk=2 run doubles as the
     batched-engine cross-check baseline."""
-    task = _get_task()
+    task = get_task()
     if codec not in _INVARIANCE_REF:
         bat = _run(task, "batched", uplink_codec=codec)
-        _assert_parity(bat, _run(task, "streaming", chunk=2,
-                                 uplink_codec=codec))
+        assert_parity(bat, _run(task, "streaming", chunk=2,
+                                uplink_codec=codec))
         _INVARIANCE_REF[codec] = bat
     got = _run(task, "streaming", chunk=chunk, uplink_codec=codec)
-    _assert_parity(_INVARIANCE_REF[codec], got)
+    assert_parity(_INVARIANCE_REF[codec], got)
 
 
 def test_streaming_engine_learns(task):
-    cfg, params, loss_fn = _make("fedpara")
+    cfg, _, _ = make_model("fedpara")
     te = task["te"]
 
     def eval_fn(p):
         return float(rec.mlp_accuracy(p, cfg, {"x": te["x"][:300],
                                                "y": te["y"][:300]}))
 
-    srv = FLServer(loss_fn, params, task["tr"], task["parts"],
-                   make_strategy("fedavg"),
-                   ClientConfig(lr=0.1, batch=16, epochs=2),
-                   ServerConfig(clients=N_CLIENTS, participation=0.5,
-                                rounds=4, engine="streaming",
-                                client_chunk=2), eval_fn=eval_fn)
-    hist = srv.run()
+    srv = run_server(task, "streaming", chunk=2, rounds=4, epochs=2,
+                     eval_fn=eval_fn)
+    hist = srv.history
     assert hist[-1]["eval"] > hist[0]["eval"]
     assert hist[-1]["chunks"] == 2 and hist[-1]["client_chunk"] == 2
 
 
 def test_unknown_engine_rejected(task):
-    cfg, params, loss_fn = _make("fedpara")
+    cfg, params, loss_fn = make_model("fedpara")
     with pytest.raises(ValueError, match="unknown engine"):
         FLServer(loss_fn, params, task["tr"], task["parts"],
                  make_strategy("fedavg"), ClientConfig(),
